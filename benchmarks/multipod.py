@@ -1,0 +1,76 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod delta analysis: what the second pod costs, and what int8
+cross-pod gradient compression buys back.
+
+For a train cell, lower the step on the single-pod (16,16) and multi-pod
+(2,16,16) meshes and diff the collective inventories; then re-lower the
+multi-pod step with `grad_compression="int8"` and measure the cross-pod
+traffic reduction. The pod axis is pure DP, so the delta is exactly the
+gradient synchronization — the slow-DCN traffic the compression targets.
+
+    PYTHONPATH=src:. python -m benchmarks.multipod --arch tinyllama-1.1b
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+
+
+def lower_cell(acfg, shape, mesh):
+    from repro.launch.dryrun import build_step, parse_collectives
+    from repro.distributed.sharding import mesh_context
+    with mesh_context(mesh):
+        fn, args, sh, model, don = build_step(acfg, shape, mesh)
+        co = jax.jit(fn, in_shardings=sh, donate_argnums=don
+                     ).lower(*args).compile()
+    tot, cnt = parse_collectives(co.as_text())
+    return tot, cnt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--out", default="results/multipod")
+    args = ap.parse_args()
+    from repro.configs import get_config, shape_by_name
+    from repro.launch.mesh import make_production_mesh
+
+    acfg = get_config(args.arch)
+    shape = shape_by_name("train_4k")
+    single = make_production_mesh(multi_pod=False)
+    multi = make_production_mesh(multi_pod=True)
+
+    t_single, c_single = lower_cell(acfg, shape, single)
+    t_multi, c_multi = lower_cell(acfg, shape, multi)
+    acfg_c = dataclasses.replace(
+        acfg, parallel=dataclasses.replace(acfg.parallel,
+                                           grad_compression="int8"))
+    t_comp, c_comp = lower_cell(acfg_c, shape, multi)
+
+    def tot(d):
+        return sum(d.values())
+    rec = {
+        "arch": args.arch,
+        "single_pod_bytes": t_single, "single_pod_counts": c_single,
+        "multi_pod_bytes": t_multi, "multi_pod_counts": c_multi,
+        "multi_pod_int8_bytes": t_comp, "multi_pod_int8_counts": c_comp,
+        "pod_axis_delta_bytes": tot(t_multi) - tot(t_single),
+        "int8_savings_bytes": tot(t_multi) - tot(t_comp),
+    }
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{args.arch}.json").write_text(json.dumps(rec, indent=1))
+    print(f"{args.arch} train_4k collective bytes (per compiled module):")
+    print(f"  single pod : {tot(t_single)/2**30:8.2f} GiB  {c_single}")
+    print(f"  multi pod  : {tot(t_multi)/2**30:8.2f} GiB  {c_multi}")
+    print(f"  multi+int8 : {tot(t_comp)/2**30:8.2f} GiB  {c_comp}")
+    print(f"  pod-axis delta {rec['pod_axis_delta_bytes']/2**30:.2f} GiB; "
+          f"int8 saves {rec['int8_savings_bytes']/2**30:.2f} GiB of it")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+results/ JSONs.
+
+    PYTHONPATH=src:. python -m benchmarks.report [--dryrun results/dryrun]
+        [--roofline results/roofline]
+
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import STANDARD_SHAPES, list_archs
+
+
+def gib(x):
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(dryrun_dir: Path, mesh: str) -> str:
+    rows = ["| arch | shape | status | compile s | args GiB/dev | "
+            "peak GiB/dev | fits 16G | HLO GFLOPs/dev | collectives |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in list_archs():
+        for shape in [s.name for s in STANDARD_SHAPES]:
+            f = dryrun_dir / f"{arch}__{shape}__{mesh}.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            if r["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | SKIP (by design) | — | — "
+                            f"| — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {arch} | {shape} | **FAIL** | — | — | — | — "
+                            f"| — | — |")
+                continue
+            m = r["memory"]
+            cc = r.get("collective_counts", {})
+            coll = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                            for k, v in sorted(cc.items()))
+            flops = (r["cost"]["flops"] or 0) / 1e9
+            rows.append(
+                f"| {arch} | {shape} | ok | {r['compile_s']:.0f} "
+                f"| {gib(m['argument_bytes'])} | {gib(m['peak_bytes'])} "
+                f"| {'yes' if r['fits_hbm'] else 'NO'} | {flops:.1f} "
+                f"| {coll} |")
+    return "\n".join(rows)
+
+
+def roofline_table(roof_dir: Path) -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | "
+            "bottleneck | roofline frac | useful (6ND/HLO) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in list_archs():
+        for shape in [s.name for s in STANDARD_SHAPES]:
+            f = roof_dir / f"{arch}__{shape}__single.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            if r.get("status") != "ok":
+                continue
+            t = r["terms"]
+
+            def ms(x):
+                return f"{x*1e3:.1f}ms" if x < 10 else f"{x:.1f}s"
+            rows.append(
+                f"| {arch} | {shape} | {ms(t['t_compute_s'])} "
+                f"| {ms(t['t_memory_s'])} | {ms(t['t_collective_s'])} "
+                f"| **{r['bottleneck']}** | {r['roofline_fraction']:.3f} "
+                f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--roofline", default="results/roofline")
+    args = ap.parse_args()
+    print("### Dry-run (single pod, 16x16 = 256 chips)\n")
+    print(dryrun_table(Path(args.dryrun), "single"))
+    print("\n### Dry-run (multi-pod, 2x16x16 = 512 chips)\n")
+    print(dryrun_table(Path(args.dryrun), "multi"))
+    print("\n### Roofline (single pod)\n")
+    print(roofline_table(Path(args.roofline)))
+
+
+if __name__ == "__main__":
+    main()

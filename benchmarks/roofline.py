@@ -1,0 +1,373 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (§Roofline): unit-decomposition over layer counts.
+
+cost_analysis() counts lax.scan bodies ONCE (probed), so whole-step compiles
+under-count layer work by the trip count. Methodology here:
+
+  1. For each (arch, shape) lower the SAME step function at per-segment depth
+     r=1 and r=2 on the production mesh (identical shardings). The difference
+     is the exact per-super-block cost (slope); the r=1 cost minus the slope
+     is the intercept (embedding, head, optimizer, snapshot write).
+  2. total = intercept + sum_over_segments(slope_kind x real_count), with the
+     gradient-accumulation factor multiplying the in-scan (layer+embed/head)
+     part only (optimizer/DMD sit outside the microbatch scan; their cost is
+     measured separately and NOT multiplied).
+  3. Collective bytes per device get the same slope treatment; parsed from
+     HLO text with direction multipliers (AR x2, AG/RS/A2A/CP x1 of result
+     bytes — DCN/ICI convention documented in EXPERIMENTS.md).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+Terms are SECONDS PER STEP per device (cost_analysis of the partitioned
+module reports shard-local work):
+
+  t_compute    = flops_per_device / 197e12
+  t_memory     = bytes_per_device / 819e9
+  t_collective = collective_bytes_per_device / 50e9
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.roofline [--arch A] [--shape S]
+      [--out results/roofline] [--mesh single]
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+# direction multipliers on RESULT bytes -> bytes on the wire per device
+COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+             "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def scaled_config(acfg, reps: int):
+    """Same-family config with `reps` repetitions of each segment kind."""
+    mc = acfg.model
+    kw = {}
+    if mc.family == "encdec":
+        kw = {"n_layers": reps, "n_encoder_layers": reps}
+    elif mc.family == "hybrid":
+        kw = {"n_layers": mc.shared_attn_every * reps}
+    elif mc.moe.n_experts > 0 and mc.moe.moe_every == 2:
+        kw = {"n_layers": 2 * reps}
+    elif mc.global_every > 0:
+        kw = {"n_layers": mc.global_every * reps}
+    else:
+        kw = {"n_layers": reps}
+    return dataclasses.replace(acfg, model=dataclasses.replace(mc, **kw))
+
+
+def local_tail_config(acfg, reps: int):
+    """gemma local-tail slope: local-window-only layers."""
+    mc = dataclasses.replace(acfg.model, n_layers=reps, global_every=0)
+    return dataclasses.replace(acfg, model=mc)
+
+
+def half_batch(shape):
+    import dataclasses as dc
+    return dc.replace(shape, global_batch=max(shape.global_batch // 2, 1))
+
+
+def measure(acfg, shape, mesh, ga_one: bool = True) -> dict:
+    """Lower + compile one cell variant; return flops/bytes/collectives."""
+    from repro.launch.dryrun import build_step, parse_collectives
+    from repro.distributed.sharding import mesh_context
+    if ga_one:
+        acfg = dataclasses.replace(
+            acfg, parallel=dataclasses.replace(acfg.parallel, grad_accum=1))
+    with mesh_context(mesh):
+        # scan_layers=False: unrolled layer stacks so cost_analysis sees every
+        # layer (scan bodies are counted once regardless of trip count).
+        fn, args, shardings, model, donate = build_step(acfg, shape, mesh,
+                                                        scan_layers=False)
+        compiled = jax.jit(fn, in_shardings=shardings,
+                           donate_argnums=donate).lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    coll, _ = parse_collectives(compiled.as_text())
+    coll_bytes = sum(COLL_MULT.get(k, 1.0) * v for k, v in coll.items())
+    return {"flops": float(ca.get("flops") or 0.0),
+            "bytes": float(ca.get("bytes accessed") or 0.0),
+            "coll_bytes": coll_bytes,
+            "coll_detail": coll}
+
+
+def measure_optimizer(acfg, mesh) -> dict:
+    """Cost of the out-of-scan part: optimizer update on the full tree."""
+    from repro.models.transformer import LanguageModel, init_params
+    from repro.optim import make_optimizer
+    from repro.distributed.sharding import mesh_context, partition_specs
+    from repro.launch import inputs as inputs_mod
+    model = LanguageModel(acfg.model)
+    params = model.init(abstract=True)
+    opt = make_optimizer(acfg.optimizer)
+    opt_state = jax.eval_shape(opt.init, params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+
+    def update(g, s, p):
+        u, s2 = opt.update(g, s, p, jnp.zeros((), jnp.int32))
+        from repro.optim import apply_updates
+        return apply_updates(p, u), s2
+
+    with mesh_context(mesh):
+        p_specs = partition_specs(params, mesh)
+        sh = inputs_mod.shardings_of(p_specs, mesh)
+        g_specs = jax.tree_util.tree_map(lambda s: s, sh)
+        from repro.launch.inputs import state_specs
+        from repro.train.state import TrainState
+        st = TrainState(params, opt_state, jax.ShapeDtypeStruct((), jnp.int32),
+                        None)
+        full = inputs_mod.state_specs(st, mesh)
+        compiled = jax.jit(update, in_shardings=(
+            inputs_mod.shardings_of(full.params, mesh),
+            inputs_mod.shardings_of(full.opt_state, mesh),
+            inputs_mod.shardings_of(full.params, mesh)),
+            donate_argnums=(1, 2)).lower(grads, opt_state, params).compile()
+    ca = compiled.cost_analysis() or {}
+    from repro.launch.dryrun import parse_collectives
+    coll, _ = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops") or 0.0),
+            "bytes": float(ca.get("bytes accessed") or 0.0),
+            "coll_bytes": sum(COLL_MULT.get(k, 1) * v for k, v in coll.items())}
+
+
+def measure_dmd(acfg, mesh) -> dict:
+    """Per-round DMD jump cost (amortize over m steps for per-step cost)."""
+    if not acfg.dmd.enabled:
+        return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+    from repro.models.transformer import LanguageModel
+    from repro.train.step import make_dmd_step
+    from repro.train.state import TrainState
+    from repro.core import snapshots as snap
+    from repro.optim import make_optimizer
+    from repro.distributed.sharding import mesh_context
+    from repro.launch import inputs as inputs_mod
+    from repro.launch.dryrun import parse_collectives
+    model = LanguageModel(acfg.model)
+    params = model.init(abstract=True)
+    opt = make_optimizer(acfg.optimizer)
+    opt_state = jax.eval_shape(opt.init, params)
+    bufs = snap.init_buffers(params, acfg.dmd)
+    state = TrainState(params, opt_state, jax.ShapeDtypeStruct((), jnp.int32),
+                       bufs)
+    step = make_dmd_step(acfg)
+    with mesh_context(mesh):
+        st_specs = inputs_mod.state_specs(state, mesh)
+        compiled = jax.jit(step, in_shardings=(
+            inputs_mod.shardings_of(st_specs, mesh),
+            None), donate_argnums=(0,)).lower(
+                state, jnp.zeros((), jnp.float32)).compile()
+    ca = compiled.cost_analysis() or {}
+    coll, _ = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops") or 0.0),
+            "bytes": float(ca.get("bytes accessed") or 0.0),
+            "coll_bytes": sum(COLL_MULT.get(k, 1) * v for k, v in coll.items())}
+
+
+def model_flops(acfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode: 2*N_active per token."""
+    import numpy as np
+    from repro.models.transformer import LanguageModel
+    mc = acfg.model
+    model = LanguageModel(mc)
+    params = model.init(abstract=True)
+
+    def count(tree, pred=lambda p: True):
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            key = jax.tree_util.keystr(path)
+            if pred(key):
+                total += int(np.prod(leaf.shape))
+        return total
+
+    n_total = count(params)
+    if mc.moe.n_experts > 0:
+        n_expert = count(params, lambda k: "experts_" in k)
+        n_active = (n_total - n_expert
+                    + n_expert * mc.moe.top_k / mc.moe.n_experts)
+    else:
+        n_active = n_total
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def analyze_cell(arch: str, shape_name: str, mesh_kind: str = "single",
+                 out_dir: Path = None, overrides=None) -> dict:
+    from repro.configs import get_config, shape_by_name
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.step import resolve_grad_accum
+    from repro.models.transformer import segment_plan
+
+    acfg = get_config(arch)
+    if overrides:
+        acfg = overrides(acfg)
+    shape = shape_by_name(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if shape_name not in acfg.shapes:
+        rec["status"] = "skipped"
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    KEYS = ("flops", "bytes", "coll_bytes")
+    c1 = measure(scaled_config(acfg, 1), shape, mesh)
+    c2 = measure(scaled_config(acfg, 2), shape, mesh)
+
+    # ga decomposition (train only): unit lowerings run the FULL batch at
+    # ga=1, but a real step with grad accumulation re-pays the
+    # batch-INDEPENDENT work (param gathers/reads) every microbatch while
+    # the batch-LINEAR work is ga-invariant in total. Split via a half-batch
+    # lowering: param_part = 2*c(B/2) - c(B) (the batch-linear part halves,
+    # the constant part doesn't).
+    if shape.kind == "train":
+        c1h = measure(scaled_config(acfg, 1), half_batch(shape), mesh)
+        c2h = measure(scaled_config(acfg, 2), half_batch(shape), mesh)
+
+        def split(c, ch):
+            par = {k: min(max(2 * ch[k] - c[k], 0.0), c[k]) for k in KEYS}
+            act = {k: c[k] - par[k] for k in KEYS}
+            return par, act
+        p1, a1 = split(c1, c1h)
+        p2, a2 = split(c2, c2h)
+        slope_p = {k: max(p2[k] - p1[k], 0.0) for k in KEYS}
+        slope_a = {k: max(a2[k] - a1[k], 0.0) for k in KEYS}
+        inter_p = {k: max(p1[k] - slope_p[k], 0.0) for k in KEYS}
+        inter_a = {k: max(a1[k] - slope_a[k], 0.0) for k in KEYS}
+    else:
+        slope = {k: max(c2[k] - c1[k], 0.0) for k in KEYS}
+        slope_p = {k: 0.0 for k in KEYS}
+        slope_a = slope
+        inter_p = {k: 0.0 for k in KEYS}
+        inter_a = {k: max(c1[k] - slope[k], 0.0) for k in KEYS}
+
+    plan = segment_plan(acfg.model)
+    mc = acfg.model
+    # super-block count for the dominant segment kind
+    if mc.family == "encdec":
+        n_units = mc.n_layers                       # enc+dec vary together
+    elif mc.family == "hybrid":
+        n_units = mc.n_layers // mc.shared_attn_every
+    elif mc.moe.n_experts > 0 and mc.moe.moe_every == 2:
+        n_units = mc.n_layers // 2
+    elif mc.global_every > 0:
+        n_units = mc.n_layers // mc.global_every
+    else:
+        n_units = mc.n_layers
+
+    total_p = {k: inter_p[k] + slope_p[k] * n_units for k in KEYS}
+    total_a = {k: inter_a[k] + slope_a[k] * n_units for k in KEYS}
+
+    # gemma local tail (62 = 10x6 + 2)
+    tail = mc.n_layers - n_units * mc.global_every if mc.global_every else 0
+    if mc.global_every and tail:
+        t1 = measure(local_tail_config(acfg, 1), shape, mesh)
+        t2 = measure(local_tail_config(acfg, 2), shape, mesh)
+        if shape.kind == "train":
+            t1h = measure(local_tail_config(acfg, 1), half_batch(shape), mesh)
+            t2h = measure(local_tail_config(acfg, 2), half_batch(shape), mesh)
+            tp1, ta1 = split(t1, t1h)
+            tp2, ta2 = split(t2, t2h)
+            for k in KEYS:
+                total_p[k] += max(tp2[k] - tp1[k], 0.0) * tail
+                total_a[k] += max(ta2[k] - ta1[k], 0.0) * tail
+        else:
+            for k in KEYS:
+                total_a[k] += max(t2[k] - t1[k], 0.0) * tail
+
+    ga = 1
+    opt_cost = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+    dmd_cost = dict(opt_cost)
+    if shape.kind == "train":
+        ga = resolve_grad_accum(acfg, mesh, shape.global_batch)
+        opt_cost = measure_optimizer(acfg, mesh)
+        dmd_cost = measure_dmd(acfg, mesh)
+        m = max(acfg.dmd.m + acfg.dmd.cooldown_steps, 1)
+        # per step: ga x param-part + activation-part + optimizer
+        # (+ DMD jump amortized over the m-step window). The unit lowerings
+        # include one param-part already (they ran at ga=1); opt cost is
+        # separate and NOT multiplied.
+        total = {k: (ga * total_p[k] + total_a[k] + opt_cost[k]
+                     + dmd_cost[k] / m) for k in KEYS}
+    else:
+        total = {k: total_p[k] + total_a[k] for k in KEYS}
+
+    mf = model_flops(acfg, shape)
+    flops_global = total["flops"] * chips
+    terms = {
+        "t_compute_s": total["flops"] / PEAK_FLOPS,
+        "t_memory_s": total["bytes"] / HBM_BW,
+        "t_collective_s": total["coll_bytes"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = {"t_compute_s": "compute", "t_memory_s": "memory",
+             "t_collective_s": "collective"}[dominant]
+    step_time = max(terms.values())
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "grad_accum": ga,
+        "per_device": total,
+        "param_part": total_p,
+        "act_part": total_a,
+        "terms": terms,
+        "bottleneck": bound,
+        "roofline_fraction": (total["flops"] / PEAK_FLOPS) / step_time
+        if step_time > 0 else 0.0,
+        "model_flops_global": mf,
+        "hlo_flops_global": flops_global,
+        "useful_ratio": mf / flops_global if flops_global else 0.0,
+        "optimizer_cost": opt_cost,
+        "dmd_cost_per_round": dmd_cost,
+        "wall_s": round(time.time() - t0, 1),
+    })
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.json").write_text(
+            json.dumps(rec, indent=1))
+    print(f"[roofline] {arch} {shape_name}: bound={bound} "
+          f"t_c={terms['t_compute_s']*1e3:.1f}ms "
+          f"t_m={terms['t_memory_s']*1e3:.1f}ms "
+          f"t_x={terms['t_collective_s']*1e3:.1f}ms "
+          f"MFU-bound={rec['roofline_fraction']:.2f} "
+          f"useful={rec['useful_ratio']:.2f} ({rec['wall_s']}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    from repro.configs import STANDARD_SHAPES, list_archs
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else [s.name for s in STANDARD_SHAPES]
+    out = Path(args.out)
+    for arch in archs:
+        for shape in shapes:
+            try:
+                analyze_cell(arch, shape, args.mesh, out)
+            except Exception as e:
+                import traceback
+                print(f"[roofline FAIL] {arch} {shape}: {e}")
+                traceback.print_exc(limit=6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Benchmark harness: one function per paper table/figure + kernel timings.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,...`` CSV rows. The roofline table (per arch x shape) is a
+separate, much heavier pass: ``python -m benchmarks.roofline`` (it needs the
+512-device dry-run environment).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def bench_kernels() -> list:
+    """Kernel wall times (interpret-mode on CPU: correctness path; the
+    numbers are the jnp-oracle equivalents, useful as relative baselines)."""
+    from repro.kernels import ops, ref
+    rows = ["kernel,name,us_per_call,derived"]
+    rng = np.random.default_rng(0)
+    m, n = 14, 1_000_000
+    S = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+
+    def timeit(f, *a, reps=5):
+        out = f(*a)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(reps):
+            out = f(*a)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / reps * 1e6
+
+    t_ref = timeit(jax.jit(ref.gram_ref), S)
+    rows.append(f"kernel,gram_ref_jnp,{t_ref:.0f},m={m} n={n} "
+                f"{2*m*m*n/t_ref*1e-3/1e9:.1f}GFLOP/s")
+    t_c = timeit(jax.jit(ref.combine_ref), S, c)
+    rows.append(f"kernel,combine_ref_jnp,{t_c:.0f},bw~"
+                f"{4*m*n/t_c*1e-3/1e9:.1f}GB/s")
+    q = jnp.asarray(rng.normal(size=(1, 512, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 4, 64)), jnp.float32)
+    t_f = timeit(jax.jit(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=True)), q, k, k)
+    rows.append(f"kernel,flash_ref_jnp,{t_f:.0f},B1 S512 H4 d64")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    from benchmarks.paper_benches import (fig3_sensitivity, fig4_curves,
+                                          sec3_overhead)
+    t0 = time.time()
+    rows = []
+    rows += sec3_overhead()
+    rows += bench_kernels()
+    if args.quick:
+        rows += fig3_sensitivity(ms=(6, 14), ss=(10, 55), steps=300)
+        rows += fig4_curves(steps=300)
+    else:
+        rows += fig3_sensitivity()
+        rows += fig4_curves()
+    print("\n".join(rows))
+    print(f"\n# total bench wall: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

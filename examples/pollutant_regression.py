@@ -1,0 +1,135 @@
+"""The paper's experiment end-to-end: pollutant-dispersion surrogate.
+
+    PYTHONPATH=src python examples/pollutant_regression.py \
+        [--samples 300] [--epochs 1200] [--full]
+
+1. Generates the dataset by solving the Blasius + advection-diffusion-
+   reaction system per LHS parameter sample (Appendix 1).
+2. Trains the paper's softsign MLP (6-40-200-1000-2670) with Adam, with and
+   without DMD acceleration (m=14, s=55 — the paper's selected values).
+3. Reports train/test MSE for both and the per-jump relative improvements.
+
+--full uses the paper's exact scale (1000 samples, 3000 epochs, tol=1e-10,
+float64) — several hours on this CPU; the default reduced run reproduces the
+qualitative claims in ~15 minutes.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DMDConfig, OptimizerConfig
+from repro.core import DMDAccelerator
+from repro.data import pollutant as pol
+from repro.models.mlp_net import init_mlp, mse_loss
+from repro.optim import apply_updates, make_optimizer
+
+
+def train(Xtr, Ytr, Xte, Yte, sizes, dmd_cfg, epochs, lr=1e-3, seed=0,
+          log_every=200, guard=True):
+    params = init_mlp(jax.random.PRNGKey(seed), sizes)
+    opt = make_optimizer(OptimizerConfig(name="adam", lr=lr))
+    state = opt.init(params)
+    acc = DMDAccelerator(dmd_cfg)
+    bufs = acc.init(params)
+
+    @jax.jit
+    def step(p, s, t):
+        loss, g = jax.value_and_grad(lambda pp: mse_loss(pp, Xtr, Ytr))(p)
+        u, s = opt.update(g, s, p, t)
+        return apply_updates(p, u), s, loss
+
+    jumps = []
+    tr_curve, te_curve = [], []
+    for t in range(epochs):
+        params, state, loss = step(params, state, jnp.asarray(t))
+        if dmd_cfg.enabled and acc.should_record(t):
+            bufs = acc.record(bufs, params, acc.slot(t))
+            if acc.should_apply(t):
+                before = float(mse_loss(params, Xtr, Ytr))
+                old_params = jax.tree_util.tree_map(
+                    lambda x: x.copy(), params)
+                params, _ = acc.apply(params, bufs, acc.round_index(t))
+                after = float(mse_loss(params, Xtr, Ytr))
+                jumps.append(after / max(before, 1e-30))
+                if guard and after > before:
+                    # validated jump: revert harmful extrapolations (the
+                    # loss check costs one forward; the paper's "annealing
+                    # needed" note, made concrete)
+                    params = old_params
+                elif dmd_cfg.reset_opt_state:
+                    state = opt.init(params)
+        if t % log_every == 0 or t == epochs - 1:
+            tr = float(mse_loss(params, Xtr, Ytr))
+            te = float(mse_loss(params, Xte, Yte))
+            tr_curve.append((t, tr))
+            te_curve.append((t, te))
+            print(f"  epoch {t:5d}: train {tr:.5e}  test {te:.5e}")
+    return params, tr_curve, te_curve, jumps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=300)
+    ap.add_argument("--epochs", type=int, default=1200)
+    ap.add_argument("--points", type=int, default=2670)
+    ap.add_argument("--grid", type=int, nargs=2, default=(64, 32))
+    ap.add_argument("--full", action="store_true",
+                    help="paper-exact: 1000 samples, 3000 epochs, fp64")
+    args = ap.parse_args()
+    if args.full:
+        args.samples, args.epochs, args.grid = 1000, 3000, (96, 48)
+        jax.config.update("jax_enable_x64", True)
+
+    print(f"generating dataset: {args.samples} PDE solves on "
+          f"{args.grid[0]}x{args.grid[1]} grid ...")
+    t0 = time.time()
+    data = pol.generate_dataset(n_samples=args.samples, nx=args.grid[0],
+                                ny=args.grid[1], n_points=args.points,
+                                seed=0, batch=32, verbose=True)
+    (Xtr, Ytr), (Xte, Yte) = pol.train_test_split(data, 0.8)
+    print(f"dataset ready in {time.time() - t0:.0f}s: "
+          f"train {Xtr.shape} -> {Ytr.shape}, test {Xte.shape}")
+    Xtr, Ytr = jnp.asarray(Xtr), jnp.asarray(Ytr)
+    Xte, Yte = jnp.asarray(Xte), jnp.asarray(Yte)
+
+    sizes = (6, 40, 200, 1000, args.points)
+
+    if args.full:
+        # Paper-faithful DMD: plain (unanchored) formulation, eig mode,
+        # tol=1e-10, no guards — valid in fp64.
+        dmd_cfg = DMDConfig(m=14, s=55, tol=1e-10, warmup_steps=28,
+                            cooldown_steps=0, anchor="none", affine=False,
+                            trust_region=0.0, mode="eig",
+                            reset_opt_state=False)
+    else:
+        dmd_cfg = DMDConfig(m=14, s=55, tol=1e-4, warmup_steps=100,
+                            cooldown_steps=10)
+
+    print("\n=== baseline (plain Adam) ===")
+    _, tr_b, te_b, _ = train(Xtr, Ytr, Xte, Yte, sizes,
+                             DMDConfig(enabled=False), args.epochs)
+    print("\n=== DMD-accelerated (m=14, s=55) ===")
+    _, tr_d, te_d, jumps = train(Xtr, Ytr, Xte, Yte, sizes, dmd_cfg,
+                                 args.epochs)
+
+    print("\n=== summary (paper Fig. 4 analogue) ===")
+    print(f"final train MSE: baseline {tr_b[-1][1]:.5e}  "
+          f"dmd {tr_d[-1][1]:.5e}  ratio {tr_b[-1][1] / tr_d[-1][1]:.1f}x")
+    print(f"final test  MSE: baseline {te_b[-1][1]:.5e}  "
+          f"dmd {te_d[-1][1]:.5e}  ratio {te_b[-1][1] / te_d[-1][1]:.1f}x")
+    if jumps:
+        acc_n = sum(1 for j in jumps if j < 1.0)
+        print(f"mean relative improvement per DMD application: "
+              f"{np.mean(jumps):.3f} (median {np.median(jumps):.3f}) over "
+              f"{len(jumps)} jumps; accepted {acc_n} (paper Fig. 3 metric)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: DMD-accelerated training of a tiny LM on synthetic tokens.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains the same model twice (plain Adam vs Adam + DMD extrapolation at equal
+optimizer-step budget) and prints both loss curves.
+"""
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.configs.base import DMDConfig, OptimizerConfig, TrainConfig
+from repro.data.tokens import synthetic_lm_batches
+from repro.models.transformer import LanguageModel
+from repro.train import Trainer
+
+
+def build(dmd_enabled: bool):
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=4, d_model=128, d_ff=256,
+                 vocab_size=512, n_heads=4, n_kv_heads=2, head_dim=32)
+    acfg = dataclasses.replace(
+        acfg, model=mc,
+        dmd=DMDConfig(enabled=dmd_enabled, m=8, s=24, tol=1e-4,
+                      warmup_steps=40, cooldown_steps=6),
+        optimizer=OptimizerConfig(name="adam", lr=1e-3, schedule="constant"),
+        parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
+                                     remat="none"),
+        train=TrainConfig(global_batch=8, seq_len=64))
+    model = LanguageModel(mc, head_tp=False, chunk_k=64)
+    return Trainer(model, acfg), mc
+
+
+def run(dmd_enabled: bool, steps: int = 200):
+    trainer, mc = build(dmd_enabled)
+    batches = synthetic_lm_batches(0, 8, 64, mc.vocab_size)
+    losses = []
+    t0 = time.time()
+    trainer.fit(batches, steps=steps,
+                on_metrics=lambda s, m: losses.append(float(m["loss"])))
+    return losses, time.time() - t0
+
+
+if __name__ == "__main__":
+    base, t_base = run(False)
+    dmd, t_dmd = run(True)
+    print(f"\n{'step':>6} {'baseline':>10} {'dmd':>10}")
+    for s in range(0, len(base), 25):
+        print(f"{s:>6} {base[s]:>10.4f} {dmd[s]:>10.4f}")
+    print(f"final  {base[-1]:>10.4f} {dmd[-1]:>10.4f}")
+    print(f"\nwall: baseline {t_base:.1f}s, dmd {t_dmd:.1f}s "
+          f"(overhead {t_dmd / t_base:.2f}x; paper's TF impl saw 1.41x, "
+          f"in-graph JAX stays near the 1.07x theoretical)")

@@ -1,0 +1,78 @@
+"""Batched serving demo: prefill a batch of prompts, then decode greedily.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch gemma3-27b]
+        [--batch 4] [--prompt-len 32] [--new-tokens 16]
+
+Exercises the production serving path (prefill -> KV caches incl. ring
+caches for sliding-window layers -> decode steps) on a reduced config.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models.transformer import LanguageModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    acfg = get_config(args.arch)
+    mc = reduced(acfg.model)
+    model = LanguageModel(mc, head_tp=False, chunk_k=64)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 mc.vocab_size)
+    batch = {"tokens": prompts}
+    if mc.mrope_sections:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(P)[None, None, :], (B, 3, P))
+    if mc.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, mc.encoder_seq_len, mc.d_model))
+
+    caches = model.init_cache(B, P + N)
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch, caches)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+
+    generated = [next_tok]
+    t0 = time.time()
+    for i in range(N - 1):
+        dbatch = {"tokens": next_tok}
+        if mc.mrope_sections:
+            dbatch["positions"] = jnp.full((B, 3, 1), P + i, jnp.int32)
+        logits, caches = decode(params, dbatch, caches)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        generated.append(next_tok)
+    jax.block_until_ready(generated[-1])
+    t_decode = time.time() - t0
+
+    tokens = jnp.concatenate(generated, axis=1)
+    print(f"arch={args.arch} (reduced) B={B}")
+    print(f"prefill {P} tokens: {t_prefill*1e3:.0f} ms "
+          f"(incl. compile)")
+    print(f"decode {N-1} steps: {t_decode*1e3:.0f} ms "
+          f"-> {(N-1)*B/max(t_decode,1e-9):.0f} tok/s (batch)")
+    print("generated ids[0]:", tokens[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (
+    save_checkpoint, restore_checkpoint, latest_step, list_checkpoints,
+)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_checkpoints"]

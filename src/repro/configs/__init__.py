@@ -1,0 +1,50 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    ArchConfig, DMDConfig, ModelConfig, MoEConfig, OptimizerConfig,
+    ParallelConfig, SSMConfig, ShapeConfig, TrainConfig, STANDARD_SHAPES,
+    reduced,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "granite-20b": "repro.configs.granite_20b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "whisper-base": "repro.configs.whisper_base",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe",
+    "pollutant-mlp": "repro.configs.pollutant_mlp",
+}
+
+
+def list_archs() -> List[str]:
+    return [k for k in _ARCH_MODULES if k != "pollutant-mlp"]
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.get_config()
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in STANDARD_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+__all__ = [
+    "ArchConfig", "DMDConfig", "ModelConfig", "MoEConfig", "OptimizerConfig",
+    "ParallelConfig", "SSMConfig", "ShapeConfig", "TrainConfig",
+    "STANDARD_SHAPES", "get_config", "list_archs", "shape_by_name", "reduced",
+]

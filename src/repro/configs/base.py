@@ -1,0 +1,260 @@
+"""Configuration dataclasses for the repro framework.
+
+Plain frozen dataclasses (no pydantic dependency in the hot path): a config is
+a *value*, hashable where possible, so jitted step functions can close over it
+as a static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 1
+    expert_d_ff: int = 0
+    n_shared_experts: int = 0       # shared (always-on) experts, llama4-style
+    shared_d_ff: int = 0
+    moe_every: int = 1              # 1 = every layer is MoE; 2 = alternate dense/MoE
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+    # weight-stationary (default): expert weights FSDP over "data" on the
+    # model dim -> re-gathered every use. activation-stationary: expert
+    # weights FSDP over their ffn dim (stay resident); the (much smaller)
+    # dispatched activations all-gather instead. See §Perf hillclimb #1.
+    weight_stationary: bool = True
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 0              # N (SSD state size per head)
+    head_dim: int = 64              # P
+    conv_width: int = 4
+    expand: int = 2                 # d_inner = expand * d_model
+    n_groups: int = 1               # B/C groups (Mamba-2)
+    chunk: int = 256                # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"           # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab_size: int = 256
+    act: str = "silu"               # silu (swiglu) | gelu (geglu) | gelu_mlp | softsign
+    norm: str = "rms"               # rms | ln
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t,h,w) split of head_dim/2
+    sliding_window: int = 0          # 0 = full attention
+    global_every: int = 0            # gemma3: every k-th layer is global, rest local
+    tie_embeddings: bool = True
+    max_seq_len: int = 8192
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # hybrid (zamba2): one shared attention block applied every `shared_attn_every`
+    # ssm layers.
+    shared_attn_every: int = 0
+    # enc-dec (whisper)
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 0         # fixed frame count from the (stubbed) frontend
+    learned_pos_emb: bool = False
+    # vlm / audio stub: inputs are precomputed embeddings rather than token ids
+    frontend_stub: bool = False
+    dtype: str = "bfloat16"          # activation/param compute dtype
+    logit_softcap: float = 0.0       # gemma-style final-logit softcapping
+    vocab_pad_to: int = 16           # Megatron-style vocab padding for TP
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return -(-self.vocab_size // p) * p if p else self.vocab_size
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def is_moe_layer(self, idx: int) -> bool:
+        m = self.moe
+        return m.n_experts > 0 and (idx % m.moe_every == m.moe_every - 1)
+
+    def is_global_attn_layer(self, idx: int) -> bool:
+        """gemma3 5:1 pattern: layer idx is global iff (idx+1) % global_every == 0."""
+        if self.global_every <= 0:
+            return self.sliding_window == 0
+        return (idx + 1) % self.global_every == 0
+
+
+# ---------------------------------------------------------------------------
+# DMD (the paper's technique)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DMDConfig:
+    enabled: bool = True
+    m: int = 14                     # snapshots per DMD round (paper: 14)
+    s: int = 55                     # extrapolation horizon in steps (paper: 55)
+    tol: float = 1e-4               # singular-value filter sigma_r/sigma_0 > tol
+                                    # (paper: 1e-10 with float64; 1e-4 is the
+                                    # fp32 Gram noise floor — see dmd.py)
+    warmup_steps: int = 100         # plain steps before the first snapshot window
+    cooldown_steps: int = 10        # unrecorded steps after each jump: lets the
+                                    # optimizer moments re-adapt so the next
+                                    # window measures clean dynamics
+    mode: str = "matpow"            # matpow (TPU-native) | eig (host callback)
+    clamp_eigs: bool = False        # eig mode only: |lambda| <- min(|lambda|, 1)
+    anchor: str = "first"           # none (paper) | first | mean; see dmd.py
+    affine: bool = True             # affine-augmented DMD (rank-one Gram update)
+    trust_region: float = 2.0       # cap jump at tr*s*rms_step; 0 = off (paper)
+    relax: float = 1.0              # w <- (1-relax) w_m + relax * w_dmd
+    snapshot_dtype: str = "float32" # fp32 | bfloat16 snapshot storage
+    gram_upcast: bool = True        # False: stream bf16 with f32 accumulation
+                                    # (halves DMD jump bandwidth; see §Perf)
+    param_filter: str = "all"       # all | non_expert | matrices_only
+    min_param_size: int = 0         # skip leaves smaller than this many elements
+    anneal: float = 1.0             # multiplicative decay of `relax` per DMD round
+    reset_opt_state: bool = True    # reset Adam moments after a DMD jump (the
+                                    # jump teleports weights; stale moments
+                                    # poison the next window's dynamics)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer / schedule
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adam"              # sgd|momentum|adam|adamw|adafactor|adam8bit
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0          # 0 = off; else global-norm clip
+    schedule: str = "constant"      # constant|cosine|wsd|linear_warmup
+    warmup_steps: int = 0
+    total_steps: int = 10000
+    decay_fraction: float = 0.1     # WSD: fraction of total steps in decay phase
+    min_lr_ratio: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / runtime
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    grad_accum: int = 1              # microbatch accumulation factor
+    remat: str = "none"              # none | block | full
+    zero1_over_pod: bool = False     # shard optimizer state over pod axis
+    grad_compression: str = "none"   # none | int8 (cross-pod quantized all-reduce)
+    scan_layers: bool = True         # lax.scan over layer stacks
+    pad_attn_heads_to: int = 0       # padded head-TP for indivisible heads
+    # serving
+    kv_seq_shard_threshold: int = 16 # shard KV by kv-head if n_kv >= this else by seq
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 0        # 0 = off
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One dry-run cell: (kind, seq_len, global_batch)."""
+    name: str = "train_4k"
+    kind: str = "train"              # train | prefill | decode
+    seq_len: int = 4096
+    global_batch: int = 256
+
+
+STANDARD_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Top-level bundle: everything needed to build + run one architecture."""
+    model: ModelConfig
+    dmd: DMDConfig = field(default_factory=DMDConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    # which standard shapes apply; names from STANDARD_SHAPES
+    shapes: Tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: str = ""
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def reduced(model: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    shrink = dict(
+        n_layers=min(model.n_layers, 4),
+        d_model=min(model.d_model, 64),
+        n_heads=min(model.n_heads, 4),
+        n_kv_heads=min(model.n_kv_heads, 2),
+        head_dim=min(model.head_dim, 16),
+        d_ff=min(model.d_ff, 128),
+        vocab_size=min(model.vocab_size, 512),
+        max_seq_len=min(model.max_seq_len, 256),
+    )
+    if model.n_kv_heads == model.n_heads:       # keep MHA shape relation
+        shrink["n_kv_heads"] = shrink["n_heads"]
+    if model.n_kv_heads == 1:
+        shrink["n_kv_heads"] = 1
+    if model.moe.n_experts > 0:
+        shrink["moe"] = dataclasses.replace(
+            model.moe, n_experts=min(model.moe.n_experts, 8),
+            top_k=min(model.moe.top_k, 2),
+            expert_d_ff=min(model.moe.expert_d_ff, 64),
+            shared_d_ff=min(model.moe.shared_d_ff, 64),
+        )
+    if model.ssm.state_dim > 0:
+        shrink["ssm"] = dataclasses.replace(
+            model.ssm, state_dim=min(model.ssm.state_dim, 16),
+            head_dim=min(model.ssm.head_dim, 16), chunk=32)
+    if model.n_encoder_layers > 0:
+        shrink["n_encoder_layers"] = min(model.n_encoder_layers, 2)
+        shrink["encoder_seq_len"] = min(model.encoder_seq_len, 32)
+    if model.global_every > 0:
+        shrink["n_layers"] = max(shrink["n_layers"], model.global_every)
+    if model.shared_attn_every > 0:
+        shrink["n_layers"] = max(shrink["n_layers"], model.shared_attn_every)
+    if model.sliding_window > 0:
+        shrink["sliding_window"] = min(model.sliding_window, 32)
+    if model.mrope_sections:
+        hd = shrink.get("head_dim", model.head_dim)
+        s1 = max(hd // 8, 1)
+        rest = hd // 2 - s1
+        shrink["mrope_sections"] = (s1, rest // 2, rest - rest // 2)
+    shrink.update(overrides)
+    return dataclasses.replace(model, **shrink)

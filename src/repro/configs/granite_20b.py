@@ -1,0 +1,25 @@
+"""Granite-20B-code [arXiv:2405.04324]: 52L d=6144 48H MQA(kv=1) d_ff=24576
+vocab=49152, non-gated GELU MLP (GPT-BigCode lineage; the gated variant
+would be 28B — param count pins it). MQA: the single kv head is replicated
+across TP; decode KV is sequence-sharded (flash-decoding combine)."""
+from repro.configs.base import (ArchConfig, DMDConfig, ModelConfig,
+                                OptimizerConfig, ParallelConfig)
+
+
+def get_config() -> ArchConfig:
+    model = ModelConfig(
+        name="granite-20b", family="dense", n_layers=52, d_model=6144,
+        n_heads=48, n_kv_heads=1, head_dim=128, d_ff=24576, vocab_size=49152,
+        act="gelu_mlp", norm="rms", tie_embeddings=False,
+        max_seq_len=32768)
+    return ArchConfig(
+        model=model,
+        dmd=DMDConfig(m=8, s=40, snapshot_dtype="bfloat16", warmup_steps=200),
+        optimizer=OptimizerConfig(name="adamw", lr=2e-4, b2=0.95,
+                                  weight_decay=0.1, grad_clip=1.0,
+                                  schedule="cosine", warmup_steps=200,
+                                  total_steps=10000),
+        parallel=ParallelConfig(grad_accum=16, remat="block"),
+        shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention (MQA shrinks the "
+                   "KV but attention is still full).")

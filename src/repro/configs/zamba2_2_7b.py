@@ -1,0 +1,26 @@
+"""Zamba2-2.7B [arXiv:2411.15242]: 54 Mamba-2 layers d=2560 (d_inner=5120,
+H=80, P=64, N=64) + ONE shared attention+MLP block invoked every 6 layers
+(pure weight sharing; the per-invocation LoRA of the paper is simplified
+away — DESIGN.md §8). attn 32H MHA hd=80, d_ff=10240. Runs long_500k
+(SSM state is O(1); shared attn blocks use full KV, 9 invocations)."""
+from repro.configs.base import (ArchConfig, DMDConfig, ModelConfig,
+                                OptimizerConfig, ParallelConfig, SSMConfig)
+
+
+def get_config() -> ArchConfig:
+    model = ModelConfig(
+        name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+        n_heads=32, n_kv_heads=32, head_dim=80, d_ff=10240, vocab_size=32000,
+        act="silu", norm="rms", shared_attn_every=6, tie_embeddings=True,
+        max_seq_len=524288,
+        ssm=SSMConfig(state_dim=64, head_dim=64, conv_width=4, expand=2,
+                      n_groups=1, chunk=256))
+    return ArchConfig(
+        model=model,
+        dmd=DMDConfig(m=14, s=55, snapshot_dtype="bfloat16", warmup_steps=200),
+        optimizer=OptimizerConfig(name="adamw", lr=3e-4, b2=0.95,
+                                  weight_decay=0.1, grad_clip=1.0,
+                                  schedule="cosine", warmup_steps=200,
+                                  total_steps=10000),
+        parallel=ParallelConfig(grad_accum=8, remat="block"),
+        shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"))

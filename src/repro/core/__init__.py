@@ -1,0 +1,11 @@
+from repro.core.dmd import (
+    gram_matrix, dmd_coefficients, combine_snapshots, dmd_extrapolate,
+    dmd_eigenvalues,
+)
+from repro.core.accelerator import DMDAccelerator
+from repro.core import snapshots
+
+__all__ = [
+    "gram_matrix", "dmd_coefficients", "combine_snapshots", "dmd_extrapolate",
+    "dmd_eigenvalues", "DMDAccelerator", "snapshots",
+]

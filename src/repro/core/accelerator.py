@@ -1,0 +1,113 @@
+"""DMDAccelerator: the paper's Algorithm 1 as a training-loop component.
+
+Usage (see repro.train.loop for full integration):
+
+    acc = DMDAccelerator(cfg.dmd)
+    buffers = acc.init(params)
+    # every optimizer step:
+    buffers = acc.record(buffers, params, acc.slot(step))
+    if acc.should_apply(step):
+        params, stats = acc.apply(params, buffers, round_idx)
+
+`record` is fused into the jitted train step by the trainer; `apply` is its
+own jitted program (runs every m steps). Both operate on the whole param
+pytree at once — XLA fuses the per-layer DMD updates, realizing the paper's
+"easily parallelized across layers" note as a single SPMD program.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dmd, snapshots as snap
+
+PyTree = Any
+
+
+class DMDAccelerator:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self._apply_jit = None
+
+    # ---- schedule ---------------------------------------------------------
+    # Cycle after warmup: [cooldown unrecorded steps][m recorded steps -> jump]
+    # The cooldown (beyond-paper, default 0 = paper's Algorithm 1) lets the
+    # optimizer moments re-adapt after a jump so the next window measures the
+    # trajectory's own dynamics, not the post-jump transient.
+    def _cycle(self) -> int:
+        return self.cfg.cooldown_steps + self.cfg.m
+
+    def slot(self, step: int) -> int:
+        """Buffer row for the snapshot taken after optimizer step `step`.
+
+        Returns -1 during warmup/cooldown phases (not recorded); otherwise the
+        row 0..m-1. A DMD jump happens when slot m-1 is written, then the
+        window restarts (paper: bp_iter = 0).
+        """
+        eff = step - self.cfg.warmup_steps
+        if eff < 0:
+            return -1
+        return (eff % self._cycle()) - self.cfg.cooldown_steps
+
+    def should_record(self, step: int) -> bool:
+        return self.cfg.enabled and self.slot(step) >= 0
+
+    def should_apply(self, step: int) -> bool:
+        return self.cfg.enabled and self.slot(step) == self.cfg.m - 1
+
+    def round_index(self, step: int) -> int:
+        eff = step - self.cfg.warmup_steps
+        return eff // self._cycle()
+
+    def relax_for_round(self, round_idx: int) -> float:
+        return float(self.cfg.relax * (self.cfg.anneal ** max(round_idx, 0)))
+
+    # ---- state ------------------------------------------------------------
+    def init(self, params: PyTree) -> PyTree:
+        if not self.cfg.enabled:
+            return None
+        return snap.init_buffers(params, self.cfg)
+
+    def record(self, buffers: PyTree, params: PyTree, slot) -> PyTree:
+        if buffers is None:
+            return None
+        return snap.record(buffers, params, slot)
+
+    # ---- the DMD jump -----------------------------------------------------
+    def _apply_impl(self, params: PyTree, buffers: PyTree,
+                    relax: jnp.ndarray) -> Tuple[PyTree, dict]:
+        cfg = self.cfg
+
+        def one(path, p, buf):
+            if buf is None:
+                return p, jnp.asarray(0, jnp.int32)
+            nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
+            gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
+                                   upcast=cfg.gram_upcast)
+            c, info = dmd.dmd_coefficients(
+                gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
+                clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
+                affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
+            w = dmd.combine_snapshots(buf, c, stack_dims=nstack,
+                                              upcast=cfg.gram_upcast)
+            return w.astype(p.dtype), jnp.mean(info["rank"].astype(jnp.float32))
+
+        out = jax.tree_util.tree_map_with_path(one, params, buffers,
+                                               is_leaf=lambda x: x is None)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
+        ranks = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
+        mean_rank = jnp.mean(jnp.stack(
+            [r.astype(jnp.float32) for r in jax.tree_util.tree_leaves(ranks)]))
+        return new_params, {"mean_rank": mean_rank}
+
+    def apply(self, params: PyTree, buffers: PyTree,
+              round_idx: int = 0) -> Tuple[PyTree, dict]:
+        if buffers is None:
+            return params, {}
+        if self._apply_jit is None:
+            self._apply_jit = jax.jit(self._apply_impl, donate_argnums=(0,))
+        relax = jnp.asarray(self.relax_for_round(round_idx), jnp.float32)
+        return self._apply_jit(params, buffers, relax)

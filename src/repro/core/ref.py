@@ -1,0 +1,85 @@
+"""Pure-numpy float64 reference DMD (classic direct-SVD formulation).
+
+Oracle for tests: no Gram trick — the textbook algorithm (Schmid 2010 / paper
+Algorithm 1) with explicit SVD of the snapshot matrix, used to validate the
+jitted Gram-form implementation in repro.core.dmd. Options (anchor / affine /
+trust_region / relax) mirror dmd.dmd_coefficients; the affine augmentation is
+materialized as an explicit constant column here (the jitted version does it
+in Gram space as a rank-one update).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dmd_extrapolate_ref(snapshots: np.ndarray, s: int, tol: float = 1e-10,
+                        mode: str = "matpow", clamp_eigs: bool = False,
+                        keep_residual: bool = False, anchor: str = "none",
+                        affine: bool = False, trust_region: float = 0.0,
+                        relax: float = 1.0) -> np.ndarray:
+    """snapshots: (m, n) rows=time. Returns extrapolated weights (n,)."""
+    S_raw = np.asarray(snapshots, np.float64)
+    m = S_raw.shape[0]
+    if anchor == "first":
+        shift = S_raw[0].copy()
+    elif anchor == "mean":
+        shift = S_raw.mean(axis=0)
+    else:
+        shift = np.zeros(S_raw.shape[1])
+    D = S_raw - shift
+    if affine:
+        gamma = np.sqrt(max(np.mean(np.sum(D * D, axis=1)), 1e-300))
+        D_aug = np.concatenate([D, np.full((m, 1), gamma)], axis=1)
+    else:
+        D_aug = D
+
+    W = D_aug.T                           # n(+1) x m, columns = snapshots
+    X, Z = W[:, :-1], W[:, 1:]
+    U, sig, Vt = np.linalg.svd(X, full_matrices=False)
+    mask = sig > tol * max(sig.max(), 1e-300)
+    r = int(mask.sum())
+    U, sig, Vt = U[:, :r], sig[:r], Vt[:r]
+    atilde = U.T @ Z @ Vt.T @ np.diag(1.0 / sig)
+    d_last = W[:, -1]
+    b = U.T @ d_last
+    if mode == "matpow":
+        y = np.linalg.matrix_power(atilde, s) @ b
+    else:
+        lam, Y = np.linalg.eig(atilde)
+        if clamp_eigs:
+            mag = np.abs(lam)
+            lam = np.where(mag > 1.0, lam / np.maximum(mag, 1e-300), lam)
+        y = np.real(Y @ np.diag(lam ** s) @ np.linalg.solve(Y, b.astype(complex)))
+
+    # Convert to snapshot-row coefficients (matches the Gram-form impl):
+    # d_dmd = U y = X V Sigma^-1 y = D[:-1]^T c_main
+    c = np.zeros(m)
+    c[:-1] = Vt.T @ (y / sig)
+    if keep_residual:
+        cp = np.zeros(m)
+        cp[:-1] = Vt.T @ ((U.T @ d_last) / sig)
+        c = c - cp
+        c[-1] += 1.0
+
+    e_last = np.zeros(m)
+    e_last[-1] = 1.0
+    if trust_region and trust_region > 0:
+        w_dyn = D.T @ c                      # original (unaugmented) coords
+        jump = np.linalg.norm(w_dyn - D[-1])
+        steps = np.linalg.norm(np.diff(D, axis=0), axis=1)
+        radius = trust_region * s * np.sqrt(np.mean(steps ** 2))
+        if not np.all(np.isfinite(c)):
+            c = e_last.copy()
+        else:
+            scale = min(1.0, radius / max(jump, 1e-300))
+            c = scale * c + (1.0 - scale) * e_last
+
+    # Fold anchor into coefficients: w = shift + D^T c = S^T c_folded
+    if anchor == "first":
+        c = c.copy()
+        c[0] += 1.0 - c.sum()
+    elif anchor == "mean":
+        c = c + (1.0 - c.sum()) / m
+
+    c = relax * c + (1.0 - relax) * e_last
+    return S_raw.T @ c

@@ -1,0 +1,85 @@
+"""Cyclic per-parameter snapshot buffers (the paper's weight matrices W^l).
+
+A buffer pytree mirrors the (filtered) param pytree with a leading snapshot
+axis of length m. Buffers are stored in ``snapshot_dtype`` and sharded with
+the *same* PartitionSpec as the parameter (snapshot axis replicated), so the
+Gram pass is local + one O(m^2) psum — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def param_filter_fn(cfg) -> Callable[[str, Any], bool]:
+    """cfg: DMDConfig -> predicate(path_string, leaf) for DMD applicability."""
+    def pred(path: str, leaf) -> bool:
+        if leaf.size < max(cfg.min_param_size, 1):
+            return False
+        if cfg.param_filter == "all":
+            return True
+        if cfg.param_filter == "non_expert":
+            return "expert" not in path
+        if cfg.param_filter == "matrices_only":
+            return leaf.ndim >= 2
+        raise ValueError(f"unknown param_filter {cfg.param_filter!r}")
+    return pred
+
+
+def _iter_paths(tree: PyTree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def selected_paths(params: PyTree, cfg) -> Dict[str, bool]:
+    pred = param_filter_fn(cfg)
+    return {path: pred(path, leaf) for path, leaf in _iter_paths(params)}
+
+
+def init_buffers(params: PyTree, cfg) -> PyTree:
+    """Zeros buffer (m, *shape) per selected leaf; None for excluded leaves.
+
+    Abstract-aware: ShapeDtypeStruct params produce ShapeDtypeStruct buffers
+    (the dry-run path must never materialize m x params of zeros).
+    """
+    pred = param_filter_fn(cfg)
+    dtype = jnp.dtype(cfg.snapshot_dtype)
+
+    def make(path, leaf):
+        if not pred(jax.tree_util.keystr(path), leaf):
+            return None
+        shape = (cfg.m,) + tuple(leaf.shape)
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+    return jax.tree_util.tree_map_with_path(make, params)
+
+
+def record(buffers: PyTree, params: PyTree, slot) -> PyTree:
+    """Write current params into row `slot` of each buffer (donated update)."""
+    def upd(buf, p):
+        if buf is None:
+            return None
+        return jax.lax.dynamic_update_index_in_dim(
+            buf, p.astype(buf.dtype), slot, axis=0)
+    return jax.tree_util.tree_map(upd, buffers, params,
+                                  is_leaf=lambda x: x is None)
+
+
+def stack_dims_for_path(path: str) -> int:
+    """How many leading stack axes a param leaf carries (after the snapshot
+    axis): segment params are stacked once; gemma local / zamba mamba
+    sub-stacks add a second. The paper's DMD is per-LAYER, so these axes are
+    batch dims for the Gram/coefficient math."""
+    p = path.replace("['", "/").replace("']", "").replace(".", "/")
+    if "/seg" not in p:
+        return 0
+    n = 1
+    if "/local/" in p or "/mamba/" in p:
+        n += 1
+    return n

@@ -1,0 +1,4 @@
+from repro.data.tokens import synthetic_lm_batches, batch_for_step
+from repro.data import pollutant
+
+__all__ = ["synthetic_lm_batches", "batch_for_step", "pollutant"]

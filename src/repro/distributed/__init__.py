@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    logical_axis_rules, partition_specs, constrain, mesh_context,
+    current_mesh, spec_for_path,
+)
+
+__all__ = [
+    "logical_axis_rules", "partition_specs", "constrain", "mesh_context",
+    "current_mesh", "spec_for_path",
+]

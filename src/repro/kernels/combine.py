@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: snapshot combination w = S^T c.
+
+The DMD hot spot #2 (DESIGN.md §2): the extrapolated weights are a linear
+combination of the m stored snapshots with coefficients c computed from the
+Gram matrix. Bandwidth-bound pass: each n-tile streams once, multiplied by
+the tiny (m,) coefficient vector held in VMEM; fused anchor fold-back is
+unnecessary because the anchor is already folded into c (dmd_coefficients).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(c_ref, x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    c = c_ref[...].astype(jnp.float32)            # (1, m_pad)
+    out_ref[...] = jax.lax.dot_general(
+        c, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (1, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def combine_pallas(snapshots: jnp.ndarray, c: jnp.ndarray, *,
+                   block_n: int = 2048, interpret: bool = True) -> jnp.ndarray:
+    """(m, n), (m,) -> (n,) fp32."""
+    m, n = snapshots.shape
+    m_pad = max(-(-m // 8) * 8, 8)
+    n_pad = -(-n // block_n) * block_n
+    x = snapshots
+    if (m_pad, n_pad) != (m, n):
+        x = jnp.pad(x, ((0, m_pad - m), (0, n_pad - n)))
+    c2 = jnp.pad(c.astype(jnp.float32), (0, m_pad - m)).reshape(1, m_pad)
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, m_pad), lambda i: (0, 0)),
+                  pl.BlockSpec((m_pad, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+        interpret=interpret,
+    )(c2, x)
+    return out[0, :n]

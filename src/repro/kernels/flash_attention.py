@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: flash attention forward (causal / sliding-window).
+
+The serving/long-context hot spot for the assigned LM architectures. Online
+softmax over k-blocks: grid (B, H, nQ, nK) with the (TQ, d) accumulator and
+(TQ,) running max/sum in VMEM scratch carried across the nK axis (the
+innermost, sequential grid dim). Causal/window blocks that are fully masked
+are skipped via pl.when — block-level sparsity, the flash-2 schedule.
+
+Layout: q/k/v as (B, H, S, d) (head-major so the (S, d) tile is MXU-aligned;
+d padded to 128 lanes by the wrapper, TQ/TK multiples of the 8-row sublane).
+GQA is handled by the wrapper (kv head index = q head // rep).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, tq: int, tk: int, sk: int,
+                  d_true: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * tq
+    k_start = ki * tk
+    # block-level skip: no k in this block can be visible to any q here
+    visible = True
+    if causal:
+        visible = q_start + tq - 1 >= k_start
+    if window:
+        visible = visible & (k_start + tk - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (TQ, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (TK, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= 1.0 / (d_true ** 0.5)   # true head dim, not the 128-padded one
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        rel = q_pos - k_pos
+        mask = k_pos < sk
+        if causal:
+            mask &= rel >= 0
+        if window:
+            mask &= rel < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)      # (TQ, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "tq", "tk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           tq: int = 128, tk: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, H, d); k/v: (B, Sk, K, d), H % K == 0. Returns (B,Sq,H,d).
+
+    Pads Sq/Sk to tile multiples and d to 128; GQA handled by indexing the
+    kv head for each q head block.
+    """
+    B, Sq, H, d = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    rep = H // K
+    d_pad = max(-(-d // 128) * 128, 128)
+    sq_pad = -(-Sq // tq) * tq
+    sk_pad = -(-Sk // tk) * tk
+
+    def pad_to(x, s_pad):
+        return jnp.pad(x, ((0, 0), (0, s_pad - x.shape[1]), (0, 0),
+                           (0, d_pad - d)))
+
+    qh = pad_to(q, sq_pad).transpose(0, 2, 1, 3)        # (B, H, Sq, d)
+    kh = pad_to(k, sk_pad).transpose(0, 2, 1, 3)        # (B, K, Sk, d)
+    vh = pad_to(v, sk_pad).transpose(0, 2, 1, 3)
+
+    grid = (B, H, sq_pad // tq, sk_pad // tk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, window=window,
+                          tq=tq, tk=tk, sk=Sk, d_true=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, d_pad),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, tk, d_pad),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, tk, d_pad),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, d_pad),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, sq_pad, d_pad), q.dtype),
+        scratch_shapes=[pltpu.VMEM((tq, 1), jnp.float32),
+                        pltpu.VMEM((tq, 1), jnp.float32),
+                        pltpu.VMEM((tq, d_pad), jnp.float32)],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)[:, :Sq, :, :d]

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: streaming snapshot Gram matrix G = D D^T.
+
+The DMD hot spot #1 (DESIGN.md §2): a tall-skinny (m x n, n up to billions
+per shard) self-Gram. Bandwidth-bound: each n-tile of the snapshot buffer
+streams HBM -> VMEM exactly once; the m x m fp32 accumulator lives in VMEM
+scratch across the whole grid (m <= 32). The anchor subtraction (D = S -
+S[0], the fp32-conditioning fix) is fused into the same pass — row 0 of each
+tile IS the anchor slice, so anchoring costs zero extra bandwidth.
+
+Tiling: grid over n // block_n; block (m_pad, block_n) with m padded to the
+8-row sublane multiple and block_n a multiple of 128 lanes. One MXU
+contraction (m_pad x block_n) @ (block_n x m_pad) per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(x_ref, out_ref, acc_ref, *, anchor_first: bool, m: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    if anchor_first:
+        x = x - x[0:1, :]
+    acc_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("anchor_first", "block_n", "interpret"))
+def gram_pallas(snapshots: jnp.ndarray, *, anchor_first: bool = False,
+                block_n: int = 2048, interpret: bool = True) -> jnp.ndarray:
+    """(m, n) -> (m, m) fp32. Pads m to 8 and n to block_n (zero rows/cols
+    contribute zero to the Gram, so padding is exact)."""
+    m, n = snapshots.shape
+    m_pad = max(-(-m // 8) * 8, 8)
+    n_pad = -(-n // block_n) * block_n
+    x = snapshots
+    if (m_pad, n_pad) != (m, n):
+        x = jnp.pad(x, ((0, m_pad - m), (0, n_pad - n)))
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, anchor_first=anchor_first, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((m_pad, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m_pad, m_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, m_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m_pad, m_pad), jnp.float32)]
+        if not interpret else
+        [pltpu.VMEM((m_pad, m_pad), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return out[:m, :m]

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes as plain jnp on CPU — the correctness contract vs ref.py holds);
+on TPU set interpret=False (the default flips on TPU backends).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import gram_pallas
+from repro.kernels.combine import combine_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(snapshots: jnp.ndarray, *, anchor_first: bool = False,
+         block_n: int = 2048, interpret=None) -> jnp.ndarray:
+    interpret = _default_interpret() if interpret is None else interpret
+    m = snapshots.shape[0]
+    flat = snapshots.reshape(m, -1)
+    return gram_pallas(flat, anchor_first=anchor_first,
+                       block_n=min(block_n, max(flat.shape[1], 128)),
+                       interpret=interpret)
+
+
+def combine(snapshots: jnp.ndarray, c: jnp.ndarray, *, block_n: int = 2048,
+            interpret=None) -> jnp.ndarray:
+    interpret = _default_interpret() if interpret is None else interpret
+    m = snapshots.shape[0]
+    flat = snapshots.reshape(m, -1)
+    out = combine_pallas(flat, c,
+                         block_n=min(block_n, max(flat.shape[1], 128)),
+                         interpret=interpret)
+    return out.reshape(snapshots.shape[1:])
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    tq: int = 128, tk: int = 128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  tq=tq, tk=tk, interpret=interpret)

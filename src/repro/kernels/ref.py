@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(snapshots: jnp.ndarray, anchor_first: bool = False) -> jnp.ndarray:
+    """(m, n) -> (m, m) = D D^T with optional D = S - S[0]."""
+    s = snapshots.astype(jnp.float32)
+    if anchor_first:
+        s = s - s[:1]
+    return s @ s.T
+
+
+def combine_ref(snapshots: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(m, n), (m,) -> (n,) = S^T c in fp32."""
+    return jnp.einsum("m,mn->n", c.astype(jnp.float32),
+                      snapshots.astype(jnp.float32))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """(B, Sq, H, d), (B, Sk, H, d) -> (B, Sq, H, d), fp32 softmax."""
+    B, Sq, H, d = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    rel = q_pos - k_pos
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= rel >= 0
+    if window:
+        mask &= rel < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

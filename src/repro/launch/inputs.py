@@ -1,0 +1,156 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every dry-run
+cell — weak-type-correct, shardable, zero device allocation.
+
+Also builds cache specs for decode cells and param/state specs, i.e. the
+complete in_shardings for jit(...).lower().
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import normalize_path, partition_specs
+
+PyTree = Any
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _nbatch(mesh: Mesh) -> int:
+    s = _mesh_sizes(mesh)
+    return s.get("pod", 1) * s.get("data", 1)
+
+
+# ---------------------------------------------------------------------------
+# Model inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(acfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Tuple[PyTree, PyTree]:
+    """Returns (abstract batch pytree, matching PartitionSpec pytree)."""
+    mc = acfg.model
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    ba = batch_axes(mesh)
+    b_spec = ba if B % _nbatch(mesh) == 0 else None
+
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs["tokens"] = P(b_spec, None)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["labels"] = P(b_spec, None)
+    if mc.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, mc.encoder_seq_len, mc.d_model), jnp.float32)
+        specs["frames"] = P(b_spec, None, None)
+    if mc.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32)
+        specs["positions"] = P(b_spec, None, None)
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode / prefill cells)
+# ---------------------------------------------------------------------------
+
+def cache_partition_specs(caches: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec per cache leaf, by path suffix + divisibility."""
+    sizes = _mesh_sizes(mesh)
+    tp = sizes.get("model", 1)
+    nb = _nbatch(mesh)
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf) -> P:
+        p = normalize_path(jax.tree_util.keystr(path))
+        shape = leaf.shape
+        nd = len(shape)
+        if p.endswith("/length") or p.endswith("/pos"):
+            return P()
+        if p.endswith("/h"):                       # (stack.., B, H, Pd, N)
+            lead = (None,) * (nd - 4)
+            B, H, Pd, N = shape[-4:]
+            if B % nb == 0:
+                return P(*lead, ba, "model" if H % tp == 0 else None,
+                         None, None)
+            return P(*lead, None, "model" if H % tp == 0 else None,
+                     "data" if Pd % sizes.get("data", 1) == 0 else None, None)
+        if p.endswith("/conv_x") or p.endswith("/conv_B") or p.endswith("/conv_C"):
+            lead = (None,) * (nd - 3)
+            B, W, C = shape[-3:]
+            return P(*lead, ba if B % nb == 0 else None, None,
+                     "model" if C % tp == 0 else None)
+        if p.endswith("/k") or p.endswith("/v") or "cross_" in p:
+            # (stack.., B, S, K, hd)
+            lead = (None,) * (nd - 4)
+            B, S, K, hd = shape[-4:]
+            b = ba if B % nb == 0 else None
+            k_tp = "model" if (K % tp == 0 and K >= tp) else None
+            dsize = sizes.get("data", 1)
+            if b is None:
+                # B unshardable (long_500k B=1): spread S over free axes
+                if k_tp and S % dsize == 0:
+                    return P(*lead, None, "data", k_tp, None)
+                if not k_tp and S % (dsize * tp) == 0:
+                    return P(*lead, None, ("data", "model"), None, None)
+                return P(*lead, None, None, k_tp, None)
+            if k_tp:
+                return P(*lead, b, None, k_tp, None)
+            if S % tp == 0:
+                return P(*lead, b, "model", None, None)
+            return P(*lead, b, None, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def state_specs(state_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Specs for a TrainState: params/opt/dmd follow param rules; step = ()."""
+    from repro.distributed.sharding import resolve_rule, rule_for_path
+
+    def one(path, leaf):
+        p = normalize_path(jax.tree_util.keystr(path))
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if p.startswith("/dmd_buffers"):
+            return _param_spec_of(p.split("/dmd_buffers", 1)[1], leaf, mesh,
+                                  lead=1)
+        if "/opt_state/vr/" in p or "/opt_state/vc/" in p:
+            # adafactor factored moments: vr drops the param's last dim,
+            # vc drops the second-to-last.
+            rule = rule_for_path(p)
+            if rule is not None and len(rule) >= 2:
+                rule = rule[:-1] if "/vr/" in p else rule[:-2] + rule[-1:]
+            return resolve_rule(rule, nd, leaf.shape, mesh)
+        if p.startswith("/params") or p.startswith("/opt_state"):
+            return _param_spec_of(p, leaf, mesh)
+        return P()
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def _param_spec_of(path: str, leaf, mesh: Mesh, lead: int = 0) -> P:
+    from repro.distributed.sharding import spec_for_path
+    nd = len(leaf.shape) - lead
+    base = spec_for_path(path, nd, mesh, leaf.shape[lead:])
+    if lead:
+        return P(*((None,) * lead + tuple(base)))
+    return base
+
+
+def shardings_of(tree_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

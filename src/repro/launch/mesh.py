@@ -1,0 +1,24 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n_devices: int, model_parallel: int = 1,
+                          pods: int = 1):
+    """Elastic helper: build a (pod, data, model) mesh from whatever device
+    count is available (restart-after-resize path)."""
+    assert n_devices % (model_parallel * pods) == 0, \
+        f"{n_devices} devices not divisible by tp={model_parallel} x pods={pods}"
+    data = n_devices // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        [--steps 200] [--ckpt /path] [--reduced] [--no-dmd] [--multi-pod]
+
+On real TPU slices this runs the full config on the production mesh; on this
+CPU container use --reduced (same-family shrunk config, 1 device). SIGTERM
+triggers a checkpoint-and-exit (preemption handling); rerunning with the
+same --ckpt resumes bit-exactly.
+"""
+import argparse
+import dataclasses
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--no-dmd", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config, reduced, shape_by_name
+    from repro.data.tokens import synthetic_lm_batches
+    from repro.distributed.sharding import mesh_context
+    from repro.models.transformer import LanguageModel
+    from repro.train import Trainer
+    from repro.checkpoint import latest_step
+
+    acfg = get_config(args.arch)
+    mc = reduced(acfg.model) if args.reduced else acfg.model
+    gb = args.global_batch or (8 if args.reduced else
+                               shape_by_name("train_4k").global_batch)
+    seq = args.seq or (64 if args.reduced else 4096)
+    acfg = dataclasses.replace(
+        acfg, model=mc,
+        dmd=dataclasses.replace(acfg.dmd, enabled=not args.no_dmd,
+                                warmup_steps=min(acfg.dmd.warmup_steps,
+                                                 args.steps // 4)),
+        train=dataclasses.replace(acfg.train, global_batch=gb, seq_len=seq,
+                                  checkpoint_every=50 if args.ckpt else 0,
+                                  checkpoint_dir=args.ckpt))
+
+    mesh = None
+    if not args.reduced:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    model = LanguageModel(mc, head_tp=not args.reduced,
+                          chunk_k=min(seq, 1024),
+                          remat=acfg.parallel.remat if not args.reduced
+                          else "none",
+                          pad_heads_to=acfg.parallel.pad_attn_heads_to)
+    print(f"{args.arch}: {model.param_count()/1e6:.1f}M params, "
+          f"dmd={'off' if args.no_dmd else 'on'}, batch={gb}x{seq}")
+
+    def run():
+        trainer = Trainer(model, acfg, mesh=mesh,
+                          checkpoint_dir=args.ckpt or None)
+        start = (latest_step(args.ckpt) or 0) if args.ckpt else 0
+        batches = synthetic_lm_batches(
+            acfg.train.seed, gb, seq, mc.vocab_size, start_step=start,
+            mrope=bool(mc.mrope_sections),
+            frames=(mc.encoder_seq_len, mc.d_model)
+            if mc.family == "encdec" else None)
+        trainer.fit(batches, steps=args.steps, log_every=10)
+
+    if mesh is not None:
+        with mesh_context(mesh):
+            run()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.transformer import (
+    LanguageModel, init_params, make_model,
+)
+from repro.models import layers, attention, moe, ssm, mlp_net
+
+__all__ = ["LanguageModel", "init_params", "make_model", "layers",
+           "attention", "moe", "ssm", "mlp_net"]

@@ -1,0 +1,152 @@
+"""Shared layer primitives: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+Pure functions over explicit param dicts. Initializers take a PRNG key and
+return pytrees; `abstract=True` returns ShapeDtypeStructs (for dry-run /
+eval_shape use without allocating 400B parameters).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def _make(key, shape, dtype, scale, abstract):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if scale == 0.0:
+        return jnp.zeros(shape, dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(key, shape, dtype, abstract=False, scale=1.0):
+    return _make(key, shape, dtype, scale, abstract)
+
+
+def zeros_init(_key, shape, dtype, abstract=False):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype, abstract=False):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(key, cfg, abstract=False):
+    if cfg.norm == "rms":
+        return {"scale": zeros_init(key, (cfg.d_model,), jnp.float32, abstract)}
+    return {"scale": ones_init(key, (cfg.d_model,), jnp.float32, abstract),
+            "b": zeros_init(key, (cfg.d_model,), jnp.float32, abstract)}
+
+
+def apply_norm(x, p, cfg):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """x: (B, S, H, hd). positions: (B, S) or (B, 3, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL, arXiv:2409.12191): the hd/2 frequency slots are split
+    into (t, h, w) sections, each rotated by its own position stream. For pure
+    text the three streams coincide and M-RoPE == RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (B, 3, S) positions"
+        assert sum(mrope_sections) == hd // 2, "M-RoPE sections must cover hd/2"
+        sec = jnp.concatenate([
+            jnp.full((n,), i, jnp.int32)
+            for i, n in enumerate(mrope_sections)])    # (hd/2,) slot -> stream
+        pos = positions.astype(jnp.float32)[:, sec, :]  # (B, hd/2, S)
+        angles = pos.transpose(0, 2, 1) * freqs[None, None, :]  # (B,S,hd/2)
+        angles = angles[:, :, None, :]                 # (B,S,1,hd/2)
+    else:
+        if positions.ndim == 3:
+            positions = positions[:, 0]
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,hd/2)
+        angles = angles[:, :, None, :]                 # (B,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None, abstract=False):
+    d_ff = d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (cfg.d_model, d_ff), dtype, abstract),
+         "w_out": dense_init(ks[1], (d_ff, cfg.d_model), dtype, abstract)}
+    if cfg.act in ("silu", "gelu"):                    # gated variants
+        p["w_gate"] = dense_init(ks[2], (cfg.d_model, d_ff), dtype, abstract)
+    return p
+
+
+def apply_mlp(x, p, cfg):
+    from repro.distributed.sharding import constrain
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        g = x @ p["w_gate"]
+        g = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+        h = g * h
+    elif cfg.act == "gelu_mlp":
+        h = jax.nn.gelu(h)
+    elif cfg.act == "softsign":
+        h = jax.nn.soft_sign(h)
+    h = constrain(h, "batch", None, "model")
+    out = h @ p["w_out"]
+    return constrain(out, "batch", None, None)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

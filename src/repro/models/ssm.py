@@ -1,0 +1,211 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Chunked SSD algorithm in pure jnp: ONE lax.scan over sequence chunks carries
+the running state h (B, H, P, N) and computes the intra-chunk quadratic part
+per chunk — the (Q, Q) decay-masked score matrix exists for a single chunk
+only (peak B*Q*Q*H_local, not B*S*S*H). Decode keeps (conv_state, ssm_state)
+and costs O(1) per token — why mamba2/zamba2 run the long_500k cell.
+
+Sharding: the inner dim d_inner = H*P shards over "model" on HEAD boundaries
+(d_inner/tp must be a multiple of P; holds for all assigned configs: H=80,
+tp=16 -> 5 heads/shard). dt and A are per-head (H % tp == 0). B/C live per
+*group* and are consumed by every head, so they stay replicated across
+"model" (G*N is tiny). Projections are stored per-component (z/x/B/C/dt
+separate matrices) so no slice ever crosses a shard boundary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def ssm_init(key, cfg, abstract=False):
+    s = cfg.ssm
+    dtype = jnp.dtype(cfg.dtype)
+    d_inner, n_heads = ssm_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    ks = jax.random.split(key, 9)
+    return {
+        "in_proj": {
+            "z": layers.dense_init(ks[0], (cfg.d_model, d_inner), dtype, abstract),
+            "x": layers.dense_init(ks[1], (cfg.d_model, d_inner), dtype, abstract),
+            "B": layers.dense_init(ks[2], (cfg.d_model, gn), dtype, abstract),
+            "C": layers.dense_init(ks[3], (cfg.d_model, gn), dtype, abstract),
+            "dt": layers.dense_init(ks[4], (cfg.d_model, n_heads), dtype, abstract),
+        },
+        "conv_w": {
+            "x": layers.dense_init(ks[5], (s.conv_width, d_inner), dtype,
+                                   abstract, scale=0.5),
+            "B": layers.dense_init(ks[6], (s.conv_width, gn), dtype,
+                                   abstract, scale=0.5),
+            "C": layers.dense_init(ks[7], (s.conv_width, gn), dtype,
+                                   abstract, scale=0.5),
+        },
+        "out_proj": layers.dense_init(ks[8], (d_inner, cfg.d_model), dtype,
+                                      abstract),
+        "A_log": layers.zeros_init(None, (n_heads,), jnp.float32, abstract),
+        "dt_bias": layers.zeros_init(None, (n_heads,), jnp.float32, abstract),
+        "skip_d": layers.zeros_init(None, (n_heads,), jnp.float32, abstract),
+        "norm_scale": layers.zeros_init(None, (d_inner,), jnp.float32, abstract),
+    }
+
+
+class SSMState(NamedTuple):
+    conv_x: jnp.ndarray   # (B, W-1, d_inner)
+    conv_B: jnp.ndarray   # (B, W-1, G*N)
+    conv_C: jnp.ndarray   # (B, W-1, G*N)
+    h: jnp.ndarray        # (B, H, P, N) running SSD state (fp32)
+
+
+def init_ssm_state(batch, cfg, dtype, abstract=False):
+    s = cfg.ssm
+    d_inner, n_heads = ssm_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    w1 = s.conv_width - 1
+    shapes = [(batch, w1, d_inner), (batch, w1, gn), (batch, w1, gn),
+              (batch, n_heads, s.head_dim, s.state_dim)]
+    dtypes = [dtype, dtype, dtype, jnp.float32]
+    if abstract:
+        return SSMState(*[jax.ShapeDtypeStruct(sh, dt)
+                          for sh, dt in zip(shapes, dtypes)])
+    return SSMState(*[jnp.zeros(sh, dt) for sh, dt in zip(shapes, dtypes)])
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv. u: (B, S, C), w: (W, C). Returns out, new_state."""
+    W = w.shape[0]
+    if state is not None:
+        ctx = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    else:
+        ctx = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = sum(ctx[:, i:i + S] * w[i][None, None, :] for i in range(W))
+    new_state = ctx[:, -(W - 1):] if W > 1 else ctx[:, :0]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Single-scan chunked SSD.
+
+    xh: (B, S, H, P); dt: (B, S, H) (positive); A: (H,) negative;
+    Bm/Cm: (B, S, G, N). Returns y (B, S, H, P), final state (B, H, P, N).
+    S must be divisible by the effective chunk (we clamp chunk to S).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+
+    def chunkify(t):
+        return t.reshape((Bsz, nc, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xc, dtc, Bc, Cc = map(chunkify, (xh, dt, Bm, Cm))   # leading nc
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def scan_fn(h, inp):
+        xq, dtq, Bq, Cq = inp                            # (B,Q,H,P) etc.
+        dA = dtq.astype(jnp.float32) * A[None, None, :]  # (B,Q,H) <= 0
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1, :]                            # (B,H)
+        Bg = jnp.repeat(Bq, rep, axis=2) if rep > 1 else Bq   # (B,Q,H,N)
+        Cg = jnp.repeat(Cq, rep, axis=2) if rep > 1 else Cq
+        xdt = xq.astype(jnp.float32) * dtq[..., None]    # (B,Q,H,P)
+
+        # intra-chunk: y_i += sum_{j<=i} C_i.B_j exp(cum_i-cum_j) xdt_j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B,Q,Q,H)
+        L = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bqhs,bkhs->bqkh", Cg.astype(jnp.float32),
+                            Bg.astype(jnp.float32))
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores * L, xdt)
+
+        # inter-chunk: y_i += C_i exp(cum_i) h_prev
+        y_inter = jnp.einsum("bqhs,bhps->bqhp",
+                             Cg.astype(jnp.float32) * jnp.exp(cum)[..., None],
+                             h)
+
+        # state update: h <- exp(total) h + sum_j exp(total - cum_j) B_j xdt_j
+        decay_to_end = jnp.exp(total[:, None, :] - cum)  # (B,Q,H)
+        contrib = jnp.einsum("bqhs,bqhp->bhps",
+                             Bg.astype(jnp.float32) * decay_to_end[..., None],
+                             xdt)
+        h_new = h * jnp.exp(total)[:, :, None, None] + contrib
+        return h_new, y_intra + y_inter
+
+    h_final, yc = jax.lax.scan(scan_fn, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def apply_ssm(x, p, cfg, *, state: Optional[SSMState] = None
+              ) -> Tuple[jnp.ndarray, Optional[SSMState]]:
+    """Mamba-2 block. x: (B, S, D). state: decode-mode recurrent state."""
+    s = cfg.ssm
+    Bsz, S, D = x.shape
+    d_inner, H = ssm_dims(cfg)
+    P, G, N = s.head_dim, s.n_groups, s.state_dim
+
+    ip = p["in_proj"]
+    z = x @ ip["z"]
+    xs = constrain(x @ ip["x"], "batch", None, "model")
+    Bs = constrain(x @ ip["B"], "batch", None, None)
+    Cs = constrain(x @ ip["C"], "batch", None, None)
+    dt = constrain(x @ ip["dt"], "batch", None, "model")
+
+    xs, new_cx = _causal_conv(xs, p["conv_w"]["x"],
+                              state.conv_x if state else None)
+    Bs, new_cb = _causal_conv(Bs, p["conv_w"]["B"],
+                              state.conv_B if state else None)
+    Cs, new_cc = _causal_conv(Cs, p["conv_w"]["C"],
+                              state.conv_C if state else None)
+
+    xh = xs.reshape(Bsz, S, H, P)
+    Bm = Bs.reshape(Bsz, S, G, N)
+    Cm = Cs.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,) < 0
+
+    if S == 1 and state is not None:
+        # O(1) decode: h <- exp(dt A) h + dt B x ; y = C h
+        rep = H // G
+        dA = jnp.exp(dt[:, 0, :] * A)                            # (B,H)
+        Bg = jnp.repeat(Bm[:, 0], rep, axis=1) if rep > 1 else Bm[:, 0]
+        Cg = jnp.repeat(Cm[:, 0], rep, axis=1) if rep > 1 else Cm[:, 0]
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]   # (B,H,P)
+        h_new = (state.h * dA[:, :, None, None]
+                 + jnp.einsum("bhs,bhp->bhps", Bg.astype(jnp.float32), xdt))
+        y = jnp.einsum("bhs,bhps->bhp", Cg.astype(jnp.float32), h_new)
+        y = y[:, None]                                           # (B,1,H,P)
+        h_final = h_new
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk,
+                                 state.h if state is not None else None)
+
+    y = y + xh.astype(jnp.float32) * p["skip_d"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = layers.rms_norm(y.astype(x.dtype), p["norm_scale"])
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "model")
+    out = y @ p["out_proj"]
+    out = constrain(out, "batch", None, None)
+    new_state = (SSMState(new_cx, new_cb, new_cc, h_final)
+                 if state is not None else None)
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,698 @@
+"""Model assembly: segment-scanned layer stacks for all assigned families.
+
+A model is a list of SEGMENTS; each segment is `count` repetitions of one
+super-block layout, with params stacked on a leading (count, ...) dim and
+applied via lax.scan (small HLO, FSDP-friendly). Super-block kinds:
+
+  dense      attn(+window) + mlp                 (minicpm, granite, tinyllama,
+                                                  qwen2-vl, llama4-dense pos)
+  gemma      `global_every-1` local-window attn layers + 1 global attn layer
+  moe        attn + MoE-ffn                      (qwen3: every layer)
+  moe_pair   dense layer then MoE layer          (llama4: 1:1 interleave)
+  mamba      Mamba-2 SSD block                   (mamba2)
+  zamba      `shared_attn_every` mamba layers + 1 SHARED attn+mlp block
+             (weights shared across all invocations — stored once outside the
+             scan stack)
+  enc / dec  whisper encoder (bidir, no rope) / decoder (self + cross attn)
+
+Caches mirror the segment structure with the same leading stack dims, so
+decode scans carry (hidden, per-layer-cache) pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.attention import KVCache, RingKVCache
+
+PyTree = Any
+
+
+class Segment(NamedTuple):
+    kind: str
+    count: int
+
+
+# ---------------------------------------------------------------------------
+# Segment plans
+# ---------------------------------------------------------------------------
+
+def segment_plan(cfg: ModelConfig) -> List[Segment]:
+    if cfg.family == "encdec":
+        return [Segment("enc", cfg.n_encoder_layers),
+                Segment("dec", cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [Segment("mamba", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups, rem = divmod(cfg.n_layers, k)
+        plan = [Segment("zamba", n_groups)]
+        if rem:
+            plan.append(Segment("mamba", rem))
+        return plan
+    if cfg.moe.n_experts > 0:
+        if cfg.moe.moe_every == 1:
+            return [Segment("moe", cfg.n_layers)]
+        assert cfg.moe.moe_every == 2
+        n_pairs, rem = divmod(cfg.n_layers, 2)
+        plan = [Segment("moe_pair", n_pairs)]
+        if rem:
+            plan.append(Segment("dense", rem))
+        return plan
+    if cfg.global_every > 0:
+        n_groups, rem = divmod(cfg.n_layers, cfg.global_every)
+        plan = [Segment("gemma", n_groups)]
+        if rem:
+            plan.append(Segment("dense_local", rem))
+        return plan
+    return [Segment("dense", cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str, abstract: bool) -> PyTree:
+    ks = jax.random.split(key, 12)
+    if kind in ("dense", "dense_local"):
+        return {"ln1": layers.norm_init(ks[0], cfg, abstract),
+                "attn": attention.attn_init(ks[1], cfg, abstract=abstract),
+                "ln2": layers.norm_init(ks[2], cfg, abstract),
+                "mlp": layers.mlp_init(ks[3], cfg, abstract=abstract)}
+    if kind == "gemma":
+        k_loc = cfg.global_every - 1
+        locals_ = _stacked_init(
+            lambda k: _block_init(k, cfg, "dense_local", abstract),
+            ks[0], k_loc, abstract)
+        glob = _block_init(ks[1], cfg, "dense", abstract)
+        return {"local": locals_, "global": glob}
+    if kind == "moe":
+        return {"ln1": layers.norm_init(ks[0], cfg, abstract),
+                "attn": attention.attn_init(ks[1], cfg, abstract=abstract),
+                "ln2": layers.norm_init(ks[2], cfg, abstract),
+                "moe": moe_mod.moe_init(ks[3], cfg, abstract)}
+    if kind == "moe_pair":
+        dense_cfg = dataclasses.replace(cfg, d_ff=cfg.d_ff)
+        return {"dense": _block_init(ks[0], dense_cfg, "dense", abstract),
+                "moe": _block_init(ks[1], cfg, "moe", abstract)}
+    if kind == "mamba":
+        return {"ln": layers.norm_init(ks[0], cfg, abstract),
+                "ssm": ssm_mod.ssm_init(ks[1], cfg, abstract)}
+    if kind == "zamba":
+        k_m = cfg.shared_attn_every
+        return {"mamba": _stacked_init(
+            lambda k: _block_init(k, cfg, "mamba", abstract),
+            ks[0], k_m, abstract)}
+    if kind == "enc":
+        return {"ln1": layers.norm_init(ks[0], cfg, abstract),
+                "attn": attention.attn_init(ks[1], cfg, abstract=abstract),
+                "ln2": layers.norm_init(ks[2], cfg, abstract),
+                "mlp": layers.mlp_init(ks[3], cfg, abstract=abstract)}
+    if kind == "dec":
+        return {"ln1": layers.norm_init(ks[0], cfg, abstract),
+                "self_attn": attention.attn_init(ks[1], cfg, abstract=abstract),
+                "ln_x": layers.norm_init(ks[2], cfg, abstract),
+                "cross_attn": attention.attn_init(ks[3], cfg, abstract=abstract),
+                "ln2": layers.norm_init(ks[4], cfg, abstract),
+                "mlp": layers.mlp_init(ks[5], cfg, abstract=abstract)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _stacked_init(fn, key, count: int, abstract: bool) -> PyTree:
+    if abstract:
+        one = fn(key)
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((count,) + tuple(l.shape), l.dtype),
+            one)
+    keys = jax.random.split(key, count)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key=None, abstract: bool = False) -> PyTree:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    plan = segment_plan(cfg)
+    ks = jax.random.split(key, len(plan) + 4)
+    dtype = jnp.dtype(cfg.dtype)
+    params: Dict[str, PyTree] = {
+        "emb": layers.dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype,
+                                 abstract),
+        "final_norm": layers.norm_init(ks[1], cfg, abstract),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            ks[2], (cfg.padded_vocab, cfg.d_model), dtype, abstract)
+    if cfg.learned_pos_emb:
+        params["pos_emb"] = layers.dense_init(
+            ks[2], (cfg.max_seq_len, cfg.d_model), dtype, abstract)
+        if cfg.family == "encdec":
+            params["enc_pos_emb"] = layers.dense_init(
+                ks[3], (cfg.encoder_seq_len, cfg.d_model), dtype, abstract)
+    if cfg.family == "hybrid":
+        params["shared_block"] = _block_init(ks[3], cfg, "dense", abstract)
+    for i, seg in enumerate(plan):
+        params[f"seg{i}"] = _stacked_init(
+            lambda k, kind=seg.kind: _block_init(k, cfg, kind, abstract),
+            ks[4 + i], seg.count, abstract)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block apply (single layer of a segment)
+# ---------------------------------------------------------------------------
+
+def _apply_dense(x, p, cfg, *, positions, window, cache, head_tp, chunk_k,
+                 causal=True, use_rope=True, moe_ffn=False, key=None,
+                 pad_heads_to=0):
+    h = layers.apply_norm(x, p["ln1"], cfg)
+    a, new_cache = attention.attend(
+        h, p["attn"], cfg, positions=positions, causal=causal, window=window,
+        cache=cache, head_tp=head_tp, use_rope=use_rope, chunk_k=chunk_k,
+        pad_heads_to=pad_heads_to)
+    x = x + a
+    h = layers.apply_norm(x, p["ln2"], cfg)
+    if moe_ffn:
+        f, aux = moe_mod.apply_moe(h, p["moe"], cfg, key=key)
+    else:
+        f, aux = layers.apply_mlp(h, p["mlp"], cfg), 0.0
+    return x + f, new_cache, aux
+
+
+def _apply_mamba(x, p, cfg, *, state):
+    h = layers.apply_norm(x, p["ln"], cfg)
+    y, new_state = ssm_mod.apply_ssm(h, p["ssm"], cfg, state=state)
+    return x + y, new_state
+
+
+def _maybe_scan(body, carry, xs_tree, count, unroll):
+    if not unroll:
+        return jax.lax.scan(body, carry, xs_tree)
+    ys = []
+    for i in range(count):
+        xs_i = jax.tree_util.tree_map(lambda l: l[i], xs_tree)
+        carry, y = body(carry, xs_i)
+        ys.append(y)
+    try:
+        ys_stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys)
+    except Exception:
+        ys_stacked = None
+    return carry, ys_stacked
+
+
+class _Ctx(NamedTuple):
+    """Static per-call context threaded through segment scans."""
+    cfg: ModelConfig
+    head_tp: bool
+    chunk_k: int
+    mode: str                 # "train" | "prefill" | "decode"
+    unroll: bool = False      # unroll inner stacks (roofline accounting)
+    pad_heads_to: int = 0     # padded head-TP (see attention.attend)
+
+
+def _moe_block_apply(x, p, ctx, positions, cache):
+    h = layers.apply_norm(x, p["ln1"], ctx.cfg)
+    a, new_cache = attention.attend(
+        h, p["attn"], ctx.cfg, positions=positions, causal=True, window=0,
+        cache=cache, head_tp=ctx.head_tp, chunk_k=ctx.chunk_k,
+        pad_heads_to=ctx.pad_heads_to)
+    x = x + a
+    h = layers.apply_norm(x, p["ln2"], ctx.cfg)
+    f, aux = moe_mod.apply_moe(h, p["moe"], ctx.cfg)
+    return x + f, new_cache, aux
+
+
+def _apply_block(kind: str, x, p, ctx: _Ctx, positions, cache,
+                 shared_block=None, enc_kv=None):
+    """One super-block. Returns (x, new_cache, aux_loss)."""
+    cfg = ctx.cfg
+    aux = jnp.asarray(0.0, jnp.float32)
+    if kind == "dense":
+        x, nc, _ = _apply_dense(x, p, cfg, positions=positions, window=0,
+                                cache=cache, head_tp=ctx.head_tp,
+                                chunk_k=ctx.chunk_k,
+                                pad_heads_to=ctx.pad_heads_to)
+        return x, nc, aux
+    if kind == "dense_local":
+        x, nc, _ = _apply_dense(x, p, cfg, positions=positions,
+                                window=cfg.sliding_window, cache=cache,
+                                head_tp=ctx.head_tp, chunk_k=ctx.chunk_k,
+                                pad_heads_to=ctx.pad_heads_to)
+        return x, nc, aux
+    if kind == "gemma":
+        loc_caches = cache["local"] if cache is not None else None
+        new_loc = []
+        k_loc = cfg.global_every - 1
+
+        def loc_body(carry, xs):
+            h = carry
+            lp, lc = xs
+            h, nc, _ = _apply_dense(h, lp, cfg, positions=positions,
+                                    window=cfg.sliding_window, cache=lc,
+                                    head_tp=ctx.head_tp, chunk_k=ctx.chunk_k)
+            return h, nc
+
+        if loc_caches is None:
+            x, _ = _maybe_scan(
+                lambda c, lp: (loc_body(c, (lp, None))[0], 0.0),
+                x, p["local"], k_loc, ctx.unroll)
+            new_cache = None
+            x, _, _ = _apply_dense(x, p["global"], cfg, positions=positions,
+                                   window=0, cache=None, head_tp=ctx.head_tp,
+                                   chunk_k=ctx.chunk_k)
+        else:
+            x, new_loc = _maybe_scan(loc_body, x, (p["local"], loc_caches),
+                                     k_loc, ctx.unroll)
+            x, new_glob, _ = _apply_dense(
+                x, p["global"], cfg, positions=positions, window=0,
+                cache=cache["global"], head_tp=ctx.head_tp, chunk_k=ctx.chunk_k)
+            new_cache = {"local": new_loc, "global": new_glob}
+        return x, new_cache, aux
+    if kind == "moe":
+        return _moe_block_apply(x, p, ctx, positions, cache)
+    if kind == "moe_pair":
+        dc = cache["dense"] if cache is not None else None
+        mc = cache["moe"] if cache is not None else None
+        x, ndc, _ = _apply_dense(x, p["dense"], cfg, positions=positions,
+                                 window=0, cache=dc, head_tp=ctx.head_tp,
+                                 chunk_k=ctx.chunk_k)
+        x, nmc, aux = _moe_block_apply(x, p["moe"], ctx, positions, mc)
+        new_cache = ({"dense": ndc, "moe": nmc}
+                     if cache is not None else None)
+        return x, new_cache, aux
+    if kind == "mamba":
+        x, ns = _apply_mamba(x, p, cfg, state=cache)
+        return x, ns, aux
+    if kind == "zamba":
+        m_caches = cache["mamba"] if cache is not None else None
+
+        def m_body(carry, xs):
+            h = carry
+            mp, mc = xs
+            h, ns = _apply_mamba(h, mp, cfg, state=mc)
+            return h, ns
+
+        if m_caches is None:
+            x, _ = _maybe_scan(lambda c, mp: (m_body(c, (mp, None))[0], 0.0),
+                               x, p["mamba"], cfg.shared_attn_every,
+                               ctx.unroll)
+            new_m = None
+        else:
+            x, new_m = _maybe_scan(m_body, x, (p["mamba"], m_caches),
+                                   cfg.shared_attn_every, ctx.unroll)
+        sc = cache["shared"] if cache is not None else None
+        x, nsc, _ = _apply_dense(x, shared_block, cfg, positions=positions,
+                                 window=0, cache=sc, head_tp=ctx.head_tp,
+                                 chunk_k=ctx.chunk_k)
+        new_cache = ({"mamba": new_m, "shared": nsc}
+                     if cache is not None else None)
+        return x, new_cache, aux
+    if kind == "enc":
+        x, _, _ = _apply_dense(x, p, cfg, positions=positions, window=0,
+                               cache=None, head_tp=ctx.head_tp,
+                               chunk_k=ctx.chunk_k, causal=False,
+                               use_rope=False)
+        return x, None, aux
+    if kind == "dec":
+        h = layers.apply_norm(x, p["ln1"], cfg)
+        sc = cache["self"] if cache is not None else None
+        a, new_sc = attention.attend(
+            h, p["self_attn"], cfg, positions=positions, causal=True,
+            cache=sc, head_tp=ctx.head_tp, use_rope=False,
+            chunk_k=ctx.chunk_k)
+        x = x + a
+        h = layers.apply_norm(x, p["ln_x"], cfg)
+        if cache is not None and "cross_k" in cache:
+            kv = (cache["cross_k"], cache["cross_v"])
+        else:
+            # per-layer cross KV from the encoder output
+            B_, Se, _ = enc_kv.shape
+            K_, hd_ = cfg.n_kv_heads, cfg.head_dim
+            kv = ((enc_kv @ p["cross_attn"]["wk"]).reshape(B_, Se, K_, hd_),
+                  (enc_kv @ p["cross_attn"]["wv"]).reshape(B_, Se, K_, hd_))
+        a, _ = attention.attend(
+            h, p["cross_attn"], cfg, positions=positions, causal=False,
+            cache=None, head_tp=ctx.head_tp, use_rope=False, kv_override=kv,
+            chunk_k=ctx.chunk_k)
+        x = x + a
+        h = layers.apply_norm(x, p["ln2"], cfg)
+        x = x + layers.apply_mlp(h, p["mlp"], cfg)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["self"] = new_sc
+        return x, new_cache, aux
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Model wrapper
+# ---------------------------------------------------------------------------
+
+class LanguageModel:
+    """Segment-scanned LM (decoder-only, enc-dec, ssm, hybrid, moe)."""
+
+    def __init__(self, cfg: ModelConfig, *, head_tp: Optional[bool] = None,
+                 chunk_k: int = 1024, remat: str = "none",
+                 scan_layers: bool = True, pad_heads_to: int = 0):
+        self.cfg = cfg
+        self.plan = segment_plan(cfg)
+        # head-TP needs q heads divisible by TP; kv handled separately.
+        tp = 16
+        self.head_tp = (cfg.n_heads % tp == 0) if head_tp is None else head_tp
+        self.chunk_k = chunk_k
+        self.remat = remat
+        # scan_layers=False unrolls every layer stack in Python: used by the
+        # roofline pass, where cost_analysis must see each layer's ops
+        # (scan bodies are counted once regardless of trip count).
+        self.scan_layers = scan_layers
+        self.pad_heads_to = pad_heads_to
+
+    def _seg_scan(self, body, carry, xs_tree, count: int):
+        """lax.scan or Python unroll over a stacked segment."""
+        if self.scan_layers:
+            return jax.lax.scan(body, carry, xs_tree)
+        ys = []
+        for i in range(count):
+            xs_i = jax.tree_util.tree_map(lambda l: l[i], xs_tree)
+            carry, y = body(carry, xs_i)
+            ys.append(y)
+        try:
+            ys_stacked = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *ys) if ys else None
+        except Exception:
+            ys_stacked = None
+        return carry, ys_stacked
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key=None, abstract: bool = False) -> PyTree:
+        return init_params(self.cfg, key, abstract)
+
+    def param_count(self, params=None) -> int:
+        params = params or self.init(abstract=True)
+        return sum(int(jnp.prod(jnp.asarray(l.shape)))
+                   for l in jax.tree_util.tree_leaves(params)
+                   if hasattr(l, "shape"))
+
+    # -- embedding / head -----------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if "embeds" in batch:                     # stubbed frontend (audio/vlm)
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        else:
+            tokens = batch["tokens"]
+            x = jnp.take(params["emb"], tokens, axis=0)
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(x.dtype)
+        if cfg.learned_pos_emb and "pos_emb" in params:
+            pos = batch.get("positions")
+            if pos is None:
+                pos = jnp.arange(x.shape[1])[None, :]
+            if pos.ndim == 3:
+                pos = pos[:, 0]
+            x = x + jnp.take(params["pos_emb"], pos, axis=0).astype(x.dtype)
+        return constrain(x, "batch", None, None)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = layers.apply_norm(x, params["final_norm"], cfg)
+        table = params.get("lm_head", params["emb"])
+        logits = jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.float32)
+        logits = layers.softcap(logits, cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:
+            # mask padding rows out of softmax/argmax
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        return constrain(logits, "batch", None, "model")
+
+    def _positions(self, batch, length=None, S=1):
+        cfg = self.cfg
+        if "positions" in batch:
+            return batch["positions"]
+        if length is not None:
+            pos = length + jnp.arange(S)[None, :]        # (1, S) broadcast
+            B = (batch.get("tokens").shape[0]
+                 if "tokens" in batch else batch["embeds"].shape[0])
+            pos = jnp.broadcast_to(pos, (B, S))
+        else:
+            tk = batch["tokens"] if "tokens" in batch else batch["embeds"]
+            B, S = tk.shape[0], tk.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[:, None, :], (pos.shape[0], 3, S))
+        return pos
+
+    # -- encoder (whisper) ----------------------------------------------------
+    def _encode(self, params, batch, ctx):
+        cfg = self.cfg
+        x = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        if "enc_pos_emb" in params:
+            x = x + params["enc_pos_emb"][None, :x.shape[1]].astype(x.dtype)
+        x = constrain(x, "batch", None, None)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                               (x.shape[0], x.shape[1]))
+        seg_idx = 0          # encoder is always seg0
+        p_seg = params[f"seg{seg_idx}"]
+
+        def body(carry, lp):
+            h, _, _ = _apply_block("enc", carry, lp, ctx, pos, None)
+            return h, 0.0
+
+        body = self._maybe_remat(body)
+        x, _ = self._seg_scan(body, x, p_seg, self.plan[seg_idx].count)
+        return layers.apply_norm(x, params["final_norm"], cfg) \
+            if False else x
+
+    def _maybe_remat(self, body):
+        if self.remat in ("block", "full"):
+            return jax.checkpoint(body)
+        return body
+
+    # -- forward (train / prefill without cache) ------------------------------
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        ctx = _Ctx(cfg, self.head_tp, self.chunk_k, "train",
+                   unroll=not self.scan_layers,
+                   pad_heads_to=self.pad_heads_to)
+        aux_total = jnp.asarray(0.0, jnp.float32)
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch, ctx)
+        x = self._embed(params, batch)
+        pos = self._positions(batch)
+        shared = params.get("shared_block")
+
+        for i, seg in enumerate(self.plan):
+            if cfg.family == "encdec" and seg.kind == "enc":
+                continue                       # handled by _encode
+            p_seg = params[f"seg{i}"]
+
+            def body(carry, lp, kind=seg.kind):
+                h, aux = carry
+                h, _, a = _apply_block(kind, h, lp, ctx, pos, None,
+                                       shared_block=shared, enc_kv=enc_out)
+                return (h, aux + a), 0.0
+
+            body = self._maybe_remat(body)
+            (x, aux_total), _ = self._seg_scan(body, (x, aux_total), p_seg,
+                                               seg.count)
+
+        logits = self._head(params, x)
+        return logits, aux_total
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.forward(params, batch)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        ce = cross_entropy(logits, labels)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch_size: int, s_max: int, *, abstract=False,
+                   prefilled_to: int = 0) -> PyTree:
+        """Cache pytree matching the segment plan. For dry-run decode cells we
+        size caches at s_max and (abstractly) mark them filled."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        caches = {}
+
+        def full_cache():
+            return attention.init_kv_cache(batch_size, s_max, K, hd, dtype,
+                                           abstract)
+
+        def ring_cache():
+            return attention.init_ring_cache(batch_size, cfg.sliding_window,
+                                             K, hd, dtype, abstract)
+
+        def stack(tree, count):
+            return jax.tree_util.tree_map(
+                lambda l: (jax.ShapeDtypeStruct((count,) + tuple(l.shape),
+                                                l.dtype) if abstract
+                           else jnp.broadcast_to(l, (count,) + l.shape).copy()),
+                tree)
+
+        for i, seg in enumerate(self.plan):
+            kind = seg.kind
+            if kind in ("dense", "moe"):
+                caches[f"seg{i}"] = stack(full_cache(), seg.count)
+            elif kind == "dense_local":
+                caches[f"seg{i}"] = stack(ring_cache(), seg.count)
+            elif kind == "gemma":
+                one = {"local": stack(ring_cache(), cfg.global_every - 1),
+                       "global": full_cache()}
+                caches[f"seg{i}"] = stack(one, seg.count)
+            elif kind == "moe_pair":
+                one = {"dense": full_cache(), "moe": full_cache()}
+                caches[f"seg{i}"] = stack(one, seg.count)
+            elif kind == "mamba":
+                caches[f"seg{i}"] = stack(
+                    ssm_mod.init_ssm_state(batch_size, cfg, dtype, abstract),
+                    seg.count)
+            elif kind == "zamba":
+                one = {"mamba": stack(
+                    ssm_mod.init_ssm_state(batch_size, cfg, dtype, abstract),
+                    cfg.shared_attn_every),
+                    "shared": full_cache()}
+                caches[f"seg{i}"] = stack(one, seg.count)
+            elif kind == "enc":
+                continue
+            elif kind == "dec":
+                Se = cfg.encoder_seq_len
+                ck = (jax.ShapeDtypeStruct((batch_size, Se, K, hd), dtype)
+                      if abstract else
+                      jnp.zeros((batch_size, Se, K, hd), dtype))
+                one = {"self": full_cache(), "cross_k": ck, "cross_v": ck}
+                caches[f"seg{i}"] = stack(one, seg.count)
+        return caches
+
+    def decode_step(self, params, batch, caches) -> Tuple[jnp.ndarray, PyTree]:
+        """One-token step. batch: {"tokens": (B, 1)} (+ positions for mrope).
+        caches: from init_cache / prefill. Returns (logits (B,1,V), caches)."""
+        cfg = self.cfg
+        ctx = _Ctx(cfg, self.head_tp, self.chunk_k, "decode",
+                   unroll=not self.scan_layers)
+        x = self._embed_decode(params, batch, caches)
+        shared = params.get("shared_block")
+        length = self._cache_length(caches)
+        pos = self._positions(batch, length=length, S=x.shape[1])
+        new_caches = {}
+        for i, seg in enumerate(self.plan):
+            if seg.kind == "enc":
+                continue
+            p_seg = params[f"seg{i}"]
+            seg_cache = caches[f"seg{i}"]
+
+            def body(carry, xs, kind=seg.kind):
+                h = carry
+                lp, lc = xs
+                h, nc, _ = _apply_block(kind, h, lp, ctx, pos, lc,
+                                        shared_block=shared)
+                return h, nc
+
+            x, new_caches[f"seg{i}"] = self._seg_scan(
+                body, x, (p_seg, seg_cache), seg.count)
+        logits = self._head(params, x)
+        return logits, new_caches
+
+    def _embed_decode(self, params, batch, caches):
+        cfg = self.cfg
+        if cfg.learned_pos_emb:
+            length = self._cache_length(caches)
+            tokens = batch["tokens"]
+            x = jnp.take(params["emb"], tokens, axis=0)
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(x.dtype)
+            pos_row = jax.lax.dynamic_slice_in_dim(
+                params["pos_emb"], length % cfg.max_seq_len, 1, axis=0)
+            return constrain(x + pos_row[None].astype(x.dtype),
+                             "batch", None, None)
+        return self._embed(params, batch)
+
+    def _cache_length(self, caches):
+        for leaf in jax.tree_util.tree_leaves(caches):
+            pass
+        # find any KVCache/RingKVCache length: traverse structure
+        def find(node):
+            if isinstance(node, (KVCache, RingKVCache)):
+                lf = node.length
+                return lf.reshape(-1)[0] if lf.ndim else lf
+            if isinstance(node, dict):
+                for v in node.values():
+                    r = find(v)
+                    if r is not None:
+                        return r
+            if isinstance(node, (list, tuple)):
+                for v in node:
+                    r = find(v)
+                    if r is not None:
+                        return r
+            return None
+        r = find(caches)
+        return r if r is not None else jnp.zeros((), jnp.int32)
+
+    def prefill(self, params, batch, caches) -> Tuple[jnp.ndarray, PyTree]:
+        """Prompt pass that fills caches. batch: {"tokens": (B, S)}."""
+        cfg = self.cfg
+        ctx = _Ctx(cfg, self.head_tp, self.chunk_k, "prefill",
+                   unroll=not self.scan_layers,
+                   pad_heads_to=self.pad_heads_to)
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch, ctx)
+        x = self._embed(params, batch)
+        pos = self._positions(batch)
+        shared = params.get("shared_block")
+        new_caches = {}
+        for i, seg in enumerate(self.plan):
+            if seg.kind == "enc":
+                continue
+            p_seg = params[f"seg{i}"]
+            seg_cache = caches[f"seg{i}"]
+            if seg.kind == "dec" and enc_out is not None:
+                # store per-layer cross KV alongside self cache
+                K, hd = cfg.n_kv_heads, cfg.head_dim
+                B_, Se, _ = enc_out.shape
+
+                def body(carry, xs):
+                    h = carry
+                    lp, lc = xs
+                    ck = (enc_out @ lp["cross_attn"]["wk"]).reshape(B_, Se, K, hd)
+                    cv = (enc_out @ lp["cross_attn"]["wv"]).reshape(B_, Se, K, hd)
+                    lc = dict(lc)
+                    lc["cross_k"], lc["cross_v"] = ck, cv
+                    h, nc, _ = _apply_block("dec", h, lp, ctx, pos, lc)
+                    return h, nc
+            else:
+                def body(carry, xs, kind=seg.kind):
+                    h = carry
+                    lp, lc = xs
+                    h, nc, _ = _apply_block(kind, h, lp, ctx, pos, lc,
+                                            shared_block=shared)
+                    return h, nc
+            body = self._maybe_remat(body)
+            x, new_caches[f"seg{i}"] = self._seg_scan(
+                body, x, (p_seg, seg_cache), seg.count)
+        logits = self._head(params, x[:, -1:])
+        return logits, new_caches
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token CE. logits (B,S,V) fp32 (possibly vocab-sharded);
+    labels (B,S). logsumexp reduces over the sharded vocab dim -> psum."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_model(cfg: ModelConfig, **kw) -> LanguageModel:
+    return LanguageModel(cfg, **kw)

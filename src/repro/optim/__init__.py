@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer, make_optimizer, sgd, momentum, adam, adamw, adafactor, adam8bit,
+    global_norm, clip_by_global_norm, apply_updates,
+)
+from repro.optim.schedules import make_schedule
+
+__all__ = [
+    "Optimizer", "make_optimizer", "sgd", "momentum", "adam", "adamw",
+    "adafactor", "adam8bit", "global_norm", "clip_by_global_norm",
+    "apply_updates", "make_schedule",
+]

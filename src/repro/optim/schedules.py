@@ -1,0 +1,45 @@
+"""Learning-rate schedules as pure functions of the step counter.
+
+Includes WSD (warmup-stable-decay), the schedule MiniCPM trains with
+[arXiv:2404.06395]: linear warmup -> constant plateau -> decay over the final
+`decay_fraction` of training down to `min_lr_ratio * lr`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(cfg):
+    """cfg: OptimizerConfig -> f(step) -> lr (jnp scalar)."""
+    base = cfg.lr
+    warm = max(int(cfg.warmup_steps), 0)
+    total = max(int(cfg.total_steps), 1)
+    floor = cfg.min_lr_ratio * base
+
+    def warmup_part(step):
+        if warm == 0:
+            return jnp.asarray(1.0, jnp.float32)
+        return jnp.minimum((step + 1.0) / warm, 1.0).astype(jnp.float32)
+
+    if cfg.schedule == "constant":
+        def f(step):
+            return base * warmup_part(step)
+    elif cfg.schedule == "linear_warmup":
+        def f(step):
+            return base * warmup_part(step)
+    elif cfg.schedule == "cosine":
+        def f(step):
+            t = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+            return (floor + (base - floor) * cos) * warmup_part(step)
+    elif cfg.schedule == "wsd":
+        decay_steps = max(int(total * cfg.decay_fraction), 1)
+        stable_end = total - decay_steps
+
+        def f(step):
+            t = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+            lr = base - (base - floor) * t            # linear decay tail
+            return lr * warmup_part(step)
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    return f

@@ -1,0 +1,6 @@
+from repro.train.state import TrainState
+from repro.train.step import make_train_step, make_dmd_step, resolve_grad_accum
+from repro.train.loop import Trainer
+
+__all__ = ["TrainState", "make_train_step", "make_dmd_step",
+           "resolve_grad_accum", "Trainer"]

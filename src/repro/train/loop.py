@@ -1,0 +1,121 @@
+"""Host-side training loop: DMD schedule, checkpointing, fault tolerance.
+
+The loop is deliberately thin: all math lives in jitted steps. Host-side
+responsibilities:
+  * the DMD schedule (warmup / cooldown / m-window / jump) via DMDAccelerator,
+  * checkpoint cadence + atomic save + resume (bit-exact, tested),
+  * preemption (SIGTERM) -> save-and-exit,
+  * failure injection for tests (raise at step k, resume from disk).
+
+Determinism contract: the data iterator is a pure function of the step index
+(see repro.data), so a restarted worker replays identical batches — the
+straggler/elastic-restart story depends on this.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accelerator import DMDAccelerator
+from repro.core import snapshots as snap
+from repro.optim import make_optimizer
+from repro.train.state import TrainState
+from repro.train.step import make_dmd_step, make_train_step
+
+PyTree = Any
+
+
+class Trainer:
+    def __init__(self, model, acfg, *, mesh=None, loss_fn=None,
+                 checkpoint_dir: Optional[str] = None,
+                 fail_at_step: Optional[int] = None):
+        self.model = model
+        self.acfg = acfg
+        self.mesh = mesh
+        self.acc = DMDAccelerator(acfg.dmd)
+        self.opt = make_optimizer(acfg.optimizer)
+        self.checkpoint_dir = checkpoint_dir or acfg.train.checkpoint_dir
+        self.fail_at_step = fail_at_step
+        self._preempted = False
+
+        self.train_step = jax.jit(
+            make_train_step(model, acfg, mesh=mesh, loss_fn=loss_fn),
+            donate_argnums=(0,))
+        self.dmd_step = jax.jit(make_dmd_step(acfg), donate_argnums=(0,))
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self, key=None) -> TrainState:
+        params = self.model.init(key if key is not None
+                                 else jax.random.PRNGKey(self.acfg.train.seed))
+        opt_state = self.opt.init(params)
+        bufs = self.acc.init(params) if self.acfg.dmd.enabled else None
+        return TrainState(params, opt_state, jnp.zeros((), jnp.int32), bufs)
+
+    # -- checkpointing --------------------------------------------------------
+    def save(self, state: TrainState, step: int):
+        if not self.checkpoint_dir:
+            return
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(self.checkpoint_dir, state, step,
+                        keep=self.acfg.train.keep_checkpoints)
+
+    def restore(self, state_like: Optional[TrainState] = None
+                ) -> Optional[TrainState]:
+        if not self.checkpoint_dir:
+            return None
+        from repro.checkpoint import restore_checkpoint
+        template = state_like if state_like is not None else self.init_state()
+        return restore_checkpoint(self.checkpoint_dir, template,
+                                  mesh=self.mesh)
+
+    def _install_preempt_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass                          # not on the main thread (tests)
+
+    # -- the loop ---------------------------------------------------------------
+    def fit(self, batches: Iterator[PyTree], steps: int,
+            state: Optional[TrainState] = None,
+            log_every: int = 0, on_metrics: Optional[Callable] = None
+            ) -> TrainState:
+        self._install_preempt_handler()
+        resumed = self.restore(state)
+        if resumed is not None:
+            state = resumed
+        elif state is None:
+            state = self.init_state()
+        start_step = int(state.step)
+        ckpt_every = self.acfg.train.checkpoint_every
+
+        for step in range(start_step, steps):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = next(batches)
+            slot = self.acc.slot(step) if self.acfg.dmd.enabled else -1
+            state, metrics = self.train_step(state, batch,
+                                             jnp.asarray(slot, jnp.int32))
+            if self.acfg.dmd.enabled and self.acc.should_apply(step):
+                relax = jnp.asarray(
+                    self.acc.relax_for_round(self.acc.round_index(step)),
+                    jnp.float32)
+                state, dmd_info = self.dmd_step(state, relax)
+                metrics.update(dmd_info)
+            if log_every and step % log_every == 0:
+                loss = float(metrics["loss"])
+                print(f"step {step}: loss={loss:.6f}")
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            if ckpt_every and (step + 1) % ckpt_every == 0:
+                self.save(state, step + 1)
+            if self._preempted:
+                self.save(state, step + 1)
+                print(f"preempted: checkpoint saved at step {step + 1}")
+                break
+        return state

@@ -1,0 +1,15 @@
+"""Training state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    step: jnp.ndarray          # scalar int32
+    dmd_buffers: PyTree        # snapshot buffers (None when DMD disabled)

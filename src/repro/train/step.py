@@ -1,0 +1,142 @@
+"""Jitted train / DMD steps.
+
+train_step:
+  * microbatch gradient accumulation via lax.scan (per-arch grad_accum,
+    resolved against the mesh so each microbatch keeps >= 1 row per batch
+    shard),
+  * fp32 gradient accumulators,
+  * fused DMD snapshot recording (lax.cond'd on the slot, so warmup/cooldown
+    phases reuse the same executable),
+  * optional int8-compressed cross-pod gradient sync (distributed/gradsync).
+
+dmd_step: the paper's jump — Gram + coefficients + combine over the whole
+param pytree, with optional optimizer-moment reset.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dmd as dmd_math, snapshots as snap
+from repro.distributed.sharding import constrain
+from repro.optim import apply_updates, make_optimizer
+from repro.train.state import TrainState
+
+PyTree = Any
+
+
+def resolve_grad_accum(acfg, mesh, global_batch: int) -> int:
+    """Largest accum factor <= config that keeps >=1 row per batch shard."""
+    ga = max(acfg.parallel.grad_accum, 1)
+    shards = 1
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        shards = sizes.get("data", 1) * sizes.get("pod", 1)
+    while ga > 1 and (global_batch // ga) % shards != 0:
+        ga //= 2
+    return max(min(ga, global_batch // shards), 1)
+
+
+def make_train_step(model, acfg, *, mesh=None, global_batch=None,
+                    loss_fn: Callable = None, donate: bool = True):
+    """Returns train_step(state, batch, dmd_slot) -> (state, metrics)."""
+    opt = make_optimizer(acfg.optimizer)
+    gb = global_batch or acfg.train.global_batch
+    ga = resolve_grad_accum(acfg, mesh, gb)
+    dmd_on = acfg.dmd.enabled
+    _loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
+
+    def train_step(state: TrainState, batch: PyTree, dmd_slot) -> tuple:
+        params = state.params
+
+        def one_loss(p, mb):
+            return _loss(p, mb)
+
+        if ga > 1:
+            def reshape_mb(x):
+                return x.reshape((ga, x.shape[0] // ga) + x.shape[1:])
+            mbs = jax.tree_util.tree_map(reshape_mb, batch)
+            mbs = jax.tree_util.tree_map(
+                lambda x: constrain(x, None, "batch"), mbs)
+
+            def mb_step(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(one_loss)(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(mb_step, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / ga, gsum)
+            loss = lsum / ga
+        else:
+            loss, grads = jax.value_and_grad(one_loss)(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+
+        if acfg.parallel.grad_compression == "int8" and mesh is not None \
+                and "pod" in mesh.axis_names:
+            from repro.distributed.gradsync import int8_psum_grads
+            grads = int8_psum_grads(grads, mesh)
+
+        updates, opt_state = opt.update(grads, state.opt_state, params,
+                                        state.step)
+        params = apply_updates(params, updates)
+
+        buffers = state.dmd_buffers
+        if dmd_on and buffers is not None:
+            def write(bufs):
+                return snap.record(bufs, params, jnp.maximum(dmd_slot, 0))
+            buffers = jax.lax.cond(dmd_slot >= 0, write, lambda b: b, buffers)
+
+        new_state = TrainState(params, opt_state, state.step + 1, buffers)
+        gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
+                             for g in jax.tree_util.tree_leaves(grads)))
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_dmd_step(acfg):
+    """Returns dmd_step(state, relax) -> (state, info): the paper's jump."""
+    cfg = acfg.dmd
+    opt = make_optimizer(acfg.optimizer)
+
+    def dmd_step(state: TrainState, relax) -> tuple:
+        def one(path, p, buf):
+            if buf is None:
+                return p, jnp.asarray(0, jnp.int32)
+            nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
+            gram = dmd_math.gram_matrix(buf, anchor=cfg.anchor,
+                                        stack_dims=nstack,
+                                        upcast=cfg.gram_upcast)
+            c, info = dmd_math.dmd_coefficients(
+                gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
+                clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
+                affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
+            w = dmd_math.combine_snapshots(buf, c, stack_dims=nstack,
+                                              upcast=cfg.gram_upcast)
+            return w.astype(p.dtype), jnp.mean(info["rank"].astype(jnp.float32))
+
+        out = jax.tree_util.tree_map_with_path(
+            one, state.params, state.dmd_buffers,
+            is_leaf=lambda x: x is None)
+        is_pair = lambda x: (isinstance(x, tuple) and len(x) == 2
+                             and not isinstance(x[0], tuple))
+        params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
+        ranks = jnp.stack([jnp.mean(o[1].astype(jnp.float32)) for o in
+                           jax.tree_util.tree_leaves(out, is_leaf=is_pair)
+                           ]) if cfg.enabled else jnp.zeros((1,))
+        opt_state = state.opt_state
+        if cfg.reset_opt_state:
+            opt_state = opt.init(params)
+        new_state = TrainState(params, opt_state, state.step,
+                               state.dmd_buffers)
+        return new_state, {"mean_rank": jnp.mean(ranks)}
+
+    return dmd_step

@@ -1,0 +1,143 @@
+"""Subprocess worker for distributed tests (run with
+XLA_FLAGS=--xla_force_host_platform_device_count=N).
+
+Modes (argv[1]):
+  train <ndev> <ckpt_dir?>   3 sharded train steps; prints loss + checksum
+  gram                        sharded DMD gram == numpy
+  gradsync                    int8 cross-pod psum correctness
+  elastic_save <dir>          train 2 steps on (2,2) mesh, checkpoint
+  elastic_restore <dir>       restore on (4,) x model=2... different mesh,
+                              run 1 more step, print checksum
+"""
+import os
+import sys
+
+n_dev = os.environ.get("TEST_NDEV", "8")
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.configs.base import DMDConfig, OptimizerConfig, TrainConfig
+from repro.data.tokens import batch_for_step
+from repro.distributed.sharding import mesh_context, partition_specs
+from repro.models.transformer import LanguageModel
+from repro.train import Trainer
+from repro.train.state import TrainState
+
+
+def small_acfg():
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
+                 n_heads=4, n_kv_heads=2, head_dim=8)
+    return dataclasses.replace(
+        acfg, model=mc,
+        dmd=DMDConfig(enabled=True, m=4, s=8, tol=1e-4, warmup_steps=2,
+                      cooldown_steps=0),
+        optimizer=OptimizerConfig(name="adam", lr=1e-3, schedule="constant"),
+        parallel=dataclasses.replace(acfg.parallel, grad_accum=2,
+                                     remat="none"),
+        train=TrainConfig(global_batch=8, seq_len=16))
+
+
+def checksum(tree):
+    return float(sum(jnp.sum(jnp.abs(l.astype(jnp.float32)))
+                     for l in jax.tree_util.tree_leaves(tree)))
+
+
+def run_train(mesh_shape, axis_names, steps=6):
+    acfg = small_acfg()
+    mesh = jax.make_mesh(mesh_shape, axis_names)
+    model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+    with mesh_context(mesh):
+        trainer = Trainer(model, acfg, mesh=mesh)
+        state = trainer.init_state()
+        losses = []
+        from repro.train.step import make_train_step
+        for step in range(steps):
+            batch = batch_for_step(0, step, 8, 16, acfg.model.vocab_size)
+            slot = trainer.acc.slot(step)
+            state, m = trainer.train_step(state, batch,
+                                          jnp.asarray(slot, jnp.int32))
+            if trainer.acc.should_apply(step):
+                state, _ = trainer.dmd_step(state, jnp.asarray(1.0))
+            losses.append(float(m["loss"]))
+        return losses, checksum(state.params)
+
+
+def main():
+    mode = sys.argv[1]
+    if mode == "train":
+        shape = sys.argv[2]
+        if shape == "2x4":
+            losses, cs = run_train((2, 4), ("data", "model"))
+        elif shape == "1x1":
+            losses, cs = run_train((1, 1), ("data", "model"))
+        elif shape == "2x2x2":
+            losses, cs = run_train((2, 2, 2), ("pod", "data", "model"))
+        print("LOSSES", " ".join(f"{l:.6f}" for l in losses))
+        print("CHECKSUM", f"{cs:.4f}")
+    elif mode == "gram":
+        from repro.core.dmd import gram_matrix
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(0)
+        S = rng.normal(size=(6, 64, 32)).astype(np.float32)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sharded = jax.device_put(
+            S, NamedSharding(mesh, P(None, "data", "model")))
+        with jax.set_mesh(mesh):
+            g = jax.jit(lambda s: gram_matrix(s, anchor="first"))(sharded)
+        flat = S.reshape(6, -1)
+        flat = flat - flat[:1]
+        ref = flat @ flat.T
+        err = float(np.abs(np.asarray(g) - ref).max() / np.abs(ref).max())
+        print("GRAM_ERR", f"{err:.2e}")
+        assert err < 1e-5
+    elif mode == "gradsync":
+        from repro.distributed.gradsync import int8_psum_grads
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        rng = np.random.default_rng(0)
+        g = {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
+        with jax.set_mesh(mesh):
+            synced = jax.jit(lambda t: int8_psum_grads(t, mesh))(g)
+        # replicated input: mean over pods == input (up to int8 quantization)
+        err = float(jnp.max(jnp.abs(synced["w"] - g["w"])))
+        scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+        print("GRADSYNC_ERR", f"{err:.4f}", "TOL", f"{scale:.4f}")
+        assert err <= scale * 1.01 + 1e-6
+    elif mode == "elastic_save":
+        ckpt = sys.argv[2]
+        acfg = small_acfg()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
+                       for s in range(100))
+            state = trainer.fit(batches, steps=2)
+            trainer.save(state, 2)
+        print("SAVED", checksum(state.params))
+    elif mode == "elastic_restore":
+        ckpt = sys.argv[2]
+        acfg = small_acfg()
+        mesh = jax.make_mesh((4, 2), ("data", "model"))   # DIFFERENT topology
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            state = trainer.restore()
+            assert state is not None and int(state.step) == 2
+            batch = batch_for_step(0, 2, 8, 16, acfg.model.vocab_size)
+            state, m = trainer.train_step(state, batch,
+                                          jnp.asarray(-1, jnp.int32))
+            assert np.isfinite(float(m["loss"]))
+        print("RESTORED", checksum(state.params), f"{float(m['loss']):.6f}")
+    else:
+        raise SystemExit(f"unknown mode {mode}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Checkpointing: roundtrip, pruning, atomicity, bit-exact resume."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (latest_step, list_checkpoints,
+                              restore_checkpoint, save_checkpoint)
+from repro.train.state import TrainState
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    params = {"emb": jax.random.normal(k, (8, 4)),
+              "blk": {"w": jax.random.normal(k, (4, 4)),
+                      "b": jnp.zeros(4)}}
+    opt = {"m": jax.tree_util.tree_map(jnp.zeros_like, params),
+           "v": jax.tree_util.tree_map(jnp.ones_like, params)}
+    return TrainState(params, opt, jnp.asarray(7, jnp.int32), None)
+
+
+def test_roundtrip(tmp_path):
+    st = _state()
+    save_checkpoint(tmp_path, st, 7)
+    back = restore_checkpoint(tmp_path, _state(seed=1))
+    assert int(back.step) == 7
+    for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                    jax.tree_util.tree_leaves(back.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_none_leaves_roundtrip(tmp_path):
+    st = _state()
+    save_checkpoint(tmp_path, st, 1)
+    back = restore_checkpoint(tmp_path, st)
+    assert back.dmd_buffers is None
+
+
+def test_keep_prunes_old(tmp_path):
+    st = _state()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, st, s, keep=2)
+    assert list_checkpoints(tmp_path) == [4, 5]
+    assert latest_step(tmp_path) == 5
+
+
+def test_no_partial_dirs_on_disk(tmp_path):
+    st = _state()
+    save_checkpoint(tmp_path, st, 3)
+    entries = [p for p in os.listdir(tmp_path) if p.startswith(".tmp_")]
+    assert entries == []
+
+
+def test_restore_missing_returns_none(tmp_path):
+    assert restore_checkpoint(tmp_path / "nothing", _state()) is None

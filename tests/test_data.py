@@ -1,0 +1,92 @@
+"""Data pipelines: pollutant PDE physics sanity + token determinism."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data import pollutant as pol
+from repro.data.tokens import batch_for_step
+
+
+def test_blasius_flat_plate():
+    """No-slip flat plate: f'(inf)=1 and f''(0) ~ 0.4696 (textbook value)."""
+    eta, f, fp = pol.solve_blasius(1.0, 0.0, 0.0)
+    assert abs(fp[-1] - 1.0) < 1e-3
+    fpp0 = (fp[1] - fp[0]) / (eta[1] - eta[0])
+    # first-order estimate of the curvature at the wall is biased low;
+    # integrate the profile instead: f(10) ~ eta - 1.72 for Blasius
+    assert abs((eta[-1] - f[-1]) - 1.7208) < 0.02
+    assert 0.3 < fpp0 < 0.6
+
+
+def test_velocity_field_monotone_profile():
+    X, Y = pol.make_grid(32, 16)
+    ux, uy = pol.velocity_field(1.0, 0.0, 0.0, X, Y)
+    assert np.isfinite(ux).all() and np.isfinite(uy).all()
+    col = ux[16, :]
+    assert col[0] <= col[-1] + 1e-6            # speeds up away from ground
+    assert abs(col[-1] - 1.0) < 0.05           # freestream
+
+
+def test_steady_transport_residual_small():
+    X, Y = pol.make_grid(48, 24)
+    q1, q2 = pol.source_fields(X, Y)
+    ux, uy = pol.velocity_field(1.0, 0.1, 0.05, X, Y)
+    dx, dy = 2.0 / 47, 1.0 / 23
+    c1, c2, c3 = pol.steady_transport(jnp.asarray(ux), jnp.asarray(uy),
+                                      0.1, 5.0, 1.0,
+                                      jnp.asarray(q1), jnp.asarray(q2),
+                                      dx, dy, n_iter=20000)
+    c1, c2, c3 = map(np.asarray, (c1, c2, c3))
+    assert np.isfinite(c3).all()
+    assert c3.min() >= 0.0
+    assert c3.max() > 1e-5          # pollutant actually produced
+    # pollutant needs BOTH reactants: should peak downstream of sources
+    peak = np.unravel_index(np.argmax(c3), c3.shape)
+    assert peak[0] >= 1
+
+
+def test_reaction_consumes_reactants():
+    """Higher K12 -> more pollutant produced near the source overlap."""
+    X, Y = pol.make_grid(48, 24)
+    q1, q2 = pol.source_fields(X, Y)
+    ux, uy = pol.velocity_field(0.5, 0.0, 0.0, X, Y)
+    dx, dy = 2.0 / 47, 1.0 / 23
+
+    def total_c3(k12):
+        _, _, c3 = pol.steady_transport(jnp.asarray(ux), jnp.asarray(uy),
+                                        0.1, k12, 0.5, jnp.asarray(q1),
+                                        jnp.asarray(q2), dx, dy,
+                                        n_iter=15000)
+        return float(np.asarray(c3).sum())
+    assert total_c3(10.0) > total_c3(1.0)
+
+
+def test_lhs_stratified():
+    u = pol.latin_hypercube(16, 3, seed=0)
+    assert u.shape == (16, 3)
+    for j in range(3):
+        bins = np.floor(u[:, j] * 16).astype(int)
+        assert sorted(bins.tolist()) == list(range(16))   # one per stratum
+
+
+def test_dataset_small_end_to_end():
+    data = pol.generate_dataset(n_samples=3, nx=32, ny=16, n_points=50,
+                                n_iter=5000, seed=0, batch=3)
+    assert data["X"].shape == (3, 6)
+    assert data["Y"].shape == (3, 50)
+    assert np.isfinite(data["Y"]).all()
+    assert np.abs(data["X"]).max() <= 1.0 + 1e-6
+    (xtr, ytr), (xte, yte) = pol.train_test_split(data, 0.67)
+    assert xtr.shape[0] == 2 and xte.shape[0] == 1
+
+
+def test_tokens_deterministic_and_distinct():
+    b1 = batch_for_step(0, 5, 4, 16, 100)
+    b2 = batch_for_step(0, 5, 4, 16, 100)
+    b3 = batch_for_step(0, 6, 4, 16, 100)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))

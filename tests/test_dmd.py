@@ -1,0 +1,194 @@
+"""DMD core vs the float64 oracle + mathematical properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dmd import (combine_snapshots, dmd_coefficients,
+                            dmd_eigenvalues, dmd_extrapolate, gram_matrix)
+from repro.core.ref import dmd_extrapolate_ref
+
+
+def make_linear_traj(n=64, m=10, rank=4, seed=0, noise=0.0, spectrum=None):
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    eigs = np.zeros(n)
+    eigs[:rank] = spectrum if spectrum is not None else \
+        np.linspace(0.95, 0.7, rank)
+    A = (Q * eigs) @ Q.T
+    w = rng.normal(size=n)
+    snaps = []
+    for _ in range(m):
+        w = A @ w
+        snaps.append(w.copy())
+    S = np.stack(snaps)
+    if noise:
+        S = S + rng.normal(size=S.shape) * noise
+    return S, A
+
+
+@pytest.mark.parametrize("mode", ["matpow", "eig"])
+@pytest.mark.parametrize("anchor,affine", [("none", False), ("first", True)])
+def test_matches_oracle(mode, anchor, affine):
+    S, _ = make_linear_traj()
+    for s in (5, 20):
+        w_jax, _ = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=s, tol=1e-6,
+                                   mode=mode, anchor=anchor, affine=affine)
+        w_ref = dmd_extrapolate_ref(S, s, tol=1e-6, mode=mode, anchor=anchor,
+                                    affine=affine)
+        np.testing.assert_allclose(np.asarray(w_jax), w_ref, rtol=2e-2,
+                                   atol=2e-2)
+
+
+def test_exact_on_linear_system():
+    """Noise-free linear dynamics: DMD prediction == ground truth."""
+    S, A = make_linear_traj(rank=4)
+    s = 15
+    w_true = S[-1].copy()
+    for _ in range(s):
+        w_true = A @ w_true
+    w, info = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=s, tol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), w_true, atol=5e-3)
+    assert int(info["rank"]) >= 4
+
+
+def test_exact_on_drift():
+    """Affine-anchored DMD reproduces a pure drift exactly (Jordan case)."""
+    rng = np.random.default_rng(1)
+    w0, v = rng.normal(size=64), rng.normal(size=64) * 0.1
+    S = np.stack([w0 + t * v for t in range(10)])
+    # tol must sit above the fp32 Gram noise floor (~3e-4 singular ratio):
+    # finer tolerances admit noise modes whose lambda^100 explodes.
+    for s in (10, 100):
+        w, _ = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=s, tol=1e-3,
+                               anchor="first", affine=True)
+        truth = S[-1] + s * v
+        np.testing.assert_allclose(np.asarray(w), truth,
+                                   atol=1e-2 * max(1, s / 10))
+
+
+def test_eigenvalue_recovery():
+    spectrum = np.array([0.95, 0.9, 0.85, 0.8])
+    S, _ = make_linear_traj(rank=4, spectrum=spectrum, m=12)
+    ev = dmd_eigenvalues(jnp.asarray(S), tol=1e-8)
+    mags = sorted(np.abs(ev), reverse=True)[:4]
+    np.testing.assert_allclose(mags, sorted(spectrum, reverse=True),
+                               atol=1e-3)
+
+
+def test_relax_folds_into_coefficients():
+    S, _ = make_linear_traj()
+    Sj = jnp.asarray(S, jnp.float32)
+    w_full, _ = dmd_extrapolate(Sj, s=7, tol=1e-6, relax=1.0)
+    w_half, _ = dmd_extrapolate(Sj, s=7, tol=1e-6, relax=0.5)
+    expect = 0.5 * np.asarray(w_full) + 0.5 * S[-1]
+    np.testing.assert_allclose(np.asarray(w_half), expect, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_trust_region_caps_jump():
+    """Spurious growth modes cannot jump farther than the trust radius."""
+    rng = np.random.default_rng(2)
+    S = np.cumsum(rng.normal(size=(10, 64)), axis=0)  # random walk: noisy
+    tr = 1.0
+    s = 50
+    w, info = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=s, tol=1e-6,
+                              anchor="first", affine=True, trust_region=tr)
+    steps = np.linalg.norm(np.diff(S, axis=0), axis=1)
+    radius = tr * s * np.sqrt(np.mean(steps ** 2))
+    jump = np.linalg.norm(np.asarray(w) - S[-1])
+    assert jump <= radius * 1.05
+
+
+def test_translation_invariance_of_anchored_affine():
+    """anchor=first + affine: w(S + const) == w(S) + const."""
+    S, _ = make_linear_traj()
+    shift = np.full(S.shape[1], 37.5)
+    w1, _ = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=9, tol=1e-5,
+                            anchor="first", affine=True)
+    w2, _ = dmd_extrapolate(jnp.asarray(S + shift, jnp.float32), s=9,
+                            tol=1e-5, anchor="first", affine=True)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w1) + shift,
+                               rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.1, 10.0), s=st.integers(1, 40),
+       m=st.integers(4, 12))
+def test_scale_equivariance(scale, s, m):
+    """w(a*S) == a*w(S) for every variant (DMD is homogeneous)."""
+    S, _ = make_linear_traj(m=m, seed=3)
+    Sj = jnp.asarray(S, jnp.float32)
+    w1, _ = dmd_extrapolate(Sj, s=s, tol=1e-3, anchor="first", affine=True,
+                            trust_region=2.0)
+    w2, _ = dmd_extrapolate(Sj * scale, s=s, tol=1e-3, anchor="first",
+                            affine=True, trust_region=2.0)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w1) * scale,
+                               rtol=5e-2, atol=5e-2 * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_coefficients_finite_on_noise(seed):
+    """Pure-noise snapshots never produce non-finite extrapolations when the
+    trust region is on."""
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    w, _ = dmd_extrapolate(S, s=50, tol=1e-4, anchor="first", affine=True,
+                           trust_region=2.0)
+    assert bool(jnp.all(jnp.isfinite(w)))
+
+
+def test_gram_matches_dense():
+    rng = np.random.default_rng(0)
+    S = jnp.asarray(rng.normal(size=(6, 50)), jnp.float32)
+    g = gram_matrix(S)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(S) @ np.asarray(S).T, rtol=1e-5)
+    ga = gram_matrix(S, anchor="first")
+    D = np.asarray(S) - np.asarray(S)[0]
+    np.testing.assert_allclose(np.asarray(ga), D @ D.T, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_keep_residual_matches_oracle():
+    S, _ = make_linear_traj()
+    w_j, _ = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=7, tol=1e-6,
+                             keep_residual=True)
+    w_r = dmd_extrapolate_ref(S, 7, tol=1e-6, keep_residual=True)
+    np.testing.assert_allclose(np.asarray(w_j), w_r, rtol=2e-2, atol=2e-2)
+
+
+def test_multidim_leaf_combine():
+    """gram/combine contract all trailing axes (no flatten copies)."""
+    rng = np.random.default_rng(0)
+    S4 = jnp.asarray(rng.normal(size=(6, 4, 5, 3)), jnp.float32)
+    g = gram_matrix(S4)
+    flat = np.asarray(S4).reshape(6, -1)
+    np.testing.assert_allclose(np.asarray(g), flat @ flat.T, rtol=1e-5)
+    c = jnp.asarray(rng.normal(size=(6,)), jnp.float32)
+    w = combine_snapshots(S4, c)
+    assert w.shape == (4, 5, 3)
+    np.testing.assert_allclose(np.asarray(w).reshape(-1),
+                               np.asarray(c) @ flat, rtol=1e-5)
+
+
+def test_batched_stack_matches_per_layer_loop():
+    """Per-layer DMD over a stacked (m, L, d) buffer == looping layers."""
+    from repro.core.dmd import gram_matrix
+    rng = np.random.default_rng(5)
+    m, L, d = 8, 3, 40
+    S = jnp.asarray(rng.normal(size=(m, L, d)).cumsum(axis=0), jnp.float32)
+    g = gram_matrix(S, anchor="first", stack_dims=1)
+    assert g.shape == (L, m, m)
+    c, info = dmd_coefficients(g, s=11, tol=1e-3, anchor="first",
+                               affine=True, trust_region=2.0)
+    assert c.shape == (L, m)
+    w = combine_snapshots(S, c, stack_dims=1)
+    assert w.shape == (L, d)
+    for l in range(L):
+        w_l, _ = dmd_extrapolate(S[:, l], s=11, tol=1e-3, anchor="first",
+                                 affine=True, trust_region=2.0)
+        np.testing.assert_allclose(np.asarray(w[l]), np.asarray(w_l),
+                                   rtol=1e-4, atol=1e-4)

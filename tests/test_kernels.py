@@ -1,0 +1,79 @@
+"""Pallas kernels vs jnp oracles: shape x dtype sweeps in interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("m,n", [(14, 5000), (8, 2048), (20, 333), (4, 128),
+                                 (14, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("anchor", [False, True])
+def test_gram_kernel(m, n, dtype, anchor):
+    S = jnp.asarray(RNG.normal(size=(m, n)), dtype)
+    g = ops.gram(S, anchor_first=anchor, interpret=True)
+    g_ref = ref.gram_ref(S, anchor_first=anchor)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=tol,
+                               atol=tol * max(1.0, float(jnp.max(jnp.abs(g_ref)))))
+
+
+@pytest.mark.parametrize("m,n", [(14, 5000), (8, 100), (6, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_combine_kernel(m, n, dtype):
+    S = jnp.asarray(RNG.normal(size=(m, n)), dtype)
+    c = jnp.asarray(RNG.normal(size=(m,)), jnp.float32)
+    w = ops.combine(S, c, interpret=True)
+    w_ref = ref.combine_ref(S, c)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=tol,
+                               atol=tol * 10)
+
+
+def test_combine_multidim():
+    S = jnp.asarray(RNG.normal(size=(6, 8, 12)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(6,)), jnp.float32)
+    w = ops.combine(S, c, interpret=True)
+    assert w.shape == (8, 12)
+    np.testing.assert_allclose(
+        np.asarray(w), np.asarray(ref.combine_ref(S.reshape(6, -1), c)
+                                  ).reshape(8, 12), rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,d,causal,window", [
+    (1, 128, 128, 4, 4, 64, True, 0),
+    (2, 256, 256, 4, 2, 64, True, 0),
+    (1, 256, 256, 2, 2, 64, True, 64),
+    (1, 100, 100, 2, 1, 32, False, 0),
+    (1, 64, 192, 2, 2, 128, True, 0),          # Sq != Sk
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(B, Sq, Sk, H, K, d, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Sk, K, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Sk, K, d)), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            tq=64, tk=64, interpret=True)
+    kr, vr = jnp.repeat(k, H // K, axis=2), jnp.repeat(v, H // K, axis=2)
+    o_ref = ref.flash_attention_ref(q, kr, vr, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol * 50)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 20), n=st.integers(16, 700),
+       seed=st.integers(0, 100))
+def test_gram_kernel_property(m, n, seed):
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    g = np.asarray(ops.gram(S, interpret=True))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)  # symmetric
+    assert np.all(np.diag(g) >= -1e-5)                        # PSD diag
+    np.testing.assert_allclose(g, np.asarray(ref.gram_ref(S)), rtol=1e-4,
+                               atol=1e-3)

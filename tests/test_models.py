@@ -1,0 +1,124 @@
+"""Per-arch smoke tests (REQUIRED: reduced same-family config, one forward /
+train step on CPU, shape + finiteness asserts) + full-config param counts."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, reduced
+from repro.models.transformer import (LanguageModel, cross_entropy,
+                                      segment_plan)
+from repro.optim import apply_updates, make_optimizer
+
+ARCHS = list_archs()
+
+
+def _smoke_batch(mc, B=2, S=32, key=jax.random.PRNGKey(0)):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, mc.vocab_size)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    if mc.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, mc.encoder_seq_len, mc.d_model))
+    if mc.mrope_sections:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None, :], (B, 3, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    acfg = get_config(arch)
+    mc = reduced(acfg.model)
+    model = LanguageModel(mc, head_tp=False, chunk_k=16)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(mc)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, mc.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one optimizer step decreases nothing catastrophic + stays finite
+    opt = make_optimizer(dataclasses.replace(acfg.optimizer, name="adam",
+                                             lr=1e-3, schedule="constant",
+                                             warmup_steps=0))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        loss, grads = jax.value_and_grad(lambda pp: model.loss(pp, batch)[0])(p)
+        u, s = opt.update(grads, s, p, jnp.asarray(0))
+        return apply_updates(p, u), s, loss
+
+    params2, state, loss = step(params, state)
+    assert bool(jnp.isfinite(loss))
+    for leaf in jax.tree_util.tree_leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    acfg = get_config(arch)
+    mc = reduced(acfg.model)
+    model = LanguageModel(mc, head_tp=False, chunk_k=16)
+    params = model.init(jax.random.PRNGKey(0))
+    caches = model.init_cache(2, 64)
+    batch = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    if mc.mrope_sections:
+        batch["positions"] = jnp.zeros((2, 3, 1), jnp.int32)
+    logits, new_caches = jax.jit(model.decode_step)(params, batch, caches)
+    assert logits.shape == (2, 1, mc.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+EXPECTED_PARAMS = {
+    "minicpm-2b": (2.73e9, 0.05),        # 2.4B non-emb + tied 122k vocab emb
+    "granite-20b": (20.3e9, 0.05),
+    "gemma3-27b": (27.0e9, 0.05),
+    "tinyllama-1.1b": (1.10e9, 0.05),
+    "whisper-base": (88e6, 0.08),        # +16.8M pos_emb for decode_32k cells
+    "qwen2-vl-7b": (7.6e9, 0.05),        # LM backbone of the 8.3B total
+    "zamba2-2.7b": (2.34e9, 0.10),       # single shared block simplification
+    "mamba2-2.7b": (2.70e9, 0.05),
+    "llama4-maverick-400b-a17b": (400.7e9, 0.03),
+    "qwen3-moe-30b-a3b": (30.5e9, 0.03),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    acfg = get_config(arch)
+    model = LanguageModel(acfg.model)
+    params = model.init(abstract=True)
+    n = sum(int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(params))
+    target, tol = EXPECTED_PARAMS[arch]
+    assert abs(n - target) / target < tol, f"{arch}: {n/1e9:.2f}B"
+
+
+def test_segment_plans():
+    assert segment_plan(get_config("gemma3-27b").model)[0].kind == "gemma"
+    plan = segment_plan(get_config("gemma3-27b").model)
+    assert plan[0].count == 10 and plan[1].count == 2            # 62 layers
+    plan = segment_plan(get_config("llama4-maverick-400b-a17b").model)
+    assert plan == [("moe_pair", 24)] or (plan[0].kind, plan[0].count) == \
+        ("moe_pair", 24)
+    plan = segment_plan(get_config("zamba2-2.7b").model)
+    assert plan[0].kind == "zamba" and plan[0].count == 9        # 54 = 9x6
+    plan = segment_plan(get_config("whisper-base").model)
+    assert [s.kind for s in plan] == ["enc", "dec"]
+
+
+def test_cross_entropy_masks_padded_vocab():
+    logits = jnp.zeros((1, 2, 8))
+    labels = jnp.asarray([[1, 2]])
+    ce = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(ce), np.log(8), rtol=1e-5)
+
+
+def test_vocab_padding():
+    mc = get_config("minicpm-2b").model
+    assert mc.padded_vocab % 16 == 0
+    assert 0 <= mc.padded_vocab - mc.vocab_size < 16

@@ -1,0 +1,119 @@
+"""Optimizers vs hand-rolled numpy references; schedules."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import (adafactor, adam, adam8bit, apply_updates,
+                         clip_by_global_norm, global_norm, make_optimizer,
+                         make_schedule)
+
+
+def _quad_problem(seed=0, n=32):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    H = A @ A.T / n + 0.1 * np.eye(n, dtype=np.float32)
+    w_star = rng.normal(size=n).astype(np.float32)
+    params = {"w": jnp.asarray(rng.normal(size=n), jnp.float32)}
+
+    def loss(p):
+        d = p["w"] - w_star
+        return 0.5 * d @ jnp.asarray(H) @ d
+    return params, loss
+
+
+def test_adam_matches_numpy_reference():
+    lr, b1, b2, eps = 1e-2, 0.9, 0.999, 1e-8
+    opt = adam(lambda s: lr, b1, b2, eps)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    grads_seq = [np.array([0.1, -0.2, 0.3], np.float32),
+                 np.array([-0.5, 0.5, 0.0], np.float32),
+                 np.array([1.0, 1.0, -1.0], np.float32)]
+    state = opt.init(params)
+    w_np = np.array([1.0, -2.0, 3.0])
+    m = np.zeros(3)
+    v = np.zeros(3)
+    for t, g in enumerate(grads_seq):
+        u, state = opt.update({"w": jnp.asarray(g)}, state, params,
+                              jnp.asarray(t))
+        params = apply_updates(params, u)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** (t + 1))
+        vh = v / (1 - b2 ** (t + 1))
+        w_np = w_np - lr * mh / (np.sqrt(vh) + eps)
+    np.testing.assert_allclose(np.asarray(params["w"]), w_np, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw",
+                                  "adafactor", "adam8bit"])
+def test_optimizers_decrease_quadratic(name):
+    params, loss = _quad_problem()
+    # adafactor/adam8bit need larger steps here: update-RMS clipping and the
+    # int8 block-absmax noise floor respectively (tiny 1-block problem).
+    lr = {"adafactor": 0.5, "adam8bit": 0.15}.get(name, 5e-2)
+    cfg = OptimizerConfig(name=name, lr=lr)
+    opt = make_optimizer(cfg)
+    state = opt.init(params)
+    l0 = float(loss(params))
+    step = jax.jit(lambda p, s, t: opt.update(jax.grad(loss)(p), s, p, t))
+    for t in range(60):
+        u, state = step(params, state, jnp.asarray(t))
+        params = apply_updates(params, u)
+    target = 0.5 if name == "adam8bit" else 0.3   # int8 moment noise
+    assert float(loss(params)) < target * l0, name
+
+
+def test_adam8bit_tracks_adam():
+    params, loss = _quad_problem(seed=1)
+    o1 = adam(lambda s: 2e-2)
+    o2 = adam8bit(lambda s: 2e-2)
+    p1 = p2 = params
+    s1, s2 = o1.init(p1), o2.init(p2)
+    for t in range(30):
+        g1 = jax.grad(loss)(p1)
+        g2 = jax.grad(loss)(p2)
+        u1, s1 = o1.update(g1, s1, p1, jnp.asarray(t))
+        u2, s2 = o2.update(g2, s2, p2, jnp.asarray(t))
+        p1 = apply_updates(p1, u1)
+        p2 = apply_updates(p2, u2)
+    l1, l2 = float(loss(p1)), float(loss(p2))
+    assert abs(l1 - l2) < 0.5 * abs(l1) + 0.05
+
+
+def test_wsd_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                          total_steps=100, decay_fraction=0.2,
+                          min_lr_ratio=0.1)
+    f = make_schedule(cfg)
+    assert float(f(0)) < 0.2                       # warming up
+    assert abs(float(f(50)) - 1.0) < 1e-6          # stable plateau
+    assert abs(float(f(79)) - 1.0) < 0.06          # just before decay
+    assert float(f(99)) < 0.2                      # decayed
+    assert float(f(99)) >= 0.1 - 1e-6              # floor
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    cfg = OptimizerConfig(lr=1.0, schedule="cosine", warmup_steps=5,
+                          total_steps=50, min_lr_ratio=0.0)
+    f = make_schedule(cfg)
+    vals = [float(f(s)) for s in range(5, 50, 5)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.asarray([3.0, 4.0])}
+    assert abs(float(global_norm(tree)) - 5.0) < 1e-6
+    clipped = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_grad_clip_in_factory():
+    cfg = OptimizerConfig(name="sgd", lr=1.0, grad_clip=1.0)
+    opt = make_optimizer(cfg)
+    params = {"w": jnp.zeros(2)}
+    state = opt.init(params)
+    u, _ = opt.update({"w": jnp.asarray([30.0, 40.0])}, state, params,
+                      jnp.asarray(0))
+    assert abs(float(global_norm(u)) - 1.0) < 1e-4
