@@ -55,10 +55,11 @@ def main():
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     from benchmarks.paper_benches import (fig3_sensitivity, fig4_curves,
-                                          sec3_overhead)
+                                          sec3_overhead, streaming_gram)
     t0 = time.time()
     rows = []
     rows += sec3_overhead()
+    rows += streaming_gram(n=1_000_000 if args.quick else 4_000_000)
     rows += bench_kernels()
     if args.quick:
         rows += fig3_sensitivity(ms=(6, 14), ss=(10, 55), steps=300)

@@ -50,7 +50,7 @@ def train(Xtr, Ytr, Xte, Yte, sizes, dmd_cfg, epochs, lr=1e-3, seed=0,
     for t in range(epochs):
         params, state, loss = step(params, state, jnp.asarray(t))
         if dmd_cfg.enabled and acc.should_record(t):
-            bufs = acc.record(bufs, params, acc.slot(t))
+            bufs, _ = acc.record(bufs, params, acc.slot(t))
             if acc.should_apply(t):
                 before = float(mse_loss(params, Xtr, Ytr))
                 old_params = jax.tree_util.tree_map(

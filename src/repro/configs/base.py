@@ -126,6 +126,15 @@ class DMDConfig:
     snapshot_dtype: str = "float32" # fp32 | bfloat16 snapshot storage
     gram_upcast: bool = True        # False: stream bf16 with f32 accumulation
                                     # (halves DMD jump bandwidth; see §Perf)
+    streaming_gram: bool = True     # maintain the (stack..., m, m) Gram
+                                    # incrementally in TrainState: one O(m*n)
+                                    # row pass per record fused into the
+                                    # train step, so `apply` is pure O(m^3)
+                                    # algebra + one combine pass. False =
+                                    # seed behavior (full O(m^2*n) recompute
+                                    # at every apply), kept as the A/B
+                                    # baseline and correctness oracle.
+                                    # Requires anchor in {none, first}.
     param_filter: str = "all"       # all | non_expert | matrices_only
     min_param_size: int = 0         # skip leaves smaller than this many elements
     anneal: float = 1.0             # multiplicative decay of `relax` per DMD round

@@ -1,11 +1,12 @@
 from repro.core.dmd import (
-    gram_matrix, dmd_coefficients, combine_snapshots, dmd_extrapolate,
-    dmd_eigenvalues,
+    gram_matrix, gram_row_matrix, set_gram_row, dmd_coefficients,
+    combine_snapshots, dmd_extrapolate, dmd_eigenvalues,
 )
 from repro.core.accelerator import DMDAccelerator
 from repro.core import snapshots
 
 __all__ = [
-    "gram_matrix", "dmd_coefficients", "combine_snapshots", "dmd_extrapolate",
-    "dmd_eigenvalues", "DMDAccelerator", "snapshots",
+    "gram_matrix", "gram_row_matrix", "set_gram_row", "dmd_coefficients",
+    "combine_snapshots", "dmd_extrapolate", "dmd_eigenvalues",
+    "DMDAccelerator", "snapshots",
 ]

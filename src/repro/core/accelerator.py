@@ -4,19 +4,27 @@ Usage (see repro.train.loop for full integration):
 
     acc = DMDAccelerator(cfg.dmd)
     buffers = acc.init(params)
-    # every optimizer step:
-    buffers = acc.record(buffers, params, acc.slot(step))
+    grams = acc.init_grams(buffers)          # streaming-Gram state (or None)
+    # every optimizer step (record always returns the (buffers, grams)
+    # pair; grams stays None when not streaming):
+    buffers, grams = acc.record(buffers, params, acc.slot(step), grams)
     if acc.should_apply(step):
-        params, stats = acc.apply(params, buffers, round_idx)
+        params, stats = acc.apply(params, buffers, round_idx, grams=grams)
 
 `record` is fused into the jitted train step by the trainer; `apply` is its
 own jitted program (runs every m steps). Both operate on the whole param
 pytree at once — XLA fuses the per-layer DMD updates, realizing the paper's
 "easily parallelized across layers" note as a single SPMD program.
+
+Streaming Gram (DESIGN.md §2): with cfg.streaming_gram the (stack..., m, m)
+Gram is maintained incrementally — each record adds one O(m*n) row pass —
+so `apply` skips the O(m^2*n) gram_matrix recompute entirely and runs pure
+O(m^3) coefficient algebra plus one combine pass. gram_matrix remains the
+correctness oracle (and the cfg.streaming_gram=False A/B baseline).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +34,45 @@ from repro.core import dmd, snapshots as snap
 PyTree = Any
 
 
+def dmd_leaf_jump(cfg, path, p, buf, gram, relax):
+    """One leaf of the DMD jump: coefficients from `gram` (the carried
+    streaming Gram; recomputed from the buffer when None) + one combine
+    pass. Shared by DMDAccelerator.apply and train.step.make_dmd_step."""
+    nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
+    if gram is None:
+        gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
+                               upcast=cfg.gram_upcast)
+    c, info = dmd.dmd_coefficients(
+        gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
+        clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
+        affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
+    w = dmd.combine_snapshots(buf, c, stack_dims=nstack,
+                              upcast=cfg.gram_upcast)
+    # Even c = e_last cannot save a non-finite BUFFER: the combine contracts
+    # every row, and 0 * inf = NaN. The jump must never leave params less
+    # finite than the last snapshot — fall back elementwise.
+    w = jnp.where(jnp.isfinite(w), w, buf[-1].astype(w.dtype))
+    return w.astype(p.dtype), jnp.mean(info["rank"].astype(jnp.float32))
+
+
+def _none_like(buffers: PyTree) -> PyTree:
+    """All-None tree matching `buffers` (placeholder gram tree)."""
+    return jax.tree_util.tree_map(lambda b: None, buffers,
+                                  is_leaf=lambda x: x is None)
+
+
 class DMDAccelerator:
     def __init__(self, cfg):
         self.cfg = cfg
         self._apply_jit = None
+
+    @property
+    def streaming(self) -> bool:
+        """Streaming-Gram engine active? (anchor="mean" has no one-pass row
+        update — its anchor moves with every record — so it keeps the
+        recompute path.)"""
+        return (self.cfg.enabled and self.cfg.streaming_gram
+                and self.cfg.anchor in ("none", "first"))
 
     # ---- schedule ---------------------------------------------------------
     # Cycle after warmup: [cooldown unrecorded steps][m recorded steps -> jump]
@@ -70,31 +113,37 @@ class DMDAccelerator:
             return None
         return snap.init_buffers(params, self.cfg)
 
-    def record(self, buffers: PyTree, params: PyTree, slot) -> PyTree:
-        if buffers is None:
+    def init_grams(self, buffers: PyTree) -> Optional[PyTree]:
+        """Running-Gram pytree mirroring `buffers` (None when not streaming)."""
+        if buffers is None or not self.streaming:
             return None
-        return snap.record(buffers, params, slot)
+        return snap.init_grams(buffers, self.cfg)
+
+    def record(self, buffers: PyTree, params: PyTree, slot,
+               grams: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
+        """Write params into row `slot`; with `grams` also refresh the
+        streaming Gram row. ALWAYS returns (buffers, grams) — grams stays
+        None for non-streaming callers — so `buffers, grams =
+        acc.record(...)` is the one idiom regardless of configuration."""
+        if buffers is None:
+            return None, None
+        new_bufs = snap.record(buffers, params, slot)
+        if grams is None:
+            return new_bufs, None
+        new_grams = snap.update_grams(grams, new_bufs, params, slot, self.cfg)
+        return new_bufs, new_grams
 
     # ---- the DMD jump -----------------------------------------------------
-    def _apply_impl(self, params: PyTree, buffers: PyTree,
+    def _apply_impl(self, params: PyTree, buffers: PyTree, grams: PyTree,
                     relax: jnp.ndarray) -> Tuple[PyTree, dict]:
         cfg = self.cfg
 
-        def one(path, p, buf):
+        def one(path, p, buf, g):
             if buf is None:
                 return p, jnp.asarray(0, jnp.int32)
-            nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
-            gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
-                                   upcast=cfg.gram_upcast)
-            c, info = dmd.dmd_coefficients(
-                gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
-                clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
-                affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
-            w = dmd.combine_snapshots(buf, c, stack_dims=nstack,
-                                              upcast=cfg.gram_upcast)
-            return w.astype(p.dtype), jnp.mean(info["rank"].astype(jnp.float32))
+            return dmd_leaf_jump(cfg, path, p, buf, g, relax)
 
-        out = jax.tree_util.tree_map_with_path(one, params, buffers,
+        out = jax.tree_util.tree_map_with_path(one, params, buffers, grams,
                                                is_leaf=lambda x: x is None)
         is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
         new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
@@ -104,10 +153,13 @@ class DMDAccelerator:
         return new_params, {"mean_rank": mean_rank}
 
     def apply(self, params: PyTree, buffers: PyTree,
-              round_idx: int = 0) -> Tuple[PyTree, dict]:
+              round_idx: int = 0, grams: Optional[PyTree] = None
+              ) -> Tuple[PyTree, dict]:
         if buffers is None:
             return params, {}
+        if grams is None or not self.streaming:
+            grams = _none_like(buffers)
         if self._apply_jit is None:
             self._apply_jit = jax.jit(self._apply_impl, donate_argnums=(0,))
         relax = jnp.asarray(self.relax_for_round(round_idx), jnp.float32)
-        return self._apply_jit(params, buffers, relax)
+        return self._apply_jit(params, buffers, grams, relax)

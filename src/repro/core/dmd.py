@@ -93,6 +93,54 @@ def gram_matrix(snapshots: jnp.ndarray, anchor: str = "none",
         preferred_element_type=jnp.float32)
 
 
+def gram_row_matrix(snapshots: jnp.ndarray, p: jnp.ndarray,
+                    anchor: str = "none", stack_dims: int = 0,
+                    upcast: bool = True) -> jnp.ndarray:
+    """One streaming Gram row: (stack..., m) of <d_p, d_j> for every buffer
+    row j — a single O(m*n) anchored inner-product pass (vs the O(m^2*n)
+    full recompute in gram_matrix). `p` is the snapshot just written into the
+    buffer, so row[slot] = <d_p, d_p> comes out automatically.
+
+    Anchoring matches gram_matrix: subtract row 0 of the buffer from BOTH
+    operands before contracting (never as a congruence transform on a raw
+    fp32 Gram — see module docstring / DESIGN.md §2). When `p` IS the new
+    anchor (slot 0 just rewritten), p - buf[0] == 0 and the row is exactly
+    the zero row the anchored Gram requires.
+    """
+    x = snapshots.astype(jnp.float32) if upcast else snapshots
+    q = p.astype(jnp.float32) if upcast else p.astype(x.dtype)
+    if anchor == "first":
+        q = q - x[0]
+        x = x - x[:1]
+    elif anchor != "none":
+        raise ValueError(f"streaming gram does not support anchor {anchor!r}")
+    nd = x.ndim
+    lhs_batch = tuple(range(1, 1 + stack_dims))
+    lhs_contract = tuple(range(1 + stack_dims, nd))
+    rhs_batch = tuple(range(stack_dims))
+    rhs_contract = tuple(range(stack_dims, nd - 1))
+    return jax.lax.dot_general(
+        x, q,
+        dimension_numbers=((lhs_contract, rhs_contract),
+                           (lhs_batch, rhs_batch)),
+        preferred_element_type=jnp.float32)
+
+
+def set_gram_row(gram: jnp.ndarray, row: jnp.ndarray, slot) -> jnp.ndarray:
+    """Write `row` into row AND column `slot` of a (stack..., m, m) Gram.
+
+    Mask-based (no dynamic-slice scatter), so `slot` may be a traced scalar
+    and the update jits/shards inside the train step. This is the
+    cyclic-slot invalidation: the stale row/col of the evicted snapshot is
+    overwritten in one shot.
+    """
+    m = gram.shape[-1]
+    onehot = jnp.arange(m) == slot
+    row = row.astype(gram.dtype)
+    gram = jnp.where(onehot[:, None], row[..., None, :], gram)
+    return jnp.where(onehot[None, :], row[..., :, None], gram)
+
+
 def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float):
     """eigvals of G- (ascending; batched over leading dims) ->
     sigma, 1/sigma, mask."""
@@ -251,7 +299,13 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
         radius2 = (trust_region * s) ** 2 * jnp.maximum(step2, 0.0)
         jump_scale = jnp.minimum(1.0, jnp.sqrt(
             radius2 / jnp.maximum(jump2, 1e-30)))
-        finite = jnp.all(jnp.isfinite(c), axis=-1)
+        # The guard must survive non-finite inputs anywhere in the chain: a
+        # finite-but-huge c overflows the quadratic form (inf - inf -> NaN in
+        # jump2), and a NaN-poisoned Gram poisons step2/radius2 even when c is
+        # finite. Any non-finite guard input collapses to the no-op jump
+        # c = e_last (keep w_last) with jump_scale = 0.
+        finite = (jnp.all(jnp.isfinite(c), axis=-1) & jnp.isfinite(jump2)
+                  & jnp.isfinite(step2) & jnp.isfinite(jump_scale))
         jump_scale = jnp.where(finite, jump_scale, 0.0)
         c = jnp.where(finite[..., None], c, e_last)
         c = jump_scale[..., None] * c + (1.0 - jump_scale[..., None]) * e_last
@@ -265,6 +319,16 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
 
     relax = jnp.asarray(relax, jnp.float32)
     c = relax * c + (1.0 - relax) * e_last
+
+    # Last line of defense (active regardless of trust_region): never emit a
+    # non-finite combination, and never trust coefficients derived from a
+    # non-finite Gram (eigh on an inf/NaN matrix can return finite garbage
+    # that the anchor fold then turns into a meaningless jump) — fall back to
+    # "keep w_last". A finite c from a finite Gram passes through unchanged,
+    # so the paper-faithful path is unaffected.
+    ok = (jnp.all(jnp.isfinite(c), axis=-1, keepdims=True)
+          & jnp.all(jnp.isfinite(raw_gram), axis=(-2, -1))[..., None])
+    c = jnp.where(ok, c, e_last)
 
     info = {
         "rank": jnp.sum(mask.astype(jnp.int32), axis=-1),
@@ -303,7 +367,10 @@ def dmd_extrapolate(snapshots: jnp.ndarray, *, s: int, tol: float = 1e-10,
                                clamp_eigs=clamp_eigs, anchor=anchor,
                                affine=affine, trust_region=trust_region,
                                keep_residual=keep_residual, relax=relax)
-    return combine_snapshots(snapshots, c), info
+    w = combine_snapshots(snapshots, c)
+    # A non-finite snapshot poisons the combine even under the c = e_last
+    # guard (0 * inf = NaN): never return less-finite than the last snapshot.
+    return jnp.where(jnp.isfinite(w), w, snapshots[-1].astype(w.dtype)), info
 
 
 def dmd_eigenvalues(snapshots: jnp.ndarray, *, tol: float = 1e-10,

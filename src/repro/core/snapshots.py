@@ -12,6 +12,8 @@ from typing import Any, Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core import dmd as dmd_math
+
 PyTree = Any
 
 
@@ -69,6 +71,76 @@ def record(buffers: PyTree, params: PyTree, slot) -> PyTree:
             buf, p.astype(buf.dtype), slot, axis=0)
     return jax.tree_util.tree_map(upd, buffers, params,
                                   is_leaf=lambda x: x is None)
+
+
+def init_grams(buffers: PyTree, cfg) -> PyTree:
+    """Zeros running Gram (stack..., m, m) fp32 per buffer leaf; None where
+    the buffer is None. Mirrors the buffer pytree so the two thread through
+    jitted steps together. Abstract-aware like init_buffers."""
+    def make(path, buf):
+        if buf is None:
+            return None
+        nstack = stack_dims_for_path(jax.tree_util.keystr(path))
+        shape = tuple(buf.shape[1:1 + nstack]) + (cfg.m, cfg.m)
+        if isinstance(buf, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        return jnp.zeros(shape, jnp.float32)
+    return jax.tree_util.tree_map_with_path(make, buffers,
+                                            is_leaf=lambda x: x is None)
+
+
+def update_grams(grams: PyTree, buffers: PyTree, params: PyTree, slot,
+                 cfg) -> PyTree:
+    """Streaming Gram maintenance: after `record` wrote params into row
+    `slot`, refresh row+column `slot` of every running Gram with one O(m*n)
+    anchored inner-product pass per leaf (kernel-dispatched for flat leaves,
+    batched dot_general for stacked ones). See DESIGN.md §2 for why this
+    equals the full gram_matrix recompute at every window-complete point.
+    """
+    from repro.kernels import ops
+
+    def upd(path, g, buf, p):
+        if g is None:
+            return None
+        nstack = stack_dims_for_path(jax.tree_util.keystr(path))
+        if nstack == 0 and cfg.gram_upcast and buf.ndim == 2:
+            # already-flat leaf: kernel dispatch needs no reshape, so it is
+            # safe under GSPMD too (TPU -> Pallas, CPU -> dot_general ref)
+            row = ops.gram_row(buf, p.astype(buf.dtype),
+                               anchor_first=(cfg.anchor == "first"))
+        else:
+            # multi-dim / stacked / bf16-streaming leaves: the batched
+            # dot_general contracts trailing axes in place — flattening a
+            # sharded buffer inside the fused train step would force GSPMD
+            # to all-gather it every recorded step (DESIGN.md §3; wrapping
+            # the Pallas kernel in shard_map is the open item for these)
+            row = dmd_math.gram_row_matrix(
+                buf, p.astype(buf.dtype), anchor=cfg.anchor,
+                stack_dims=nstack, upcast=cfg.gram_upcast)
+        return dmd_math.set_gram_row(g, row, slot)
+
+    return jax.tree_util.tree_map_with_path(upd, grams, buffers, params,
+                                            is_leaf=lambda x: x is None)
+
+
+def recompute_grams(grams: PyTree, buffers: PyTree, cfg) -> PyTree:
+    """Rebuild running Grams whose leaf is all-zero while its buffer is not
+    (a checkpoint written before streaming Grams existed restores the
+    template's zeros — the next mid-window apply would otherwise solve on a
+    Gram with zeroed rows). Leaves with real data pass through untouched, so
+    a streaming-era checkpoint resumes with its carried values. Host-side
+    (restore path), one O(m^2*n) oracle pass per stale leaf."""
+    def fix(path, g, buf):
+        if g is None or buf is None:
+            return g
+        if bool(jnp.any(g != 0)) or not bool(jnp.any(buf != 0)):
+            return g
+        nstack = stack_dims_for_path(jax.tree_util.keystr(path))
+        return dmd_math.gram_matrix(buf, anchor=cfg.anchor,
+                                    stack_dims=nstack,
+                                    upcast=cfg.gram_upcast)
+    return jax.tree_util.tree_map_with_path(fix, grams, buffers,
+                                            is_leaf=lambda x: x is None)
 
 
 def stack_dims_for_path(path: str) -> int:

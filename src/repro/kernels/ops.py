@@ -1,46 +1,121 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Backend dispatch for the DMD data-pass kernels (DESIGN.md §3).
 
-On this CPU container the kernels run in interpret mode (the kernel body
-executes as plain jnp on CPU — the correctness contract vs ref.py holds);
-on TPU set interpret=False (the default flips on TPU backends).
+Every public entry point (`gram`, `gram_row`, `combine`, `flash_attention`)
+routes by backend:
+
+  * TPU  -> the Pallas kernels, COMPILED (interpret=False). The seed
+    hard-wired interpret mode everywhere, so the kernels never actually
+    compiled even on TPU hardware.
+  * CPU/GPU -> the pure `dot_general` references in `ref.py`. These are the
+    correctness oracles and XLA already emits optimal code for them; running
+    the Pallas interpreter on CPU would be strictly slower.
+
+`interpret=True` may still be passed explicitly to force the Pallas kernel
+body through the interpreter on any backend — that is the kernel-vs-oracle
+contract exercised by tests/test_kernels.py. `set_backend()` is the test /
+benchmark override for the automatic routing.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.gram import gram_pallas
+from repro.kernels.gram_row import gram_row_pallas
 from repro.kernels.combine import combine_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
+_FORCED_BACKEND: Optional[str] = None
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+
+def set_backend(backend: Optional[str]) -> None:
+    """Force routing: "pallas" | "ref" | None (auto by jax.default_backend)."""
+    global _FORCED_BACKEND
+    if backend not in (None, "pallas", "ref"):
+        raise ValueError(f"unknown kernel backend {backend!r}")
+    _FORCED_BACKEND = backend
+
+
+def active_backend() -> str:
+    if _FORCED_BACKEND is not None:
+        return _FORCED_BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _route(interpret) -> str:
+    """interpret=None -> backend routing; interpret=True/False -> Pallas with
+    that interpreter setting (the explicit kernel-test path)."""
+    if interpret is None:
+        return active_backend()
+    return "pallas"
+
+
+def _interp(interpret) -> bool:
+    """Resolve interpret for a Pallas route: None ("auto", reached via a
+    forced set_backend('pallas')) must still interpret off-TPU — compiled
+    Pallas only exists on TPU."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _block(block_n: int, n: int) -> int:
+    return min(block_n, max(n, 128))
 
 
 def gram(snapshots: jnp.ndarray, *, anchor_first: bool = False,
          block_n: int = 2048, interpret=None) -> jnp.ndarray:
-    interpret = _default_interpret() if interpret is None else interpret
+    """(m, ...) -> (m, m) fp32 full Gram (the recompute / oracle pass).
+
+    The ref route contracts trailing axes in place; only the Pallas route
+    flattens (a reshape of a sharded buffer would force an all-gather, and
+    on TPU the kernel wants the flat layout anyway)."""
+    if _route(interpret) == "ref":
+        return ref.gram_ref(snapshots, anchor_first=anchor_first)
     m = snapshots.shape[0]
     flat = snapshots.reshape(m, -1)
     return gram_pallas(flat, anchor_first=anchor_first,
-                       block_n=min(block_n, max(flat.shape[1], 128)),
-                       interpret=interpret)
+                       block_n=_block(block_n, flat.shape[1]),
+                       interpret=_interp(interpret))
+
+
+def gram_row(snapshots: jnp.ndarray, p: jnp.ndarray, *,
+             anchor_first: bool = False, block_n: int = 2048,
+             interpret=None) -> jnp.ndarray:
+    """(m, ...), (...) -> (m,) streaming Gram row <d_p, d_j> (one O(m*n)
+    pass; p is the snapshot just written into its buffer slot)."""
+    if _route(interpret) == "ref":
+        return ref.gram_row_ref(snapshots, p, anchor_first=anchor_first)
+    m = snapshots.shape[0]
+    flat = snapshots.reshape(m, -1)
+    return gram_row_pallas(flat, p.reshape(-1), anchor_first=anchor_first,
+                           block_n=_block(block_n, flat.shape[1]),
+                           interpret=_interp(interpret))
 
 
 def combine(snapshots: jnp.ndarray, c: jnp.ndarray, *, block_n: int = 2048,
             interpret=None) -> jnp.ndarray:
-    interpret = _default_interpret() if interpret is None else interpret
+    """(m, ...), (m,) -> (...) = S^T c in fp32."""
+    if _route(interpret) == "ref":
+        return ref.combine_ref(snapshots, c)
     m = snapshots.shape[0]
     flat = snapshots.reshape(m, -1)
     out = combine_pallas(flat, c,
-                         block_n=min(block_n, max(flat.shape[1], 128)),
-                         interpret=interpret)
+                         block_n=_block(block_n, flat.shape[1]),
+                         interpret=_interp(interpret))
     return out.reshape(snapshots.shape[1:])
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     tq: int = 128, tk: int = 128, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
+    if _route(interpret) == "ref":
+        heads, kv_heads = q.shape[2], k.shape[2]
+        if kv_heads != heads:                    # the oracle has no GQA path
+            k = jnp.repeat(k, heads // kv_heads, axis=2)
+            v = jnp.repeat(v, heads // kv_heads, axis=2)
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  tq=tq, tk=tk, interpret=interpret)
+                                  tq=tq, tk=tk, interpret=_interp(interpret))

@@ -6,17 +6,37 @@ import jax.numpy as jnp
 
 
 def gram_ref(snapshots: jnp.ndarray, anchor_first: bool = False) -> jnp.ndarray:
-    """(m, n) -> (m, m) = D D^T with optional D = S - S[0]."""
+    """(m, ...) -> (m, m) = D D^T with optional D = S - S[0].
+
+    Contracts ALL trailing axes with one dot_general — no flatten: a reshape
+    of a sharded buffer would force GSPMD to all-gather it (dmd.gram_matrix
+    has the measurement), and this function doubles as the CPU dispatch
+    target for sharded training, not just the (m, n) kernel-test oracle."""
     s = snapshots.astype(jnp.float32)
     if anchor_first:
         s = s - s[:1]
-    return s @ s.T
+    contract = tuple(range(1, s.ndim))
+    return jax.lax.dot_general(s, s, ((contract, contract), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def gram_row_ref(snapshots: jnp.ndarray, p: jnp.ndarray,
+                 anchor_first: bool = False) -> jnp.ndarray:
+    """(m, ...), (...) -> (m,) = row of <d_p, d_j>, optional d = s - s[0]."""
+    x = snapshots.astype(jnp.float32)
+    q = p.astype(jnp.float32)
+    if anchor_first:
+        q = q - x[0]
+        x = x - x[:1]
+    contract = tuple(range(1, x.ndim))
+    return jax.lax.dot_general(x, q, ((contract, tuple(range(q.ndim))), ((), ())),
+                               preferred_element_type=jnp.float32)
 
 
 def combine_ref(snapshots: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    """(m, n), (m,) -> (n,) = S^T c in fp32."""
-    return jnp.einsum("m,mn->n", c.astype(jnp.float32),
-                      snapshots.astype(jnp.float32))
+    """(m, ...), (m,) -> (...) = S^T c in fp32 (trailing axes preserved)."""
+    return jnp.tensordot(c.astype(jnp.float32),
+                         snapshots.astype(jnp.float32), axes=(0, 0))
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

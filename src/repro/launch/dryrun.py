@@ -100,8 +100,12 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
                 lambda l: (jax.ShapeDtypeStruct(l.shape, l.dtype)
                            if l is not None else None),
                 bufs, is_leaf=lambda x: x is None)
+        from repro.core.accelerator import DMDAccelerator
+        grams = (snap.init_grams(bufs, acfg.dmd)
+                 if bufs is not None and DMDAccelerator(acfg.dmd).streaming
+                 else None)
         state = TrainState(params, opt_state,
-                           jax.ShapeDtypeStruct((), jnp.int32), bufs)
+                           jax.ShapeDtypeStruct((), jnp.int32), bufs, grams)
         st_specs = inputs_mod.state_specs(state, mesh)
         step = make_train_step(model, acfg, mesh=mesh,
                                global_batch=shape.global_batch)

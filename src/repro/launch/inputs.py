@@ -128,6 +128,10 @@ def state_specs(state_tree: PyTree, mesh: Mesh) -> PyTree:
         if p.startswith("/dmd_buffers"):
             return _param_spec_of(p.split("/dmd_buffers", 1)[1], leaf, mesh,
                                   lead=1)
+        if p.startswith("/dmd_gram"):
+            return P()          # (stack..., m, m) running Grams: O(m^2) bytes,
+                                # replicated (the psum'd reduction of the
+                                # sharded row pass — DESIGN.md §2)
         if "/opt_state/vr/" in p or "/opt_state/vc/" in p:
             # adafactor factored moments: vr drops the param's last dim,
             # vc drops the second-to-last.

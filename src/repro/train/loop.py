@@ -53,7 +53,9 @@ class Trainer:
                                  else jax.random.PRNGKey(self.acfg.train.seed))
         opt_state = self.opt.init(params)
         bufs = self.acc.init(params) if self.acfg.dmd.enabled else None
-        return TrainState(params, opt_state, jnp.zeros((), jnp.int32), bufs)
+        grams = self.acc.init_grams(bufs)
+        return TrainState(params, opt_state, jnp.zeros((), jnp.int32), bufs,
+                          grams)
 
     # -- checkpointing --------------------------------------------------------
     def save(self, state: TrainState, step: int):
@@ -69,8 +71,26 @@ class Trainer:
             return None
         from repro.checkpoint import restore_checkpoint
         template = state_like if state_like is not None else self.init_state()
-        return restore_checkpoint(self.checkpoint_dir, template,
-                                  mesh=self.mesh)
+        state = restore_checkpoint(self.checkpoint_dir, template,
+                                   mesh=self.mesh)
+        if state is not None and self.acc.streaming \
+                and state.dmd_gram is not None:
+            # Pre-streaming checkpoints restore the template's all-zero
+            # Grams; rebuild those from the restored buffers so a mid-window
+            # resume never applies DMD on a Gram with zeroed rows.
+            state = state._replace(dmd_gram=snap.recompute_grams(
+                state.dmd_gram, state.dmd_buffers, self.acfg.dmd))
+        if state is None or self.mesh is None:
+            return state
+        # Elastic restore: the template's leaves are single-device (init runs
+        # before any mesh placement), so re-place every restored leaf against
+        # the CURRENT mesh's shardings — a checkpoint written on one topology
+        # restores onto any other.
+        from repro.launch.inputs import shardings_of, state_specs
+        sh = shardings_of(state_specs(state, self.mesh), self.mesh)
+        return jax.tree_util.tree_map(
+            lambda x, s: None if x is None else jax.device_put(x, s),
+            state, sh, is_leaf=lambda x: x is None)
 
     def _install_preempt_handler(self):
         def handler(signum, frame):

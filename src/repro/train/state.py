@@ -13,3 +13,5 @@ class TrainState(NamedTuple):
     opt_state: PyTree
     step: jnp.ndarray          # scalar int32
     dmd_buffers: PyTree        # snapshot buffers (None when DMD disabled)
+    dmd_gram: PyTree = None    # running (stack..., m, m) fp32 Grams per
+                               # buffer leaf (None unless dmd.streaming_gram)

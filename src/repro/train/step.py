@@ -6,11 +6,14 @@ train_step:
     shard),
   * fp32 gradient accumulators,
   * fused DMD snapshot recording (lax.cond'd on the slot, so warmup/cooldown
-    phases reuse the same executable),
+    phases reuse the same executable) — with dmd.streaming_gram the O(m*n)
+    Gram row update rides in the same cond, against params that are already
+    resident from the optimizer update,
   * optional int8-compressed cross-pod gradient sync (distributed/gradsync).
 
-dmd_step: the paper's jump — Gram + coefficients + combine over the whole
-param pytree, with optional optimizer-moment reset.
+dmd_step: the paper's jump. With the streaming Gram carried in TrainState it
+is pure O(m^3) coefficient algebra + one combine pass; without it (the
+cfg.streaming_gram=False A/B baseline) it recomputes the full O(m^2*n) Gram.
 """
 from __future__ import annotations
 
@@ -20,7 +23,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import dmd as dmd_math, snapshots as snap
+from repro.core import snapshots as snap
+from repro.core.accelerator import DMDAccelerator, dmd_leaf_jump, _none_like
 from repro.distributed.sharding import constrain
 from repro.optim import apply_updates, make_optimizer
 from repro.train.state import TrainState
@@ -47,6 +51,7 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
     gb = global_batch or acfg.train.global_batch
     ga = resolve_grad_accum(acfg, mesh, gb)
     dmd_on = acfg.dmd.enabled
+    streaming_on = DMDAccelerator(acfg.dmd).streaming
     _loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
 
     def train_step(state: TrainState, batch: PyTree, dmd_slot) -> tuple:
@@ -88,13 +93,22 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
                                         state.step)
         params = apply_updates(params, updates)
 
-        buffers = state.dmd_buffers
+        buffers, grams = state.dmd_buffers, state.dmd_gram
         if dmd_on and buffers is not None:
-            def write(bufs):
-                return snap.record(bufs, params, jnp.maximum(dmd_slot, 0))
-            buffers = jax.lax.cond(dmd_slot >= 0, write, lambda b: b, buffers)
+            streaming = streaming_on and grams is not None
 
-        new_state = TrainState(params, opt_state, state.step + 1, buffers)
+            def write(args):
+                bufs, g = args
+                slot = jnp.maximum(dmd_slot, 0)
+                bufs = snap.record(bufs, params, slot)
+                if streaming:
+                    g = snap.update_grams(g, bufs, params, slot, acfg.dmd)
+                return bufs, g
+            buffers, grams = jax.lax.cond(dmd_slot >= 0, write, lambda a: a,
+                                          (buffers, grams))
+
+        new_state = TrainState(params, opt_state, state.step + 1, buffers,
+                               grams)
         gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
                              for g in jax.tree_util.tree_leaves(grads)))
         return new_state, {"loss": loss, "grad_norm": gnorm}
@@ -106,25 +120,20 @@ def make_dmd_step(acfg):
     """Returns dmd_step(state, relax) -> (state, info): the paper's jump."""
     cfg = acfg.dmd
     opt = make_optimizer(acfg.optimizer)
+    streaming_on = DMDAccelerator(cfg).streaming
 
     def dmd_step(state: TrainState, relax) -> tuple:
-        def one(path, p, buf):
+        grams = state.dmd_gram
+        if grams is None or not streaming_on:
+            grams = _none_like(state.dmd_buffers)
+
+        def one(path, p, buf, g):
             if buf is None:
                 return p, jnp.asarray(0, jnp.int32)
-            nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
-            gram = dmd_math.gram_matrix(buf, anchor=cfg.anchor,
-                                        stack_dims=nstack,
-                                        upcast=cfg.gram_upcast)
-            c, info = dmd_math.dmd_coefficients(
-                gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
-                clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
-                affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
-            w = dmd_math.combine_snapshots(buf, c, stack_dims=nstack,
-                                              upcast=cfg.gram_upcast)
-            return w.astype(p.dtype), jnp.mean(info["rank"].astype(jnp.float32))
+            return dmd_leaf_jump(cfg, path, p, buf, g, relax)
 
         out = jax.tree_util.tree_map_with_path(
-            one, state.params, state.dmd_buffers,
+            one, state.params, state.dmd_buffers, grams,
             is_leaf=lambda x: x is None)
         is_pair = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and not isinstance(x[0], tuple))
@@ -136,7 +145,7 @@ def make_dmd_step(acfg):
         if cfg.reset_opt_state:
             opt_state = opt.init(params)
         new_state = TrainState(params, opt_state, state.step,
-                               state.dmd_buffers)
+                               state.dmd_buffers, state.dmd_gram)
         return new_state, {"mean_rank": jnp.mean(ranks)}
 
     return dmd_step

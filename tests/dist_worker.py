@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.configs.base import DMDConfig, OptimizerConfig, TrainConfig
 from repro.data.tokens import batch_for_step
-from repro.distributed.sharding import mesh_context, partition_specs
+from repro.distributed.sharding import mesh_context, partition_specs, set_mesh
 from repro.models.transformer import LanguageModel
 from repro.train import Trainer
 from repro.train.state import TrainState
@@ -89,7 +89,7 @@ def main():
         from jax.sharding import NamedSharding, PartitionSpec as P
         sharded = jax.device_put(
             S, NamedSharding(mesh, P(None, "data", "model")))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             g = jax.jit(lambda s: gram_matrix(s, anchor="first"))(sharded)
         flat = S.reshape(6, -1)
         flat = flat - flat[:1]
@@ -102,7 +102,7 @@ def main():
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         rng = np.random.default_rng(0)
         g = {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             synced = jax.jit(lambda t: int8_psum_grads(t, mesh))(g)
         # replicated input: mean over pods == input (up to int8 quantization)
         err = float(jnp.max(jnp.abs(synced["w"] - g["w"])))

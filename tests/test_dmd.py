@@ -3,10 +3,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.dmd import (combine_snapshots, dmd_coefficients,
-                            dmd_eigenvalues, dmd_extrapolate, gram_matrix)
+                            dmd_eigenvalues, dmd_extrapolate, gram_matrix,
+                            gram_row_matrix, set_gram_row)
 from repro.core.ref import dmd_extrapolate_ref
 
 
@@ -138,6 +139,132 @@ def test_coefficients_finite_on_noise(seed):
     w, _ = dmd_extrapolate(S, s=50, tol=1e-4, anchor="first", affine=True,
                            trust_region=2.0)
     assert bool(jnp.all(jnp.isfinite(w)))
+
+
+def test_nan_poisoned_gram_falls_back_to_identity():
+    """Regression (ISSUE 1): a non-finite Gram must never leak NaN into the
+    coefficients — the guard falls back to c = e_last (keep w_last), with and
+    without the trust region."""
+    S, _ = make_linear_traj(m=8)
+    g_ok = np.array(gram_matrix(jnp.asarray(S, jnp.float32), anchor="first"))
+    e_last = np.zeros(8, np.float32)
+    e_last[-1] = 1.0
+    for poison in (np.nan, np.inf, -np.inf):
+        g = g_ok.copy()
+        g[0, 0] = poison
+        for tr in (2.0, 0.0):
+            c, info = dmd_coefficients(jnp.asarray(g), s=30, tol=1e-4,
+                                       anchor="first", affine=True,
+                                       trust_region=tr)
+            assert bool(jnp.all(jnp.isfinite(c))), (poison, tr)
+            np.testing.assert_allclose(np.asarray(c), e_last)
+        # and the combination itself stays finite == w_last
+        w = combine_snapshots(jnp.asarray(S, jnp.float32),
+                              dmd_coefficients(jnp.asarray(g), s=30, tol=1e-4,
+                                               anchor="first", affine=True,
+                                               trust_region=2.0)[0])
+        np.testing.assert_allclose(np.asarray(w), S[-1], rtol=1e-5, atol=1e-5)
+
+
+def test_inf_snapshot_never_poisons_extrapolation():
+    """Even with the c = e_last guard, a non-finite BUFFER would NaN the
+    combine (0 * inf); the elementwise fallback must keep w at w_last."""
+    rng = np.random.default_rng(0)
+    S = np.asarray(rng.normal(size=(8, 16)), np.float32)
+    S[3, 5] = np.inf
+    w, _ = dmd_extrapolate(jnp.asarray(S), s=50, tol=1e-4, anchor="first",
+                           affine=True, trust_region=2.0)
+    assert bool(jnp.all(jnp.isfinite(w)))
+    np.testing.assert_allclose(np.asarray(w), S[-1], rtol=1e-6)
+
+
+def test_huge_coefficients_trust_region_no_overflow_nan():
+    """A finite-but-huge jump overflows the fp32 quadratic form (inf-inf ->
+    NaN in jump2); the guard must zero the jump instead of emitting NaN."""
+    gram = jnp.asarray(np.diag([1e30, 1e30, 1e30, 1e30, 1e30, 1e38]),
+                       jnp.float32)
+    c, info = dmd_coefficients(gram, s=50, tol=1e-10, trust_region=1.0)
+    assert bool(jnp.all(jnp.isfinite(c)))
+    assert bool(jnp.isfinite(info["jump_scale"]))
+
+
+@pytest.mark.parametrize("anchor", ["none", "first"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_streaming_gram_matches_oracle_across_wraps(anchor, seed):
+    """Tentpole contract: the incrementally maintained Gram (one row/col
+    refresh per record) equals the full gram_matrix recompute at every
+    window-complete point, across >= 2 full cyclic wraps of the buffer."""
+    m, n = 6, 40
+    rng = np.random.default_rng(seed)
+    buf = jnp.zeros((m, n), jnp.float32)
+    gram = jnp.zeros((m, m), jnp.float32)
+    w = jnp.asarray(rng.normal(size=n), jnp.float32)
+    for window in range(3):
+        for slot in range(m):
+            w = w + 0.05 * jnp.asarray(rng.normal(size=n), jnp.float32)
+            buf = buf.at[slot].set(w)
+            row = gram_row_matrix(buf, w, anchor=anchor)
+            gram = set_gram_row(gram, row, slot)
+            if anchor == "none":
+                # raw streaming Gram is exact at EVERY step
+                oracle = gram_matrix(buf, anchor=anchor)
+                np.testing.assert_allclose(np.asarray(gram),
+                                           np.asarray(oracle), rtol=1e-5,
+                                           atol=1e-5)
+        # anchored streaming is exact whenever the window is complete (slot 0
+        # is rewritten first in each window, so every entry was refreshed
+        # against the new anchor by the time slot m-1 lands) — DESIGN.md §2
+        oracle = gram_matrix(buf, anchor=anchor)
+        scale = float(jnp.max(jnp.abs(oracle))) or 1.0
+        np.testing.assert_allclose(np.asarray(gram) / scale,
+                                   np.asarray(oracle) / scale, atol=1e-5)
+
+
+def test_streaming_gram_stacked_matches_oracle():
+    """Same contract for stacked (per-layer batched) buffers."""
+    m, L, n = 5, 3, 24
+    rng = np.random.default_rng(7)
+    buf = jnp.zeros((m, L, n), jnp.float32)
+    gram = jnp.zeros((L, m, m), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(L, n)), jnp.float32)
+    for window in range(2):
+        for slot in range(m):
+            w = w + 0.1 * jnp.asarray(rng.normal(size=(L, n)), jnp.float32)
+            buf = buf.at[slot].set(w)
+            row = gram_row_matrix(buf, w, anchor="first", stack_dims=1)
+            gram = set_gram_row(gram, row, slot)
+        oracle = gram_matrix(buf, anchor="first", stack_dims=1)
+        np.testing.assert_allclose(np.asarray(gram), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_streaming_accelerator_apply_matches_recompute():
+    """DMDAccelerator.apply(grams=...) == apply with the full recompute."""
+    from repro.configs.base import DMDConfig
+    from repro.core import DMDAccelerator, snapshots as snap
+
+    cfg = DMDConfig(m=5, s=9, tol=1e-4, warmup_steps=0, cooldown_steps=0)
+    acc = DMDAccelerator(cfg)
+    assert acc.streaming
+    rng = np.random.default_rng(3)
+    params = {"a": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(10,)), jnp.float32)}
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    for window in range(2):
+        for slot in range(cfg.m):
+            params = jax.tree_util.tree_map(
+                lambda p: p + 0.02 * jnp.asarray(
+                    rng.normal(size=p.shape), jnp.float32), params)
+            bufs, grams = acc.record(bufs, params, slot, grams)
+    # apply() donates params: give each call its own leaf copies
+    fresh = lambda: jax.tree_util.tree_map(jnp.copy, params)
+    p_stream, _ = acc.apply(fresh(), bufs, 0, grams=grams)
+    p_oracle, _ = acc.apply(fresh(), bufs, 0)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_stream[k]),
+                                   np.asarray(p_oracle[k]), rtol=1e-4,
+                                   atol=1e-5)
 
 
 def test_gram_matches_dense():

@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -21,6 +21,76 @@ def test_gram_kernel(m, n, dtype, anchor):
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=tol,
                                atol=tol * max(1.0, float(jnp.max(jnp.abs(g_ref)))))
+
+
+@pytest.mark.parametrize("m,n", [(14, 5000), (8, 2048), (20, 333), (4, 128),
+                                 (14, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("anchor", [False, True])
+def test_gram_row_kernel(m, n, dtype, anchor):
+    """Streaming row kernel == ref, including row written into slot 0 (the
+    anchor itself: the anchored row must be exactly zero)."""
+    S = jnp.asarray(RNG.normal(size=(m, n)), dtype)
+    for slot in (0, m // 2, m - 1):
+        p = S[slot]
+        r = ops.gram_row(S, p, anchor_first=anchor, interpret=True)
+        r_ref = ref.gram_row_ref(S, p, anchor_first=anchor)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            np.asarray(r), np.asarray(r_ref), rtol=tol,
+            atol=tol * max(1.0, float(jnp.max(jnp.abs(r_ref)))))
+        if anchor and slot == 0:
+            assert float(jnp.max(jnp.abs(r))) == 0.0
+
+
+def test_gram_row_matches_full_gram_row():
+    """The kernel's row equals the corresponding row of the full Gram."""
+    S = jnp.asarray(RNG.normal(size=(10, 700)), jnp.float32)
+    g = ops.gram(S, anchor_first=True, interpret=True)
+    for slot in (0, 4, 9):
+        r = ops.gram_row(S, S[slot], anchor_first=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(g)[slot],
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_dispatch_routes_by_backend():
+    """ops auto-routing: ref on CPU (never the Pallas interpreter), Pallas
+    when forced; both agree numerically."""
+    assert jax.default_backend() != "tpu"
+    assert ops.active_backend() == "ref"
+    S = jnp.asarray(RNG.normal(size=(6, 300)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(6,)), jnp.float32)
+    auto_g = ops.gram(S, anchor_first=True)         # interpret=None -> ref
+    auto_r = ops.gram_row(S, S[2], anchor_first=True)
+    auto_w = ops.combine(S, c)
+    try:
+        ops.set_backend("pallas")                   # forced, interpret body
+        assert ops.active_backend() == "pallas"
+        pal_g = ops.gram(S, anchor_first=True, interpret=True)
+        pal_r = ops.gram_row(S, S[2], anchor_first=True, interpret=True)
+        pal_w = ops.combine(S, c, interpret=True)
+    finally:
+        ops.set_backend(None)
+    np.testing.assert_allclose(np.asarray(auto_g), np.asarray(pal_g),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(auto_r), np.asarray(pal_r),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(auto_w), np.asarray(pal_w),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_dispatch_ref_path_no_flatten_multidim():
+    """The ref route contracts trailing axes in place (sharding-safe) and
+    matches the flattened kernel result."""
+    S = jnp.asarray(RNG.normal(size=(6, 8, 12)), jnp.float32)
+    g = ops.gram(S, anchor_first=True)
+    flat = np.asarray(S).reshape(6, -1)
+    flat = flat - flat[:1]
+    np.testing.assert_allclose(np.asarray(g), flat @ flat.T, rtol=1e-5,
+                               atol=1e-4)
+    r = ops.gram_row(S, S[3], anchor_first=True)
+    np.testing.assert_allclose(np.asarray(r), (flat @ flat[3]), rtol=1e-5,
+                               atol=1e-4)
 
 
 @pytest.mark.parametrize("m,n", [(14, 5000), (8, 100), (6, 4096)])

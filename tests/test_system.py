@@ -46,7 +46,7 @@ def _train(dmd_cfg, steps=400, seed=0, reset_opt=True):
     for t in range(steps):
         params, state, loss = step(params, state, jnp.asarray(t))
         if dmd_cfg.enabled and acc.should_record(t):
-            bufs = acc.record(bufs, params, acc.slot(t))
+            bufs, _ = acc.record(bufs, params, acc.slot(t))
             if acc.should_apply(t):
                 params, _ = acc.apply(params, bufs, acc.round_index(t))
                 if reset_opt:

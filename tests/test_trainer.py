@@ -87,3 +87,37 @@ def test_dmd_trainer_end_to_end_finite(tmp_path):
     state = trainer.fit(batches, steps=14)
     for leaf in jax.tree_util.tree_leaves(state.params):
         assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_restore_rebuilds_grams_from_pre_streaming_checkpoint(tmp_path):
+    """A checkpoint without dmd_gram leaves (written before the streaming
+    engine existed) must not resume with the template's all-zero Grams:
+    restore rebuilds them from the restored buffers."""
+    from repro.core import dmd, snapshots as snap
+    from repro.checkpoint import save_checkpoint
+
+    trainer, batches = _tiny_setup(tmp_path, dmd=True)
+    # run past warmup+cooldown so the buffers hold real snapshots mid-window
+    state = trainer.fit(batches, steps=9)
+    assert state.dmd_gram is not None
+    # simulate the old format: drop the gram subtree before saving
+    save_checkpoint(str(tmp_path), state._replace(dmd_gram=None), 9)
+
+    trainer2, _ = _tiny_setup(tmp_path, dmd=True)
+    restored = trainer2.restore()
+    assert restored is not None and int(restored.step) == 9
+
+    def chk(path, buf, g):
+        if buf is None:
+            return None
+        assert g is not None
+        if bool(jnp.any(buf != 0)):
+            nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
+            oracle = dmd.gram_matrix(buf, anchor=trainer2.acfg.dmd.anchor,
+                                     stack_dims=nstack)
+            np.testing.assert_allclose(np.asarray(g), np.asarray(oracle),
+                                       rtol=1e-5, atol=1e-5)
+        return None
+    jax.tree_util.tree_map_with_path(chk, restored.dmd_buffers,
+                                     restored.dmd_gram,
+                                     is_leaf=lambda x: x is None)
