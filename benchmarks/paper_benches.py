@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DMDConfig, OptimizerConfig
-from repro.core import DMDAccelerator
+from repro.core import DMDAccelerator, leafplan
 from repro.core import snapshots as snap
 from repro.core.dmd import dmd_coefficients, gram_matrix
 from repro.models.mlp_net import init_mlp, mse_loss
@@ -131,12 +131,14 @@ def streaming_gram(m=14, n=4_000_000, reps=10) -> List[str]:
     bufs = acc_s.init(params)
     grams = acc_s.init_grams(bufs)
 
+    plans = leafplan.build_plans(params, cfg)
+
     # donate like the fused train step does: record is an in-place row write
     # there, not a full-buffer copy
     rec_plain = jax.jit(snap.record, donate_argnums=(0,))
     def _rec_stream(b, g, p, slot):
-        b = snap.record(b, p, slot)
-        return b, snap.update_grams(g, b, p, slot, cfg)
+        b = snap.record(b, p, slot, plans)
+        return b, snap.update_grams(g, b, p, slot, cfg, plans)
     rec_stream = jax.jit(_rec_stream, donate_argnums=(0, 1))
 
     for slot in range(m):                        # fill one window
@@ -197,6 +199,89 @@ def streaming_gram(m=14, n=4_000_000, reps=10) -> List[str]:
         f"each train step, where it overlaps backprop — DESIGN.md 2.3)",
         f"streaming,m,{m},n,{n}",
     ]
+    return rows
+
+
+def sharded_gram(m=8, L=4, d0=256, d1=512, reps=10) -> List[str]:
+    """ISSUE 2 tentpole evidence: the three LeafPlan kernel routes
+    (DESIGN.md §3) on one stacked (m, L, d0, d1) buffer leaf — the shape the
+    seed could never kernel-route (it fell back to the batched dot_general
+    to avoid GSPMD all-gathers from flattening).
+
+      * dot_general        batched contraction (the seed path / oracle)
+      * pallas_shard_map   local flatten + kernel + psum under shard_map
+                           (sharded over whatever mesh the host exposes;
+                           degrades to local vmapped kernels on 1 device)
+      * pallas_flat        the flat kernel on the same data pre-flattened —
+                           only legal because this benchmark's buffer is
+                           unsharded; shown as the roofline reference.
+
+    On CPU the shard_map route's local compute dispatches to the dot_general
+    refs (kernels/ops.py), so the comparison measures dispatch + collective
+    overhead; on TPU it measures the compiled kernels.
+    """
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+    from repro.core import snapshots as _snap
+    from repro.kernels import sharded as _sharded
+
+    rng = np.random.default_rng(0)
+    params = {"seg": jnp.asarray(rng.normal(size=(L, d0, d1)), jnp.float32)}
+    cfg = DMDConfig(m=m, s=40, tol=1e-4, anchor="first", warmup_steps=0,
+                    cooldown_steps=0)
+
+    mesh = None
+    try:
+        ndev = len(jax.devices())
+        if ndev >= 2:
+            nd = 2 if ndev < 8 else 8
+            mesh = jax.make_mesh((nd // 2, 2), ("data", "model"))
+    except Exception:
+        mesh = None
+
+    def plans_with(route):
+        c = _dc.replace(cfg, kernel_route=route)
+        return leafplan.build_plans(params, c, mesh,
+                                    stack_dims={"seg": 1})
+
+    buf = jnp.asarray(rng.normal(size=(m, L, d0, d1)), jnp.float32)
+    p = {"seg": buf[-1]}
+    c_coef = jnp.asarray(rng.normal(size=(L, m)), jnp.float32)
+
+    rows = ["sharded_gram,route,row_us,combine_us,note"]
+    for route in ("dot_general", "pallas_shard_map"):
+        plans = plans_with(route)
+        pl = plans["seg"]
+        grams = {"seg": jnp.zeros((L, m, m), jnp.float32)}
+
+        def upd(g, b, pp):
+            return _snap.update_grams(g, {"seg": b}, pp, m - 1, cfg, plans)
+        t_row = _timeit(jax.jit(upd), grams, buf, p, reps=reps)
+
+        if route == "pallas_shard_map":
+            comb = jax.jit(lambda b, cc: _sharded.combine(b, cc, pl))
+        else:
+            from repro.core.dmd import combine_snapshots
+            comb = jax.jit(lambda b, cc: combine_snapshots(
+                b, cc, stack_dims=1))
+        t_comb = _timeit(comb, buf, c_coef, reps=reps)
+        note = (f"mesh={'x'.join(map(str, mesh.devices.shape))}"
+                if mesh is not None and route == "pallas_shard_map"
+                else "local")
+        rows.append(f"sharded_gram,{route},{t_row * 1e6:.0f},"
+                    f"{t_comb * 1e6:.0f},{note}")
+
+    # pallas_flat roofline reference on the pre-flattened (unsharded) copy
+    from repro.kernels import ops as _ops
+    flat = buf.reshape(m, -1)
+    t_row = _timeit(jax.jit(lambda b, q: _ops.gram_row(b, q)), flat, flat[-1],
+                    reps=reps)
+    t_comb = _timeit(jax.jit(lambda b, cc: _ops.combine(b, cc)), flat,
+                     c_coef[0], reps=reps)
+    rows.append(f"sharded_gram,pallas_flat,{t_row * 1e6:.0f},"
+                f"{t_comb * 1e6:.0f},preflattened reference (no stack)")
+    rows.append(f"sharded_gram,m,{m},shape,{L}x{d0}x{d1}")
     return rows
 
 

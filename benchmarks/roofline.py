@@ -152,16 +152,20 @@ def measure_dmd(acfg, mesh) -> dict:
     from repro.distributed.sharding import mesh_context
     from repro.launch import inputs as inputs_mod
     from repro.launch.dryrun import parse_collectives
+    from repro.core.accelerator import DMDAccelerator
     model = LanguageModel(acfg.model)
     params = model.init(abstract=True)
     opt = make_optimizer(acfg.optimizer)
     opt_state = jax.eval_shape(opt.init, params)
-    bufs = snap.init_buffers(params, acfg.dmd)
+    acc = DMDAccelerator(acfg.dmd, mesh=mesh,
+                         stack_dims=model.param_stack_dims())
+    bufs = snap.init_buffers(params, acfg.dmd, acc.plans_for(params))
     state = TrainState(params, opt_state, jax.ShapeDtypeStruct((), jnp.int32),
                        bufs)
-    step = make_dmd_step(acfg)
+    step = make_dmd_step(acfg, mesh=mesh, acc=acc)
     with mesh_context(mesh):
-        st_specs = inputs_mod.state_specs(state, mesh)
+        st_specs = inputs_mod.state_specs(state, mesh,
+                                          plans=acc.plans_for(params))
         compiled = jax.jit(step, in_shardings=(
             inputs_mod.shardings_of(st_specs, mesh),
             None), donate_argnums=(0,)).lower(

@@ -1,16 +1,25 @@
 """Benchmark harness: one function per paper table/figure + kernel timings.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--out DIR]
 
-Prints ``name,...`` CSV rows. The roofline table (per arch x shape) is a
-separate, much heavier pass: ``python -m benchmarks.roofline`` (it needs the
-512-device dry-run environment).
+Prints ``name,...`` CSV rows AND writes one ``BENCH_<suite>.json`` per suite
+(the perf-trajectory files CI archives run-over-run): each file carries the
+raw rows plus the wall time so regressions are diffable. The roofline table
+(per arch x shape) is a separate, much heavier pass: ``python -m
+benchmarks.roofline`` (it needs the 512-device dry-run environment).
 """
 import argparse
+import json
+import os
 import sys
 import time
+from pathlib import Path
 
 sys.path.insert(0, "src")
+
+# Give the sharded_gram suite a real multi-device mesh on CPU hosts (set
+# before jax initializes; harmless for the single-device suites).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 import jax
@@ -50,25 +59,54 @@ def bench_kernels() -> list:
     return rows
 
 
+def write_suite(out_dir: Path, suite: str, rows: list, wall_s: float,
+                quick: bool) -> None:
+    path = out_dir / f"BENCH_{suite}.json"
+    path.write_text(json.dumps({
+        "suite": suite,
+        "rows": rows,
+        "wall_s": round(wall_s, 2),
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+    }, indent=1))
+    print(f"# wrote {path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=".",
+                    help="directory for the BENCH_<suite>.json files")
     args = ap.parse_args()
     from benchmarks.paper_benches import (fig3_sensitivity, fig4_curves,
-                                          sec3_overhead, streaming_gram)
-    t0 = time.time()
-    rows = []
-    rows += sec3_overhead()
-    rows += streaming_gram(n=1_000_000 if args.quick else 4_000_000)
-    rows += bench_kernels()
-    if args.quick:
-        rows += fig3_sensitivity(ms=(6, 14), ss=(10, 55), steps=300)
-        rows += fig4_curves(steps=300)
-    else:
-        rows += fig3_sensitivity()
-        rows += fig4_curves()
-    print("\n".join(rows))
-    print(f"\n# total bench wall: {time.time() - t0:.0f}s")
+                                          sec3_overhead, sharded_gram,
+                                          streaming_gram)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    suites = [
+        ("sec3_overhead", sec3_overhead),
+        ("streaming_gram", lambda: streaming_gram(
+            n=1_000_000 if args.quick else 4_000_000)),
+        ("sharded_gram", sharded_gram),
+        ("kernels", bench_kernels),
+        ("fig3", (lambda: fig3_sensitivity(ms=(6, 14), ss=(10, 55),
+                                           steps=300))
+         if args.quick else fig3_sensitivity),
+        ("fig4", (lambda: fig4_curves(steps=300))
+         if args.quick else fig4_curves),
+    ]
+
+    t_total = time.time()
+    all_rows = []
+    for suite, fn in suites:
+        t0 = time.time()
+        rows = fn()
+        write_suite(out_dir, suite, rows, time.time() - t0, args.quick)
+        all_rows += rows
+    print("\n".join(all_rows))
+    print(f"\n# total bench wall: {time.time() - t_total:.0f}s")
 
 
 if __name__ == "__main__":

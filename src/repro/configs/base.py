@@ -135,6 +135,15 @@ class DMDConfig:
                                     # at every apply), kept as the A/B
                                     # baseline and correctness oracle.
                                     # Requires anchor in {none, first}.
+    kernel_route: str = "auto"      # auto | pallas_flat | pallas_shard_map |
+                                    # dot_general: force the per-leaf kernel
+                                    # route in core/leafplan.py. "auto" picks
+                                    # per leaf (flat unsharded -> pallas_flat,
+                                    # stacked/sharded -> pallas_shard_map).
+                                    # A forced pallas_flat only applies where
+                                    # flattening is safe (unstacked,
+                                    # unsharded); other leaves keep the auto
+                                    # choice. See DESIGN.md §3.
     param_filter: str = "all"       # all | non_expert | matrices_only
     min_param_size: int = 0         # skip leaves smaller than this many elements
     anneal: float = 1.0             # multiplicative decay of `relax` per DMD round

@@ -3,10 +3,12 @@ from repro.core.dmd import (
     combine_snapshots, dmd_extrapolate, dmd_eigenvalues,
 )
 from repro.core.accelerator import DMDAccelerator
-from repro.core import snapshots
+from repro.core.leafplan import LeafPlan, build_plans, plan_table
+from repro.core import leafplan, snapshots
 
 __all__ = [
     "gram_matrix", "gram_row_matrix", "set_gram_row", "dmd_coefficients",
     "combine_snapshots", "dmd_extrapolate", "dmd_eigenvalues",
-    "DMDAccelerator", "snapshots",
+    "DMDAccelerator", "LeafPlan", "build_plans", "plan_table", "leafplan",
+    "snapshots",
 ]

@@ -2,8 +2,9 @@
 
 Usage (see repro.train.loop for full integration):
 
-    acc = DMDAccelerator(cfg.dmd)
-    buffers = acc.init(params)
+    acc = DMDAccelerator(cfg.dmd, mesh=mesh,
+                         stack_dims=model.param_stack_dims())
+    buffers = acc.init(params)               # also builds the LeafPlan table
     grams = acc.init_grams(buffers)          # streaming-Gram state (or None)
     # every optimizer step (record always returns the (buffers, grams)
     # pair; grams stays None when not streaming):
@@ -16,6 +17,20 @@ own jitted program (runs every m steps). Both operate on the whole param
 pytree at once — XLA fuses the per-layer DMD updates, realizing the paper's
 "easily parallelized across layers" note as a single SPMD program.
 
+LeafPlan registry (core/leafplan.py, DESIGN.md §3): every per-leaf routing
+decision — leading stack axes, kernel route (``pallas_flat`` |
+``pallas_shard_map`` | ``dot_general``), buffer/Gram PartitionSpecs, n-tile —
+is computed ONCE per leaf from the real param pytree + mesh + the model's
+structural `param_stack_dims()` annotation, and carried as a pytree of frozen
+`LeafPlan` records aligned 1:1 with params/buffers/grams. `plans_for(params)`
+builds (and caches) the table — it reads only shape/path metadata, so it also
+works at trace time inside a jitted step — and `plan_table()` renders the
+audited dispatch table:
+
+    print(acc.plan_table(params))
+    # path           route             stack  shape        flat_n  spec ...
+    # /seg0/attn/wqkv pallas_shard_map 1      48x2048x2560 5242880 ...
+
 Streaming Gram (DESIGN.md §2): with cfg.streaming_gram the (stack..., m, m)
 Gram is maintained incrementally — each record adds one O(m*n) row pass —
 so `apply` skips the O(m^2*n) gram_matrix recompute entirely and runs pure
@@ -24,35 +39,85 @@ correctness oracle (and the cfg.streaming_gram=False A/B baseline).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dmd, snapshots as snap
+from repro.core import dmd, leafplan, snapshots as snap
 
 PyTree = Any
 
 
-def dmd_leaf_jump(cfg, path, p, buf, gram, relax):
+@dataclass
+class LeafJump:
+    """Result of one leaf's DMD jump. Deliberately NOT a registered pytree:
+    it must survive tree_map as an opaque leaf so callers can split it with
+    an isinstance check — the old (params, rank) tuples were sniffed by
+    shape, which silently mis-split params pytrees containing genuine
+    2-tuple nodes."""
+    params: Any
+    rank: Any
+
+
+def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
     """One leaf of the DMD jump: coefficients from `gram` (the carried
     streaming Gram; recomputed from the buffer when None) + one combine
-    pass. Shared by DMDAccelerator.apply and train.step.make_dmd_step."""
-    nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
+    pass, both kernel-routed by the leaf's plan. Shared by
+    DMDAccelerator.apply and train.step.make_dmd_step."""
+    from repro.kernels import ops, sharded
+
+    nstack = plan.stack_dims
+    anchor_first = cfg.anchor == "first"
     if gram is None:
-        gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
-                               upcast=cfg.gram_upcast)
+        if plan.route == "pallas_shard_map" and plan.anchor_ok:
+            gram = sharded.gram(buf, plan, anchor_first=anchor_first)
+        elif plan.route == "pallas_flat" and plan.anchor_ok:
+            gram = ops.gram(buf, anchor_first=anchor_first,
+                            block_n=plan.block_n)
+        else:
+            gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
+                                   upcast=cfg.gram_upcast)
     c, info = dmd.dmd_coefficients(
         gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
         clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
         affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
-    w = dmd.combine_snapshots(buf, c, stack_dims=nstack,
-                              upcast=cfg.gram_upcast)
+    if plan.route == "pallas_shard_map":
+        w = sharded.combine(buf, c, plan)
+    elif plan.route == "pallas_flat":
+        w = ops.combine(buf, c, block_n=plan.block_n)
+    else:
+        w = dmd.combine_snapshots(buf, c, stack_dims=nstack,
+                                  upcast=cfg.gram_upcast)
     # Even c = e_last cannot save a non-finite BUFFER: the combine contracts
     # every row, and 0 * inf = NaN. The jump must never leave params less
     # finite than the last snapshot — fall back elementwise.
     w = jnp.where(jnp.isfinite(w), w, buf[-1].astype(w.dtype))
     return w.astype(p.dtype), jnp.mean(info["rank"].astype(jnp.float32))
+
+
+def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
+              grams: PyTree, relax) -> Tuple[PyTree, jnp.ndarray]:
+    """Whole-pytree DMD jump keyed by the plan table: returns (new_params,
+    mean_rank). Excluded leaves (plan None) pass through untouched."""
+    def one(plan, p, buf, g):
+        if plan is None or buf is None:
+            return p
+        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, relax)
+        return LeafJump(w, rank)
+
+    out = jax.tree_util.tree_map(one, plans, params, buffers, grams,
+                                 is_leaf=leafplan.is_plan_leaf)
+    is_jump = lambda x: isinstance(x, LeafJump)
+    new_params = jax.tree_util.tree_map(
+        lambda o: o.params if isinstance(o, LeafJump) else o, out,
+        is_leaf=is_jump)
+    ranks = [o.rank for o in jax.tree_util.tree_leaves(out, is_leaf=is_jump)
+             if isinstance(o, LeafJump)]
+    mean_rank = (jnp.mean(jnp.stack([r.astype(jnp.float32) for r in ranks]))
+                 if ranks else jnp.zeros((), jnp.float32))
+    return new_params, mean_rank
 
 
 def _none_like(buffers: PyTree) -> PyTree:
@@ -62,8 +127,15 @@ def _none_like(buffers: PyTree) -> PyTree:
 
 
 class DMDAccelerator:
-    def __init__(self, cfg):
+    def __init__(self, cfg, *, mesh=None, stack_dims: Optional[PyTree] = None):
+        """`mesh` + `stack_dims` (the model's structural
+        `param_stack_dims()` pytree; None = no stacked leaves) feed the
+        LeafPlan table built lazily from the first param pytree seen."""
         self.cfg = cfg
+        self.mesh = mesh
+        self.stack_dims = stack_dims
+        self._plans = None
+        self._plans_key = None
         self._apply_jit = None
 
     @property
@@ -73,6 +145,30 @@ class DMDAccelerator:
         recompute path.)"""
         return (self.cfg.enabled and self.cfg.streaming_gram
                 and self.cfg.anchor in ("none", "first"))
+
+    # ---- the per-leaf dispatch table --------------------------------------
+    def plans_for(self, params: PyTree) -> PyTree:
+        """LeafPlan pytree for `params`, cached by structure+shape. Reads
+        only metadata, so it is trace-safe (params may be tracers or
+        ShapeDtypeStructs)."""
+        key = (jax.tree_util.tree_structure(params),
+               tuple(tuple(l.shape)
+                     for l in jax.tree_util.tree_leaves(params)))
+        if self._plans is None or self._plans_key != key:
+            self._plans = leafplan.build_plans(params, self.cfg, self.mesh,
+                                               self.stack_dims)
+            self._plans_key = key
+        return self._plans
+
+    def plan_table(self, params: Optional[PyTree] = None) -> str:
+        """Audited dispatch-table dump (path / route / stack / shape / spec
+        per selected leaf). Needs the plans built — pass `params` on first
+        use."""
+        if params is not None:
+            self.plans_for(params)
+        if self._plans is None:
+            raise ValueError("no plans built yet — pass params")
+        return leafplan.plan_table(self._plans)
 
     # ---- schedule ---------------------------------------------------------
     # Cycle after warmup: [cooldown unrecorded steps][m recorded steps -> jump]
@@ -111,13 +207,15 @@ class DMDAccelerator:
     def init(self, params: PyTree) -> PyTree:
         if not self.cfg.enabled:
             return None
-        return snap.init_buffers(params, self.cfg)
+        return snap.init_buffers(params, self.cfg, self.plans_for(params))
 
     def init_grams(self, buffers: PyTree) -> Optional[PyTree]:
         """Running-Gram pytree mirroring `buffers` (None when not streaming)."""
         if buffers is None or not self.streaming:
             return None
-        return snap.init_grams(buffers, self.cfg)
+        if self._plans is None:
+            raise ValueError("init_grams before init: no LeafPlan table yet")
+        return snap.init_grams(buffers, self.cfg, self._plans)
 
     def record(self, buffers: PyTree, params: PyTree, slot,
                grams: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
@@ -127,29 +225,20 @@ class DMDAccelerator:
         acc.record(...)` is the one idiom regardless of configuration."""
         if buffers is None:
             return None, None
-        new_bufs = snap.record(buffers, params, slot)
+        plans = self.plans_for(params)
+        new_bufs = snap.record(buffers, params, slot, plans)
         if grams is None:
             return new_bufs, None
-        new_grams = snap.update_grams(grams, new_bufs, params, slot, self.cfg)
+        new_grams = snap.update_grams(grams, new_bufs, params, slot,
+                                      self.cfg, plans)
         return new_bufs, new_grams
 
     # ---- the DMD jump -----------------------------------------------------
     def _apply_impl(self, params: PyTree, buffers: PyTree, grams: PyTree,
                     relax: jnp.ndarray) -> Tuple[PyTree, dict]:
-        cfg = self.cfg
-
-        def one(path, p, buf, g):
-            if buf is None:
-                return p, jnp.asarray(0, jnp.int32)
-            return dmd_leaf_jump(cfg, path, p, buf, g, relax)
-
-        out = jax.tree_util.tree_map_with_path(one, params, buffers, grams,
-                                               is_leaf=lambda x: x is None)
-        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
-        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
-        ranks = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
-        mean_rank = jnp.mean(jnp.stack(
-            [r.astype(jnp.float32) for r in jax.tree_util.tree_leaves(ranks)]))
+        plans = self.plans_for(params)
+        new_params, mean_rank = jump_tree(self.cfg, plans, params, buffers,
+                                          grams, relax)
         return new_params, {"mean_rank": mean_rank}
 
     def apply(self, params: PyTree, buffers: PyTree,
@@ -159,6 +248,7 @@ class DMDAccelerator:
             return params, {}
         if grams is None or not self.streaming:
             grams = _none_like(buffers)
+        self.plans_for(params)        # build outside the trace for caching
         if self._apply_jit is None:
             self._apply_jit = jax.jit(self._apply_impl, donate_argnums=(0,))
         relax = jnp.asarray(self.relax_for_round(round_idx), jnp.float32)

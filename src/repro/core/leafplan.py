@@ -1,0 +1,255 @@
+"""LeafPlan: the per-leaf DMD dispatch table (DESIGN.md §3).
+
+The paper's method is per-layer by construction — every DMD round runs an
+independent Gram/coefficient/combine pipeline per weight tensor — so the
+per-leaf routing decisions (how many leading stack axes a leaf carries, which
+kernel route serves its data passes, how its snapshot buffer is sharded) are
+the hot-path control plane of the whole reproduction. Before this module
+those decisions were smeared across five call sites (a path-string matcher in
+snapshots.py, the kernel-vs-dot_general conditional in update_grams, anchor
+gating in the accelerator, gram PartitionSpecs in launch/inputs.py, and the
+path-regex sharding rules). Now they are computed ONCE, at accelerator init,
+from the real param pytree + mesh, and threaded everywhere as a pytree of
+frozen `LeafPlan` records.
+
+Stack dims are STRUCTURAL: models that stack layer params for lax.scan expose
+the stacking via `param_stack_dims()` (see models/transformer.py — derived
+from the segment plan, the same source of truth that created the stacked
+leading axes), and `build_plans` consumes that pytree. No more guessing layer
+structure from substrings of the flattened path.
+
+Kernel routes (see kernels/ops.py + kernels/sharded.py):
+
+  * ``pallas_flat``       — flat-safe leaves (no stack axes, not sharded):
+                            the (m, n) Pallas kernels after a free reshape.
+  * ``pallas_shard_map``  — stacked and/or sharded leaves: the same Pallas
+                            kernels run per shard under shard_map (local
+                            flatten + fp32 partial + O(stack·m²)/O(stack·m)
+                            psum), vmapped over stack axes. Degrades
+                            gracefully to local vmapped kernels when no mesh
+                            is active.
+  * ``dot_general``       — the batched-contraction reference path in
+                            core/dmd.py (config override / oracle).
+
+`plan_table()` renders the whole table for auditing; tests/test_configs.py
+pins it for the production configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+ROUTES = ("pallas_flat", "pallas_shard_map", "dot_general")
+
+
+@dataclass(frozen=True)
+class LeafPlan:
+    """Per-leaf dispatch record, computed once at accelerator init.
+
+    Deliberately NOT a registered pytree: a LeafPlan is static metadata and
+    must stay a *leaf* under tree_map so plan pytrees align 1:1 with param /
+    buffer / gram pytrees.
+    """
+    path: str                     # normalized param path ("/seg0/attn/wqkv")
+    shape: Tuple[int, ...]        # param leaf shape (stack dims included)
+    dtype: str                    # param dtype name (audit only)
+    stack_dims: int               # leading per-layer batch axes (after the
+                                  # snapshot axis once buffered)
+    flat_size: int                # flattened param size per stacked layer
+    route: str                    # one of ROUTES
+    anchor_ok: bool               # streaming one-pass row update valid
+                                  # (anchor in {none, first})
+    sharded: bool                 # any non-stack dim sharded on a >1 axis
+    param_spec: P                 # full-length spec for the param leaf
+    snapshot_spec: P              # spec for the (m, *shape) buffer leaf
+    gram_spec: P                  # spec for the (stack..., m, m) Gram leaf
+    block_n: int                  # n-tile for the Pallas kernels (128-lane
+                                  # multiple, clamped to the leaf)
+    mesh: Optional[Mesh] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def stack_shape(self) -> Tuple[int, ...]:
+        return self.shape[:self.stack_dims]
+
+    @property
+    def stack_spec_entries(self) -> Tuple[Any, ...]:
+        ent = tuple(self.param_spec)
+        k = self.stack_dims
+        return (ent[:k] + (None,) * (k - len(ent)))[:k]
+
+    def psum_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the shard-local Gram partials must be psum'd over: every
+        axis sharding a CONTRACTED (non-stack) dim of the leaf."""
+        axes: List[str] = []
+        for e in tuple(self.param_spec)[self.stack_dims:]:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None and a not in axes:
+                    axes.append(a)
+        return tuple(axes)
+
+
+def default_block_n(flat_size: int, cap: int = 2048) -> int:
+    """Largest useful n-tile for a leaf: a multiple of 128 lanes, never wider
+    than the (lane-padded) leaf itself — a (m, 7) leaf gets one 128-lane tile,
+    not a 2048-lane one (padding is exact: zero lanes contribute zero).
+    Delegates to the kernels' own clamp so plan and wrapper always agree."""
+    from repro.kernels.ops import lane_block
+    return lane_block(cap, flat_size)
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _full_spec(spec: P, ndim: int) -> P:
+    ent = tuple(spec)[:ndim]
+    return P(*(ent + (None,) * (ndim - len(ent))))
+
+
+def _is_sharded(entries, mesh: Optional[Mesh]) -> bool:
+    if mesh is None:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for e in entries:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None and sizes.get(a, 1) > 1:
+                return True
+    return False
+
+
+def _resolve_route(cfg, stack_dims: int, sharded: bool) -> str:
+    forced = getattr(cfg, "kernel_route", "auto")
+    if forced not in ("auto",) + ROUTES:
+        raise ValueError(f"unknown dmd.kernel_route {forced!r}")
+    auto = ("pallas_shard_map" if (stack_dims > 0 or sharded)
+            else "pallas_flat")
+    if forced == "auto":
+        return auto
+    if forced == "pallas_flat" and (stack_dims > 0 or sharded):
+        return auto            # flattening a stacked/sharded leaf is invalid
+    return forced
+
+
+def build_plans(params: PyTree, cfg, mesh: Optional[Mesh] = None,
+                stack_dims: Optional[PyTree] = None) -> PyTree:
+    """params (+ optional stack-dims pytree) -> pytree of LeafPlan | None.
+
+    `stack_dims` is either a pytree of ints mirroring `params` (the
+    structural annotation from `LanguageModel.param_stack_dims()`), a
+    callable ``(normalized_path, leaf) -> int``, or None (no stacked leaves —
+    plain MLPs / benchmark pytrees). Works on tracers and ShapeDtypeStructs:
+    only shape/dtype/path metadata is read, so plans can be built at trace
+    time inside a jitted step.
+    """
+    from repro.core.snapshots import param_filter_fn
+    from repro.distributed.sharding import normalize_path, spec_for_path
+
+    pred = param_filter_fn(cfg)
+
+    if stack_dims is None:
+        # No annotation means NO stacked leaves. Guessing zero for a
+        # scan-stacked tree would silently merge per-layer trajectories into
+        # one Gram — numerically wrong DMD, no error. The repo's segment
+        # convention (top-level "seg<i>" keys from transformer.init_params)
+        # is detectable, so refuse loudly instead.
+        if isinstance(params, dict) and any(
+                k.startswith("seg") and k[3:].isdigit() for k in params):
+            raise ValueError(
+                "params look segment-stacked (top-level 'seg<i>' keys) but "
+                "no stack_dims annotation was given — pass the model's "
+                "param_stack_dims() (or an accelerator built with it, e.g. "
+                "make_dmd_step(acfg, model=model) / acc=...) so the paper's "
+                "per-layer DMD stays per-layer")
+        stack_of = lambda path, leaf: 0
+    elif callable(stack_dims):
+        stack_of = stack_dims
+    else:
+        flat_sd = {
+            normalize_path(jax.tree_util.keystr(kp)): int(v)
+            for kp, v in jax.tree_util.tree_flatten_with_path(stack_dims)[0]}
+
+        def stack_of(path, leaf):
+            return flat_sd.get(path, 0)
+
+    def one(keypath, leaf):
+        raw = jax.tree_util.keystr(keypath)
+        path = normalize_path(raw)
+        if not pred(raw, leaf):
+            return None
+        nstack = stack_of(path, leaf)
+        if not 0 <= nstack < leaf.ndim + 1:
+            raise ValueError(
+                f"stack_dims {nstack} out of range for {path} {leaf.shape}")
+        # No mesh -> nothing is sharded: fully-replicated specs, so
+        # psum_axes() is empty and the shard_map wrappers run purely local.
+        pspec = _full_spec(
+            spec_for_path(path, leaf.ndim, mesh, leaf.shape)
+            if mesh is not None else P(), leaf.ndim)
+        ent = tuple(pspec)
+        sharded = _is_sharded(ent[nstack:], mesh)
+        flat_size = _prod(leaf.shape[nstack:])
+        route = _resolve_route(cfg, nstack, sharded)
+        return LeafPlan(
+            path=path,
+            shape=tuple(int(d) for d in leaf.shape),
+            dtype=str(getattr(leaf, "dtype", "?")),
+            stack_dims=nstack,
+            flat_size=flat_size,
+            route=route,
+            anchor_ok=cfg.anchor in ("none", "first"),
+            sharded=sharded,
+            param_spec=pspec,
+            snapshot_spec=P(None, *ent),
+            gram_spec=P(*((ent[:nstack] + (None,) * (nstack - len(ent))
+                           )[:nstack]), None, None),
+            block_n=default_block_n(flat_size),
+            mesh=mesh,
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def is_plan_leaf(x) -> bool:
+    """is_leaf predicate for tree_maps over plan pytrees (None = excluded)."""
+    return x is None or isinstance(x, LeafPlan)
+
+
+def plan_entries(plans: PyTree) -> List[LeafPlan]:
+    """Flat list of the selected leaves' plans, in pytree order."""
+    return [p for p in jax.tree_util.tree_leaves(plans, is_leaf=is_plan_leaf)
+            if isinstance(p, LeafPlan)]
+
+
+def plan_summary(plans: PyTree) -> Dict[str, Tuple[str, int]]:
+    """{path: (route, stack_dims)} — the regression-pin view of the table."""
+    return {p.path: (p.route, p.stack_dims) for p in plan_entries(plans)}
+
+
+def plan_table(plans: PyTree) -> str:
+    """Human-readable audit dump of the whole dispatch table."""
+    rows = [("path", "route", "stack", "shape", "flat_n", "block_n",
+             "spec", "psum")]
+    for p in plan_entries(plans):
+        rows.append((p.path, p.route, str(p.stack_dims),
+                     "x".join(map(str, p.shape)), str(p.flat_size),
+                     str(p.block_n), str(p.param_spec),
+                     ",".join(p.psum_axes()) or "-"))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)

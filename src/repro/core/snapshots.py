@@ -4,15 +4,21 @@ A buffer pytree mirrors the (filtered) param pytree with a leading snapshot
 axis of length m. Buffers are stored in ``snapshot_dtype`` and sharded with
 the *same* PartitionSpec as the parameter (snapshot axis replicated), so the
 Gram pass is local + one O(m^2) psum — see DESIGN.md §2.
+
+Per-leaf routing (stack axes, kernel route, specs) comes from the LeafPlan
+pytree (core/leafplan.py), computed once at accelerator init and threaded
+through every function here — the old path-string stack matcher is gone.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dmd as dmd_math
+from repro.core.leafplan import LeafPlan, build_plans, is_plan_leaf
 
 PyTree = Any
 
@@ -43,27 +49,37 @@ def selected_paths(params: PyTree, cfg) -> Dict[str, bool]:
     return {path: pred(path, leaf) for path, leaf in _iter_paths(params)}
 
 
-def init_buffers(params: PyTree, cfg) -> PyTree:
+def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None
+                 ) -> PyTree:
     """Zeros buffer (m, *shape) per selected leaf; None for excluded leaves.
 
-    Abstract-aware: ShapeDtypeStruct params produce ShapeDtypeStruct buffers
-    (the dry-run path must never materialize m x params of zeros).
+    Selection comes from `plans` when given (the accelerator path), else from
+    the raw param filter (standalone callers with flat pytrees). Abstract-
+    aware: ShapeDtypeStruct params produce ShapeDtypeStruct buffers (the
+    dry-run path must never materialize m x params of zeros).
     """
-    pred = param_filter_fn(cfg)
+    if plans is None:
+        plans = build_plans(params, cfg)
     dtype = jnp.dtype(cfg.snapshot_dtype)
 
-    def make(path, leaf):
-        if not pred(jax.tree_util.keystr(path), leaf):
+    def make(plan, leaf):
+        if plan is None:
             return None
         shape = (cfg.m,) + tuple(leaf.shape)
         if isinstance(leaf, jax.ShapeDtypeStruct):
             return jax.ShapeDtypeStruct(shape, dtype)
         return jnp.zeros(shape, dtype)
-    return jax.tree_util.tree_map_with_path(make, params)
+    return jax.tree_util.tree_map(make, plans, params, is_leaf=is_plan_leaf)
 
 
-def record(buffers: PyTree, params: PyTree, slot) -> PyTree:
-    """Write current params into row `slot` of each buffer (donated update)."""
+def record(buffers: PyTree, params: PyTree, slot,
+           plans: Optional[PyTree] = None) -> PyTree:
+    """Write current params into row `slot` of each buffer (donated update).
+    `plans` is accepted for API uniformity with the other buffer passes (the
+    row write needs no routing — it is a local dynamic-slice regardless of
+    sharding or stacking)."""
+    del plans
+
     def upd(buf, p):
         if buf is None:
             return None
@@ -73,85 +89,93 @@ def record(buffers: PyTree, params: PyTree, slot) -> PyTree:
                                   is_leaf=lambda x: x is None)
 
 
-def init_grams(buffers: PyTree, cfg) -> PyTree:
+def init_grams(buffers: PyTree, cfg, plans: PyTree) -> PyTree:
     """Zeros running Gram (stack..., m, m) fp32 per buffer leaf; None where
     the buffer is None. Mirrors the buffer pytree so the two thread through
     jitted steps together. Abstract-aware like init_buffers."""
-    def make(path, buf):
-        if buf is None:
+    def make(plan, buf):
+        if buf is None or plan is None:
             return None
-        nstack = stack_dims_for_path(jax.tree_util.keystr(path))
-        shape = tuple(buf.shape[1:1 + nstack]) + (cfg.m, cfg.m)
+        shape = plan.stack_shape + (cfg.m, cfg.m)
         if isinstance(buf, jax.ShapeDtypeStruct):
             return jax.ShapeDtypeStruct(shape, jnp.float32)
         return jnp.zeros(shape, jnp.float32)
-    return jax.tree_util.tree_map_with_path(make, buffers,
-                                            is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_map(make, plans, buffers, is_leaf=is_plan_leaf)
+
+
+def _stream_gram_row(plan: LeafPlan, buf, p, cfg):
+    """One leaf's streaming row <d_p, d_j>, dispatched by the plan's route
+    (DESIGN.md §3): the flat Pallas kernels for flat-safe leaves, the
+    shard_map'd kernels for stacked/sharded ones (local flatten + psum —
+    never a GSPMD all-gather), dot_general as the audited fallback."""
+    from repro.kernels import ops, sharded
+
+    anchor_first = cfg.anchor == "first"
+    if plan.route == "pallas_flat":
+        return ops.gram_row(buf, p.astype(buf.dtype),
+                            anchor_first=anchor_first, block_n=plan.block_n)
+    if plan.route == "pallas_shard_map":
+        return sharded.gram_row(buf, p.astype(buf.dtype), plan,
+                                anchor_first=anchor_first)
+    return dmd_math.gram_row_matrix(
+        buf, p.astype(buf.dtype), anchor=cfg.anchor,
+        stack_dims=plan.stack_dims, upcast=cfg.gram_upcast)
 
 
 def update_grams(grams: PyTree, buffers: PyTree, params: PyTree, slot,
-                 cfg) -> PyTree:
+                 cfg, plans: PyTree) -> PyTree:
     """Streaming Gram maintenance: after `record` wrote params into row
     `slot`, refresh row+column `slot` of every running Gram with one O(m*n)
-    anchored inner-product pass per leaf (kernel-dispatched for flat leaves,
-    batched dot_general for stacked ones). See DESIGN.md §2 for why this
-    equals the full gram_matrix recompute at every window-complete point.
+    anchored inner-product pass per leaf, kernel-routed by the leaf's plan.
+    See DESIGN.md §2 for why this equals the full gram_matrix recompute at
+    every window-complete point.
     """
-    from repro.kernels import ops
-
-    def upd(path, g, buf, p):
-        if g is None:
+    def upd(plan, g, buf, p):
+        if g is None or plan is None:
             return None
-        nstack = stack_dims_for_path(jax.tree_util.keystr(path))
-        if nstack == 0 and cfg.gram_upcast and buf.ndim == 2:
-            # already-flat leaf: kernel dispatch needs no reshape, so it is
-            # safe under GSPMD too (TPU -> Pallas, CPU -> dot_general ref)
-            row = ops.gram_row(buf, p.astype(buf.dtype),
-                               anchor_first=(cfg.anchor == "first"))
-        else:
-            # multi-dim / stacked / bf16-streaming leaves: the batched
-            # dot_general contracts trailing axes in place — flattening a
-            # sharded buffer inside the fused train step would force GSPMD
-            # to all-gather it every recorded step (DESIGN.md §3; wrapping
-            # the Pallas kernel in shard_map is the open item for these)
-            row = dmd_math.gram_row_matrix(
-                buf, p.astype(buf.dtype), anchor=cfg.anchor,
-                stack_dims=nstack, upcast=cfg.gram_upcast)
+        row = _stream_gram_row(plan, buf, p, cfg)
         return dmd_math.set_gram_row(g, row, slot)
 
-    return jax.tree_util.tree_map_with_path(upd, grams, buffers, params,
-                                            is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_map(upd, plans, grams, buffers, params,
+                                  is_leaf=is_plan_leaf)
 
 
-def recompute_grams(grams: PyTree, buffers: PyTree, cfg) -> PyTree:
+def recompute_grams(grams: PyTree, buffers: PyTree, cfg, plans: PyTree
+                    ) -> PyTree:
     """Rebuild running Grams whose leaf is all-zero while its buffer is not
     (a checkpoint written before streaming Grams existed restores the
     template's zeros — the next mid-window apply would otherwise solve on a
     Gram with zeroed rows). Leaves with real data pass through untouched, so
-    a streaming-era checkpoint resumes with its carried values. Host-side
-    (restore path), one O(m^2*n) oracle pass per stale leaf."""
-    def fix(path, g, buf):
-        if g is None or buf is None:
-            return g
-        if bool(jnp.any(g != 0)) or not bool(jnp.any(buf != 0)):
-            return g
-        nstack = stack_dims_for_path(jax.tree_util.keystr(path))
-        return dmd_math.gram_matrix(buf, anchor=cfg.anchor,
-                                    stack_dims=nstack,
-                                    upcast=cfg.gram_upcast)
-    return jax.tree_util.tree_map_with_path(fix, grams, buffers,
-                                            is_leaf=lambda x: x is None)
+    a streaming-era checkpoint resumes with its carried values.
 
+    Host-side (restore path). The staleness test is ONE batched device
+    fetch: the per-leaf scalars are computed in a single jitted program and
+    pulled in one round-trip, instead of the old one-`bool(jnp.any(...))`
+    -sync-per-leaf crawl. Each stale leaf then pays one O(m^2*n) oracle pass.
+    """
+    flat_g, treedef = jax.tree_util.tree_flatten(
+        grams, is_leaf=lambda x: x is None)
+    flat_b = treedef.flatten_up_to(buffers)
+    live = [(i, g, b) for i, (g, b) in enumerate(zip(flat_g, flat_b))
+            if g is not None and b is not None]
+    if not live:
+        return grams
 
-def stack_dims_for_path(path: str) -> int:
-    """How many leading stack axes a param leaf carries (after the snapshot
-    axis): segment params are stacked once; gemma local / zamba mamba
-    sub-stacks add a second. The paper's DMD is per-LAYER, so these axes are
-    batch dims for the Gram/coefficient math."""
-    p = path.replace("['", "/").replace("']", "").replace(".", "/")
-    if "/seg" not in p:
-        return 0
-    n = 1
-    if "/local/" in p or "/mamba/" in p:
-        n += 1
-    return n
+    @jax.jit
+    def staleness(gs, bs):
+        return jnp.stack([(~jnp.any(g != 0)) & jnp.any(b != 0)
+                          for g, b in zip(gs, bs)])
+
+    stale = np.asarray(staleness([g for _, g, _ in live],
+                                 [b for _, _, b in live]))  # one fetch
+    flat_p = treedef.flatten_up_to(plans)
+    out = list(flat_g)
+    for flag, (i, g, buf) in zip(stale, live):
+        if not bool(flag):
+            continue
+        plan = flat_p[i]
+        nstack = plan.stack_dims if plan is not None else 0
+        out[i] = dmd_math.gram_matrix(buf, anchor=cfg.anchor,
+                                      stack_dims=nstack,
+                                      upcast=cfg.gram_upcast)
+    return jax.tree_util.tree_unflatten(treedef, out)

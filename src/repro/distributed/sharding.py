@@ -27,14 +27,25 @@ _MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
     "repro_mesh", default=None)
 
 
-def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check_rep: bool = True):
     """`jax.shard_map` across JAX versions (0.4.x only has the experimental
-    spelling; same semantics for the keyword form used here)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as _shard_map
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    spelling; same semantics for the keyword form used here).
+
+    check_rep=False disables the per-primitive replication check — required
+    whenever the body contains a `pallas_call` (no replication rule exists
+    for it; the kernels/sharded.py wrappers pass it explicitly). Newer JAX
+    renamed the flag `check_vma`; both spellings are tried.
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    for flag in ("check_rep", "check_vma"):
+        try:
+            return impl(f, **kw, **{flag: check_rep})
+        except TypeError:
+            continue
+    return impl(f, **kw)
 
 
 def set_mesh(mesh: Mesh):

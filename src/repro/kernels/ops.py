@@ -62,8 +62,25 @@ def _interp(interpret) -> bool:
     return bool(interpret)
 
 
-def _block(block_n: int, n: int) -> int:
-    return min(block_n, max(n, 128))
+LANES = 128                       # TPU vector-lane width (last-dim tiling)
+
+
+def lane_block(block_n: int, n: int) -> int:
+    """Clamp the requested n-tile to the leaf: a 128-lane multiple no wider
+    than the lane-padded leaf itself. The old ``min(block_n, max(n, 128))``
+    returned blocks that were NOT lane multiples for 128 < n < block_n
+    (n=333 -> block 333) — interpret mode shrugged, compiled TPU Pallas
+    requires the multiple. Tiny leaves (n < 128) get one 128-lane tile; the
+    wrappers zero-pad to the block, and zero lanes contribute zero to every
+    inner product, so padding is exact (tests: tiny-leaf kernel-vs-oracle).
+
+    The ONE home of this invariant: core/leafplan.py sizes plan.block_n with
+    it too, so the plan and the kernel wrappers can never disagree."""
+    n_pad = max(-(-max(n, 1) // LANES) * LANES, LANES)
+    return max(min(block_n // LANES * LANES, n_pad), LANES)
+
+
+_block = lane_block               # internal call sites
 
 
 def gram(snapshots: jnp.ndarray, *, anchor_first: bool = False,

@@ -37,7 +37,6 @@ from repro.distributed.sharding import mesh_context, partition_specs
 from repro.models.transformer import LanguageModel
 from repro.train.state import TrainState
 from repro.train.step import make_train_step, make_dmd_step, resolve_grad_accum
-from repro.core import snapshots as snap
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 HBM_BYTES = 16 * 1024**3       # v5e per-chip budget
@@ -93,22 +92,17 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
         from repro.optim import make_optimizer
         opt = make_optimizer(acfg.optimizer)
         opt_state = jax.eval_shape(opt.init, params)
-        bufs = (snap.init_buffers(params, acfg.dmd)
-                if acfg.dmd.enabled else None)
-        if bufs is not None:
-            bufs = jax.tree_util.tree_map(
-                lambda l: (jax.ShapeDtypeStruct(l.shape, l.dtype)
-                           if l is not None else None),
-                bufs, is_leaf=lambda x: x is None)
         from repro.core.accelerator import DMDAccelerator
-        grams = (snap.init_grams(bufs, acfg.dmd)
-                 if bufs is not None and DMDAccelerator(acfg.dmd).streaming
-                 else None)
+        acc = DMDAccelerator(acfg.dmd, mesh=mesh,
+                             stack_dims=model.param_stack_dims())
+        bufs = acc.init(params)    # abstract-aware: ShapeDtypeStruct leaves
+        grams = acc.init_grams(bufs)
         state = TrainState(params, opt_state,
                            jax.ShapeDtypeStruct((), jnp.int32), bufs, grams)
-        st_specs = inputs_mod.state_specs(state, mesh)
+        st_specs = inputs_mod.state_specs(state, mesh,
+                                          plans=acc.plans_for(params))
         step = make_train_step(model, acfg, mesh=mesh,
-                               global_batch=shape.global_batch)
+                               global_batch=shape.global_batch, acc=acc)
         args = (state, batch, jax.ShapeDtypeStruct((), jnp.int32))
         shardings = (inputs_mod.shardings_of(st_specs, mesh),
                      inputs_mod.shardings_of(batch_specs, mesh),
@@ -181,7 +175,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             t_compile = time.time() - t0 - t_lower
 
             ma = compiled.memory_analysis()
+            mstat = lambda name: int(getattr(ma, name, 0) or 0)
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):    # older jaxlibs: one dict
+                ca = ca[0] if ca else {}         # per executable
             hlo = compiled.as_text()
             coll, coll_counts = parse_collectives(hlo)
 
@@ -191,16 +188,19 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
                 "lower_s": round(t_lower, 1),
                 "compile_s": round(t_compile, 1),
                 "n_devices": n_dev,
+                # getattr-guarded: CPU jaxlibs lack some CompiledMemoryStats
+                # fields (peak_memory_in_bytes is TPU-only on 0.4.x)
                 "memory": {
-                    "argument_bytes": ma.argument_size_in_bytes,
-                    "output_bytes": ma.output_size_in_bytes,
-                    "temp_bytes": ma.temp_size_in_bytes,
-                    "peak_bytes": ma.peak_memory_in_bytes,
-                    "alias_bytes": ma.alias_size_in_bytes,
+                    "argument_bytes": mstat("argument_size_in_bytes"),
+                    "output_bytes": mstat("output_size_in_bytes"),
+                    "temp_bytes": mstat("temp_size_in_bytes"),
+                    "peak_bytes": mstat("peak_memory_in_bytes"),
+                    "alias_bytes": mstat("alias_size_in_bytes"),
                 },
                 "fits_hbm": bool(
-                    (ma.argument_size_in_bytes - ma.alias_size_in_bytes)
-                    + ma.peak_memory_in_bytes < HBM_BYTES * 1.0),
+                    (mstat("argument_size_in_bytes")
+                     - mstat("alias_size_in_bytes"))
+                    + mstat("peak_memory_in_bytes") < HBM_BYTES * 1.0),
                 "cost": {"flops": ca.get("flops"),
                          "bytes_accessed": ca.get("bytes accessed")},
                 "collective_bytes_local": coll,
@@ -212,8 +212,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             })
             print(f"[ok] {arch} {shape_name} {mesh_kind}: "
                   f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
-                  f"args/dev {ma.argument_size_in_bytes/2**30:.2f}GiB "
-                  f"peak/dev {ma.peak_memory_in_bytes/2**30:.2f}GiB "
+                  f"args/dev {mstat('argument_size_in_bytes')/2**30:.2f}GiB "
+                  f"peak/dev {mstat('peak_memory_in_bytes')/2**30:.2f}GiB "
                   f"colls {sum(coll_counts.values())}")
     except Exception as e:
         rec["status"] = "error"

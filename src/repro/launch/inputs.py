@@ -116,9 +116,20 @@ def cache_partition_specs(caches: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree_util.tree_map_with_path(spec, caches)
 
 
-def state_specs(state_tree: PyTree, mesh: Mesh) -> PyTree:
-    """Specs for a TrainState: params/opt/dmd follow param rules; step = ()."""
+def state_specs(state_tree: PyTree, mesh: Mesh,
+                plans: Optional[PyTree] = None) -> PyTree:
+    """Specs for a TrainState: params/opt/dmd follow param rules; step = ().
+
+    When the accelerator's LeafPlan pytree is given, DMD buffer and Gram
+    specs come from the plan table (plan.snapshot_spec / plan.gram_spec — the
+    single audited source, DESIGN.md §3/§5) instead of being re-derived from
+    the path rules. Both derivations agree; the plan is authoritative.
+    """
+    from repro.core.leafplan import plan_entries
     from repro.distributed.sharding import resolve_rule, rule_for_path
+
+    plan_by_path = ({pl.path: pl for pl in plan_entries(plans)}
+                    if plans is not None else {})
 
     def one(path, leaf):
         p = normalize_path(jax.tree_util.keystr(path))
@@ -126,9 +137,15 @@ def state_specs(state_tree: PyTree, mesh: Mesh) -> PyTree:
         if nd == 0:
             return P()
         if p.startswith("/dmd_buffers"):
-            return _param_spec_of(p.split("/dmd_buffers", 1)[1], leaf, mesh,
-                                  lead=1)
+            sub = p.split("/dmd_buffers", 1)[1]
+            pl = plan_by_path.get(sub)
+            if pl is not None:
+                return pl.snapshot_spec
+            return _param_spec_of(sub, leaf, mesh, lead=1)
         if p.startswith("/dmd_gram"):
+            pl = plan_by_path.get(p.split("/dmd_gram", 1)[1])
+            if pl is not None:
+                return pl.gram_spec
             return P()          # (stack..., m, m) running Grams: O(m^2) bytes,
                                 # replicated (the psum'd reduction of the
                                 # sharded row pass — DESIGN.md §2)

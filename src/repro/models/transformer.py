@@ -163,6 +163,44 @@ def init_params(cfg: ModelConfig, key=None, abstract: bool = False) -> PyTree:
     return params
 
 
+def param_stack_dims(cfg: ModelConfig, params: Optional[PyTree] = None
+                     ) -> PyTree:
+    """Pytree of ints mirroring `init_params`: how many leading stack axes
+    each leaf carries. STRUCTURAL — derived from the segment plan + block
+    layout (the same source of truth that created the stacking via
+    `_stacked_init`), not from substrings of the flattened path. Consumed by
+    core/leafplan.py: the paper's DMD is per-LAYER, so these axes are batch
+    dims for the Gram/coefficient math.
+
+      * every ``seg{i}`` subtree is scanned -> 1 stack axis;
+      * the gemma super-block's ``local`` sub-stack and the zamba
+        super-block's ``mamba`` sub-stack add a second;
+      * everything outside segments (embeddings, final norm, zamba's shared
+        attention block — stored once, re-applied) has none.
+    """
+    params = params if params is not None else init_params(cfg, abstract=True)
+    plan = segment_plan(cfg)
+
+    def const(tree, n):
+        return jax.tree_util.tree_map(lambda _: n, tree)
+
+    def seg_dims(kind: str, subtree: PyTree) -> PyTree:
+        if kind == "gemma":
+            return {"local": const(subtree["local"], 2),
+                    "global": const(subtree["global"], 1)}
+        if kind == "zamba":
+            return {"mamba": const(subtree["mamba"], 2)}
+        return const(subtree, 1)
+
+    out = {}
+    for key, sub in params.items():
+        if key.startswith("seg") and key[3:].isdigit():
+            out[key] = seg_dims(plan[int(key[3:])].kind, sub)
+        else:
+            out[key] = const(sub, 0)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Per-kind block apply (single layer of a segment)
 # ---------------------------------------------------------------------------
@@ -392,6 +430,10 @@ class LanguageModel:
     # -- init ---------------------------------------------------------------
     def init(self, key=None, abstract: bool = False) -> PyTree:
         return init_params(self.cfg, key, abstract)
+
+    def param_stack_dims(self, params: Optional[PyTree] = None) -> PyTree:
+        """Structural stack-axis counts per leaf (see module-level fn)."""
+        return param_stack_dims(self.cfg, params)
 
     def param_count(self, params=None) -> int:
         params = params or self.init(abstract=True)

@@ -36,16 +36,23 @@ class Trainer:
         self.model = model
         self.acfg = acfg
         self.mesh = mesh
-        self.acc = DMDAccelerator(acfg.dmd)
+        # One accelerator — hence ONE LeafPlan dispatch table — shared by the
+        # schedule, the fused train step and the jump (DESIGN.md §3).
+        self.acc = DMDAccelerator(
+            acfg.dmd, mesh=mesh,
+            stack_dims=(model.param_stack_dims()
+                        if hasattr(model, "param_stack_dims") else None))
         self.opt = make_optimizer(acfg.optimizer)
         self.checkpoint_dir = checkpoint_dir or acfg.train.checkpoint_dir
         self.fail_at_step = fail_at_step
         self._preempted = False
 
         self.train_step = jax.jit(
-            make_train_step(model, acfg, mesh=mesh, loss_fn=loss_fn),
+            make_train_step(model, acfg, mesh=mesh, loss_fn=loss_fn,
+                            acc=self.acc),
             donate_argnums=(0,))
-        self.dmd_step = jax.jit(make_dmd_step(acfg), donate_argnums=(0,))
+        self.dmd_step = jax.jit(make_dmd_step(acfg, mesh=mesh, acc=self.acc),
+                                donate_argnums=(0,))
 
     # -- state ---------------------------------------------------------------
     def init_state(self, key=None) -> TrainState:
@@ -79,15 +86,19 @@ class Trainer:
             # Grams; rebuild those from the restored buffers so a mid-window
             # resume never applies DMD on a Gram with zeroed rows.
             state = state._replace(dmd_gram=snap.recompute_grams(
-                state.dmd_gram, state.dmd_buffers, self.acfg.dmd))
+                state.dmd_gram, state.dmd_buffers, self.acfg.dmd,
+                self.acc.plans_for(state.params)))
         if state is None or self.mesh is None:
             return state
         # Elastic restore: the template's leaves are single-device (init runs
         # before any mesh placement), so re-place every restored leaf against
         # the CURRENT mesh's shardings — a checkpoint written on one topology
-        # restores onto any other.
+        # restores onto any other. DMD buffer/Gram specs come from the plan
+        # table.
         from repro.launch.inputs import shardings_of, state_specs
-        sh = shardings_of(state_specs(state, self.mesh), self.mesh)
+        sh = shardings_of(state_specs(state, self.mesh,
+                                      plans=self.acc.plans_for(state.params)),
+                          self.mesh)
         return jax.tree_util.tree_map(
             lambda x, s: None if x is None else jax.device_put(x, s),
             state, sh, is_leaf=lambda x: x is None)

@@ -8,23 +8,27 @@ train_step:
   * fused DMD snapshot recording (lax.cond'd on the slot, so warmup/cooldown
     phases reuse the same executable) — with dmd.streaming_gram the O(m*n)
     Gram row update rides in the same cond, against params that are already
-    resident from the optimizer update,
+    resident from the optimizer update. The row pass is kernel-routed per
+    leaf by the accelerator's LeafPlan table (DESIGN.md §3): Pallas for flat
+    leaves, shard_map'd Pallas for stacked/sharded ones.
   * optional int8-compressed cross-pod gradient sync (distributed/gradsync).
 
 dmd_step: the paper's jump. With the streaming Gram carried in TrainState it
 is pure O(m^3) coefficient algebra + one combine pass; without it (the
 cfg.streaming_gram=False A/B baseline) it recomputes the full O(m^2*n) Gram.
+Both steps share the same accelerator instance (hence the same plan table) —
+pass `acc=` to avoid rebuilding it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import snapshots as snap
-from repro.core.accelerator import DMDAccelerator, dmd_leaf_jump, _none_like
+from repro.core.accelerator import DMDAccelerator, _none_like, jump_tree
 from repro.distributed.sharding import constrain
 from repro.optim import apply_updates, make_optimizer
 from repro.train.state import TrainState
@@ -44,14 +48,29 @@ def resolve_grad_accum(acfg, mesh, global_batch: int) -> int:
     return max(min(ga, global_batch // shards), 1)
 
 
+def _accelerator_for(model, acfg, mesh, acc: Optional[DMDAccelerator]
+                     ) -> DMDAccelerator:
+    """Shared accelerator (and hence LeafPlan table) for the step builders:
+    use the caller's, or build one wired to the model's structural stack-dim
+    annotation."""
+    if acc is not None:
+        return acc
+    sd = None
+    if model is not None and hasattr(model, "param_stack_dims"):
+        sd = model.param_stack_dims()
+    return DMDAccelerator(acfg.dmd, mesh=mesh, stack_dims=sd)
+
+
 def make_train_step(model, acfg, *, mesh=None, global_batch=None,
-                    loss_fn: Callable = None, donate: bool = True):
+                    loss_fn: Callable = None, donate: bool = True,
+                    acc: Optional[DMDAccelerator] = None):
     """Returns train_step(state, batch, dmd_slot) -> (state, metrics)."""
     opt = make_optimizer(acfg.optimizer)
     gb = global_batch or acfg.train.global_batch
     ga = resolve_grad_accum(acfg, mesh, gb)
     dmd_on = acfg.dmd.enabled
-    streaming_on = DMDAccelerator(acfg.dmd).streaming
+    acc = _accelerator_for(model, acfg, mesh, acc)
+    streaming_on = acc.streaming
     _loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
 
     def train_step(state: TrainState, batch: PyTree, dmd_slot) -> tuple:
@@ -96,13 +115,15 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
         buffers, grams = state.dmd_buffers, state.dmd_gram
         if dmd_on and buffers is not None:
             streaming = streaming_on and grams is not None
+            plans = acc.plans_for(params)       # trace-time, cached
 
             def write(args):
                 bufs, g = args
                 slot = jnp.maximum(dmd_slot, 0)
-                bufs = snap.record(bufs, params, slot)
+                bufs = snap.record(bufs, params, slot, plans)
                 if streaming:
-                    g = snap.update_grams(g, bufs, params, slot, acfg.dmd)
+                    g = snap.update_grams(g, bufs, params, slot, acfg.dmd,
+                                          plans)
                 return bufs, g
             buffers, grams = jax.lax.cond(dmd_slot >= 0, write, lambda a: a,
                                           (buffers, grams))
@@ -116,36 +137,28 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
     return train_step
 
 
-def make_dmd_step(acfg):
+def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
+                  model=None):
     """Returns dmd_step(state, relax) -> (state, info): the paper's jump."""
     cfg = acfg.dmd
     opt = make_optimizer(acfg.optimizer)
-    streaming_on = DMDAccelerator(cfg).streaming
+    acc = _accelerator_for(model, acfg, mesh, acc)
+    streaming_on = acc.streaming
 
     def dmd_step(state: TrainState, relax) -> tuple:
+        if state.dmd_buffers is None:
+            return state, {"mean_rank": jnp.zeros((), jnp.float32)}
         grams = state.dmd_gram
         if grams is None or not streaming_on:
             grams = _none_like(state.dmd_buffers)
-
-        def one(path, p, buf, g):
-            if buf is None:
-                return p, jnp.asarray(0, jnp.int32)
-            return dmd_leaf_jump(cfg, path, p, buf, g, relax)
-
-        out = jax.tree_util.tree_map_with_path(
-            one, state.params, state.dmd_buffers, grams,
-            is_leaf=lambda x: x is None)
-        is_pair = lambda x: (isinstance(x, tuple) and len(x) == 2
-                             and not isinstance(x[0], tuple))
-        params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
-        ranks = jnp.stack([jnp.mean(o[1].astype(jnp.float32)) for o in
-                           jax.tree_util.tree_leaves(out, is_leaf=is_pair)
-                           ]) if cfg.enabled else jnp.zeros((1,))
+        plans = acc.plans_for(state.params)
+        params, mean_rank = jump_tree(cfg, plans, state.params,
+                                      state.dmd_buffers, grams, relax)
         opt_state = state.opt_state
         if cfg.reset_opt_state:
             opt_state = opt.init(params)
         new_state = TrainState(params, opt_state, state.step,
                                state.dmd_buffers, state.dmd_gram)
-        return new_state, {"mean_rank": jnp.mean(ranks)}
+        return new_state, {"mean_rank": mean_rank}
 
     return dmd_step

@@ -8,6 +8,15 @@ Modes (argv[1]):
   elastic_save <dir>          train 2 steps on (2,2) mesh, checkpoint
   elastic_restore <dir>       restore on (4,) x model=2... different mesh,
                               run 1 more step, print checksum
+  gram_save <dir> keep|zero   train through one full DMD window on (2,2),
+                              checkpoint (zero: strip dmd_gram — the
+                              pre-streaming format)
+  gram_restore <dir>          restore on the REMAPPED (4,2) mesh; check every
+                              running Gram == gram_matrix oracle; GRAMS_OK
+  sharded_kernels             pallas_shard_map route vs dot_general oracle
+                              across window wraps (fsdp/tp-sharded + stacked
+                              leaves, forced interpret-mode Pallas), plus the
+                              update_grams HLO all-gather audit
 """
 import os
 import sys
@@ -69,6 +78,169 @@ def run_train(mesh_shape, axis_names, steps=6):
         return losses, checksum(state.params)
 
 
+def run_sharded_kernels():
+    """pallas_shard_map route == dot_general oracle on an 8-device mesh.
+
+    Leaves cover the shapes the flat kernels could never serve under GSPMD:
+    a 2-D fsdp+tp-sharded matrix, a tp-sharded vector, a bf16 fsdp+tp leaf
+    (gram_upcast=False semantics: fp32 accumulation happens in-kernel), and
+    a stacked (scan-over-layers) leaf. The Pallas bodies run through the
+    interpreter (forced backend) inside shard_map. Also audits the lowered
+    update_grams HLO: the whole point of the route is that NO buffer-sized
+    all-gather appears (DESIGN.md §3.4).
+    """
+    import re
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import dmd as dmd_mod, leafplan
+    from repro.core import snapshots as snap
+    from repro.kernels import ops, sharded
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    m = 5
+    cfg = DMDConfig(m=m, s=8, tol=1e-4, anchor="first", warmup_steps=0,
+                    cooldown_steps=0)
+    rng = np.random.default_rng(0)
+
+    def mk(shape, dtype=jnp.float32):
+        return jnp.asarray(rng.normal(size=shape), dtype)
+
+    params = {
+        "wqkv": mk((64, 32)),                    # ("data", "model"): fsdp+tp
+        "A_log": mk((32,)),                      # ("model",): tp vector
+        "w_gate": mk((64, 32), jnp.bfloat16),    # bf16 fsdp+tp leaf
+        "seg0": {"attn": {"wqkv": mk((6, 64, 32))}},   # stacked
+    }
+    stack_dims = {"wqkv": 0, "A_log": 0, "w_gate": 0,
+                  "seg0": {"attn": {"wqkv": 1}}}
+    plans = leafplan.build_plans(params, cfg, mesh, stack_dims)
+    flat_plans = leafplan.plan_entries(plans)
+    assert all(p.route == "pallas_shard_map" for p in flat_plans), \
+        [(p.path, p.route, p.sharded) for p in flat_plans]
+    assert {p.path: p.psum_axes() for p in flat_plans} == {
+        "/wqkv": ("data", "model"), "/A_log": ("model",),
+        "/w_gate": ("data", "model"),
+        "/seg0/attn/wqkv": ("data", "model")}
+
+    place = lambda t, specs: jax.tree_util.tree_map(
+        lambda l, s: jax.device_put(l, NamedSharding(mesh, s)), t, specs)
+    params = place(params, jax.tree_util.tree_map(
+        lambda pl: pl.param_spec, plans, is_leaf=leafplan.is_plan_leaf))
+
+    ops.set_backend("pallas")                    # interpret-mode Pallas bodies
+    try:
+        with set_mesh(mesh):
+            bufs = snap.init_buffers(params, cfg, plans)
+            grams = snap.init_grams(bufs, cfg, plans)
+
+            def upd(g, b, p, slot):
+                b = snap.record(b, p, slot, plans)
+                return b, snap.update_grams(g, b, p, slot, cfg, plans)
+            upd_jit = jax.jit(upd)
+
+            for window in range(2):              # across a full cyclic wrap
+                for slot in range(m):
+                    params = jax.tree_util.tree_map(
+                        lambda p: (p + (0.03 * jnp.asarray(
+                            rng.normal(size=p.shape), jnp.float32)
+                        ).astype(p.dtype)), params)
+                    bufs, grams = upd_jit(grams, bufs, params, slot)
+                # window-complete: streaming == oracle (DESIGN.md §2)
+                err = 0.0
+                for key, pl in ((("wqkv",), plans["wqkv"]),
+                                (("A_log",), plans["A_log"]),
+                                (("w_gate",), plans["w_gate"]),
+                                (("seg0", "attn", "wqkv"),
+                                 plans["seg0"]["attn"]["wqkv"])):
+                    b = bufs; g = grams
+                    for k in key:
+                        b, g = b[k], g[k]
+                    oracle = dmd_mod.gram_matrix(
+                        b, anchor=cfg.anchor, stack_dims=pl.stack_dims,
+                        upcast=cfg.gram_upcast)
+                    scale = max(float(jnp.max(jnp.abs(oracle))), 1.0)
+                    tol = 3e-2 if b.dtype == jnp.bfloat16 else 1e-5
+                    e = float(jnp.max(jnp.abs(g - oracle))) / scale
+                    assert e < tol, (key, window, e)
+                    err = max(err, e)
+            print("STREAM_ERR", f"{err:.2e}")
+
+            # gram_upcast=False + bf16 snapshot storage: the kernel's fused
+            # in-VMEM upcast must match the bf16-accumulation oracle
+            import dataclasses as _dc
+            cfg_bf = _dc.replace(cfg, snapshot_dtype="bfloat16",
+                                 gram_upcast=False)
+            plans_bf = leafplan.build_plans(params, cfg_bf, mesh, stack_dims)
+            bufs_bf = snap.init_buffers(params, cfg_bf, plans_bf)
+            grams_bf = snap.init_grams(bufs_bf, cfg_bf, plans_bf)
+            upd_bf = jax.jit(lambda g, b, p, slot: (
+                lambda nb: (nb, snap.update_grams(g, nb, p, slot, cfg_bf,
+                                                  plans_bf)))(
+                snap.record(b, p, slot, plans_bf)))
+            pp = params
+            for slot in range(m):
+                pp = jax.tree_util.tree_map(
+                    lambda p: (p + (0.03 * jnp.asarray(
+                        rng.normal(size=p.shape), jnp.float32)
+                    ).astype(p.dtype)), pp)
+                bufs_bf, grams_bf = upd_bf(grams_bf, bufs_bf, pp, slot)
+            b = bufs_bf["seg0"]["attn"]["wqkv"]
+            assert b.dtype == jnp.bfloat16
+            oracle = dmd_mod.gram_matrix(b, anchor=cfg_bf.anchor,
+                                         stack_dims=1, upcast=False)
+            scale = max(float(jnp.max(jnp.abs(oracle))), 1.0)
+            e_bf = float(jnp.max(jnp.abs(
+                grams_bf["seg0"]["attn"]["wqkv"] - oracle))) / scale
+            assert e_bf < 3e-2, e_bf
+            print("BF16_STREAM_ERR", f"{e_bf:.2e}")
+
+            # combine from the shard_map route == the dot_general oracle
+            errc = 0.0
+            for key, pl in ((("wqkv",), plans["wqkv"]),
+                            (("seg0", "attn", "wqkv"),
+                             plans["seg0"]["attn"]["wqkv"])):
+                b = bufs
+                for k in key:
+                    b = b[k]
+                cshape = pl.stack_shape + (m,)
+                c = jnp.asarray(rng.normal(size=cshape), jnp.float32)
+                w = jax.jit(lambda b, c, pl=pl: sharded.combine(b, c, pl))(
+                    b, c)
+                w_ref = dmd_mod.combine_snapshots(
+                    b, c, stack_dims=pl.stack_dims)
+                errc = max(errc, float(jnp.max(jnp.abs(w - w_ref)))
+                           / max(float(jnp.max(jnp.abs(w_ref))), 1.0))
+            assert errc < 1e-5, errc
+            print("COMBINE_ERR", f"{errc:.2e}")
+
+            # HLO audit: no all-gather of a buffer-sized operand anywhere in
+            # the lowered update_grams (the psum'd row pass is all-reduce
+            # O(stack*m), never a gather of the O(m*n) buffer)
+            hlo = upd_jit.lower(grams, bufs, params, 2).compile().as_text()
+            dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                           "s8": 1, "u8": 1, "pred": 1}
+            max_ag = 0
+            for line in hlo.splitlines():
+                mt = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = (.*?) all-gather"
+                              r"(?:-start)?\(", line)
+                if not mt:
+                    continue
+                for ms in re.finditer(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]",
+                                      mt.group(1)):
+                    n = 1
+                    for d in ms.group(2).split(","):
+                        if d:
+                            n *= int(d)
+                    max_ag = max(max_ag,
+                                 n * dtype_bytes.get(ms.group(1), 4))
+            smallest_buf = min(
+                4 * b.size for b in jax.tree_util.tree_leaves(bufs))
+            assert max_ag < smallest_buf, (max_ag, smallest_buf)
+            print("AG_MAX_BYTES", max_ag, "SMALLEST_BUF", smallest_buf)
+    finally:
+        ops.set_backend(None)
+    print("SHARDED_KERNELS_OK")
+
+
 def main():
     mode = sys.argv[1]
     if mode == "train":
@@ -121,6 +293,54 @@ def main():
             state = trainer.fit(batches, steps=2)
             trainer.save(state, 2)
         print("SAVED", checksum(state.params))
+    elif mode == "gram_save":
+        ckpt, variant = sys.argv[2], sys.argv[3]
+        acfg = small_acfg()                # m=4, warmup=2, cooldown=0
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
+                       for s in range(100))
+            # steps 0..5: records at slots 0..3, jump at step 5 — the window
+            # completes, so the streaming Gram equals the oracle exactly.
+            state = trainer.fit(batches, steps=6)
+            assert state.dmd_gram is not None
+            if variant == "zero":
+                state = state._replace(dmd_gram=None)   # pre-streaming format
+            trainer.save(state, 6)
+        print("SAVED", checksum(state.params))
+    elif mode == "gram_restore":
+        ckpt = sys.argv[2]
+        from repro.core import dmd as dmd_mod
+        from repro.core.leafplan import is_plan_leaf
+        acfg = small_acfg()
+        mesh = jax.make_mesh((4, 2), ("data", "model"))   # REMAPPED topology
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            state = trainer.restore()
+            assert state is not None and int(state.step) == 6
+            plans = trainer.acc.plans_for(state.params)
+            n_checked = 0
+
+            def chk(plan, buf, g):
+                nonlocal n_checked
+                if plan is None or buf is None:
+                    return None
+                assert g is not None
+                oracle = dmd_mod.gram_matrix(buf, anchor=acfg.dmd.anchor,
+                                             stack_dims=plan.stack_dims)
+                np.testing.assert_allclose(np.asarray(g), np.asarray(oracle),
+                                           rtol=1e-4, atol=1e-4)
+                n_checked += 1
+                return None
+            jax.tree_util.tree_map(chk, plans, state.dmd_buffers,
+                                   state.dmd_gram, is_leaf=is_plan_leaf)
+            assert n_checked > 0
+        print("GRAMS_OK", n_checked)
+    elif mode == "sharded_kernels":
+        run_sharded_kernels()
     elif mode == "elastic_restore":
         ckpt = sys.argv[2]
         acfg = small_acfg()

@@ -1,4 +1,4 @@
-"""Config registry + assigned shape coverage."""
+"""Config registry + assigned shape coverage + LeafPlan dispatch pins."""
 import pytest
 
 from repro.configs import (STANDARD_SHAPES, get_config, list_archs,
@@ -62,3 +62,73 @@ def test_exact_paper_dims():
 def test_llama4_dmd_excludes_experts():
     acfg = get_config("llama4-maverick-400b-a17b")
     assert acfg.dmd.param_filter == "non_expert"
+
+
+# ---------------------------------------------------------------------------
+# LeafPlan dispatch-table pins (ISSUE 2 acceptance): every selected leaf of
+# the production configs gets a route + structural stack_dims. Regression-
+# pinned so a refactor of the plan layer cannot silently reroute a leaf.
+# ---------------------------------------------------------------------------
+
+# {arch: {path: (route, stack_dims)}} — meshless table: flat-safe leaves ->
+# pallas_flat, every stacked leaf -> pallas_shard_map (vmapped kernels;
+# shard_map + psum once a mesh is active and the leaf is sharded).
+PLAN_PINS = {
+    "qwen3-moe-30b-a3b": {
+        "/emb": ("pallas_flat", 0),
+        "/lm_head": ("pallas_flat", 0),
+        "/final_norm/scale": ("pallas_flat", 0),
+        "/seg0/attn/wq": ("pallas_shard_map", 1),
+        "/seg0/attn/wo": ("pallas_shard_map", 1),
+        "/seg0/moe/experts_in": ("pallas_shard_map", 1),
+        "/seg0/moe/experts_out": ("pallas_shard_map", 1),
+        "/seg0/moe/router": ("pallas_shard_map", 1),
+    },
+    "zamba2-2.7b": {
+        "/emb": ("pallas_flat", 0),
+        "/shared_block/attn/wq": ("pallas_flat", 0),     # stored ONCE
+        "/shared_block/mlp/w_in": ("pallas_flat", 0),
+        "/seg0/mamba/ssm/A_log": ("pallas_shard_map", 2),
+        "/seg0/mamba/ssm/in_proj/x": ("pallas_shard_map", 2),
+        "/seg0/mamba/ssm/out_proj": ("pallas_shard_map", 2),
+    },
+    "gemma3-27b": {
+        "/emb": ("pallas_flat", 0),
+        "/final_norm/scale": ("pallas_flat", 0),
+        "/seg0/local/attn/wq": ("pallas_shard_map", 2),  # 5 locals per group
+        "/seg0/local/mlp/w_in": ("pallas_shard_map", 2),
+        "/seg0/global/attn/wq": ("pallas_shard_map", 1),
+        "/seg1/attn/wq": ("pallas_shard_map", 1),        # 2-local tail
+    },
+}
+
+
+@pytest.mark.parametrize("arch", sorted(PLAN_PINS))
+def test_leafplan_table_pinned(arch):
+    """plan_table() assigns EVERY selected leaf a route, and the pinned
+    (route, stack_dims) entries match the structural segment layout."""
+    from repro.core import DMDAccelerator, leafplan
+    from repro.models.transformer import init_params, param_stack_dims
+
+    acfg = get_config(arch)
+    params = init_params(acfg.model, abstract=True)
+    acc = DMDAccelerator(acfg.dmd,
+                         stack_dims=param_stack_dims(acfg.model, params))
+    table = acc.plan_table(params)
+    plans = acc.plans_for(params)
+    summ = leafplan.plan_summary(plans)
+
+    # every selected leaf has a valid route and appears in the table
+    assert summ, arch
+    for path, (route, k) in summ.items():
+        assert route in leafplan.ROUTES, (path, route)
+        assert path in table
+    # stack dims == leading dims consumed by the scan layout; buffers' Gram
+    # batch shape follows (plan_shapes test covers the shape agreement)
+    for path, expect in PLAN_PINS[arch].items():
+        assert summ.get(path) == expect, (path, summ.get(path), expect)
+    # stacked leaves never route to the flat kernels (flatten would merge
+    # per-layer trajectories — the paper's DMD is per-layer)
+    for path, (route, k) in summ.items():
+        if k > 0:
+            assert route != "pallas_flat", path

@@ -66,3 +66,15 @@ def test_elastic_restart_different_mesh(tmp_path):
     run_worker("elastic_save", ckpt)
     out = run_worker("elastic_restore", ckpt)
     assert "RESTORED" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["keep", "zero"])
+def test_gram_restore_on_remapped_mesh(tmp_path, variant):
+    """Both a streaming-era checkpoint (grams carried) and a zeroed-gram /
+    pre-streaming checkpoint (grams rebuilt by recompute_grams' batched
+    staleness pass) resume to gram_matrix equality on a REMAPPED mesh."""
+    ckpt = str(tmp_path / f"ckpt_{variant}")
+    run_worker("gram_save", ckpt, variant)
+    out = run_worker("gram_restore", ckpt)
+    assert "GRAMS_OK" in out

@@ -43,6 +43,69 @@ def test_gram_row_kernel(m, n, dtype, anchor):
             assert float(jnp.max(jnp.abs(r))) == 0.0
 
 
+@pytest.mark.parametrize("n", [7, 130])
+@pytest.mark.parametrize("anchor", [False, True])
+def test_tiny_leaf_kernels_match_oracle(n, anchor):
+    """Regression (ISSUE 2): _block used to return blocks that were not
+    128-lane multiples for 128 < n < block_n (n=130 -> block 130) and
+    oversized tiles for n < 128; both now clamp to one lane-padded tile with
+    the padding handled by the wrappers (zero lanes contribute zero)."""
+    from repro.kernels.ops import _block
+    assert _block(2048, 7) == 128
+    assert _block(2048, 130) == 256
+    assert _block(2048, 333) == 384              # lane multiple, < 2048
+    assert _block(2048, 5000) == 2048
+    m = 6
+    rng = np.random.default_rng(100 + n)       # local stream: the shared RNG
+    S = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)   # order must stay
+    c = jnp.asarray(rng.normal(size=(m,)), jnp.float32)     # stable for the
+                                                            # atol=0 tests
+    g = ops.gram(S, anchor_first=anchor, interpret=True)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(ref.gram_ref(S, anchor_first=anchor)),
+                               rtol=1e-5, atol=1e-5)
+    r = ops.gram_row(S, S[2], anchor_first=anchor, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(r), np.asarray(ref.gram_row_ref(S, S[2],
+                                                   anchor_first=anchor)),
+        rtol=1e-5, atol=1e-5)
+    w = ops.combine(S, c, interpret=True)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(ref.combine_ref(S, c)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_wrappers_local_path_matches_oracle():
+    """kernels/sharded.py with no mesh degrades to local (vmapped) kernels —
+    same contract as the flat kernels, per stacked layer."""
+    from repro.configs.base import DMDConfig
+    from repro.core import leafplan
+    from repro.core.dmd import combine_snapshots, gram_matrix, gram_row_matrix
+    from repro.kernels import sharded
+
+    rng = np.random.default_rng(7)
+    cfg = DMDConfig(m=5, anchor="first")
+    params = {"seg": jnp.asarray(rng.normal(size=(3, 9, 11)), jnp.float32)}
+    plans = leafplan.build_plans(params, cfg, stack_dims={"seg": 1})
+    pl = plans["seg"]
+    buf = jnp.asarray(rng.normal(size=(5, 3, 9, 11)), jnp.float32)
+    g = sharded.gram(buf, pl, anchor_first=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(gram_matrix(buf, anchor="first",
+                                              stack_dims=1)),
+        rtol=1e-5, atol=1e-5)
+    r = sharded.gram_row(buf, buf[2], pl, anchor_first=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(r), np.asarray(gram_row_matrix(buf, buf[2],
+                                                  anchor="first",
+                                                  stack_dims=1)),
+        rtol=1e-5, atol=1e-5)
+    c = jnp.asarray(rng.normal(size=(3, 5)), jnp.float32)
+    w = sharded.combine(buf, c, pl, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(w), np.asarray(combine_snapshots(buf, c, stack_dims=1)),
+        rtol=1e-5, atol=1e-5)
+
+
 def test_gram_row_matches_full_gram_row():
     """The kernel's row equals the corresponding row of the full Gram."""
     S = jnp.asarray(RNG.normal(size=(10, 700)), jnp.float32)

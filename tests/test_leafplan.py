@@ -1,0 +1,213 @@
+"""LeafPlan registry: structural stack dims, route selection, spec
+derivation, and the plan-threaded accelerator invariants."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import DMDConfig
+from repro.core import DMDAccelerator, leafplan
+from repro.core import snapshots as snap
+from repro.models.transformer import init_params, param_stack_dims
+
+
+def small_params():
+    rng = np.random.default_rng(0)
+    return {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32),
+            "seg0": {"wq": jnp.asarray(rng.normal(size=(3, 16, 8)),
+                                       jnp.float32)}}
+
+
+def test_build_plans_routes_and_stack_dims():
+    cfg = DMDConfig(m=4)
+    plans = leafplan.build_plans(small_params(), cfg,
+                                 stack_dims={"w": 0, "b": 0,
+                                             "seg0": {"wq": 1}})
+    summ = leafplan.plan_summary(plans)
+    assert summ == {"/w": ("pallas_flat", 0), "/b": ("pallas_flat", 0),
+                    "/seg0/wq": ("pallas_shard_map", 1)}
+    pl = plans["seg0"]["wq"]
+    assert pl.stack_shape == (3,)
+    assert pl.flat_size == 16 * 8
+    assert pl.gram_spec == P(None, None, None)
+    assert pl.psum_axes() == ()                  # no mesh -> fully local
+
+
+SD = {"w": 0, "b": 0, "seg0": {"wq": 1}}
+
+
+def test_param_filter_excludes_leaves():
+    cfg = DMDConfig(m=4, min_param_size=10)
+    plans = leafplan.build_plans(small_params(), cfg, stack_dims=SD)
+    assert plans["b"] is None                    # 8 < 10
+    assert plans["w"] is not None
+
+
+def test_missing_stack_annotation_on_segmented_tree_raises():
+    """A seg<i>-keyed tree with no stack_dims would silently merge per-layer
+    trajectories into one Gram — build_plans refuses instead."""
+    with pytest.raises(ValueError, match="stack_dims"):
+        leafplan.build_plans(small_params(), DMDConfig(m=4))
+    # flat pytrees (no segment convention) still default to stack 0
+    plans = leafplan.build_plans({"w": small_params()["w"]}, DMDConfig(m=4))
+    assert plans["w"].stack_dims == 0
+
+
+def test_kernel_route_override():
+    cfg = DMDConfig(m=4, kernel_route="dot_general")
+    plans = leafplan.build_plans(small_params(), cfg, stack_dims=SD)
+    assert all(p.route == "dot_general"
+               for p in leafplan.plan_entries(plans))
+    # forcing pallas_flat cannot apply to stacked leaves — they keep auto
+    cfg2 = DMDConfig(m=4, kernel_route="pallas_flat")
+    plans2 = leafplan.build_plans(small_params(), cfg2, stack_dims=SD)
+    assert plans2["w"].route == "pallas_flat"
+    assert plans2["seg0"]["wq"].route == "pallas_shard_map"
+    with pytest.raises(ValueError, match="kernel_route"):
+        leafplan.build_plans(small_params(), DMDConfig(kernel_route="nope"),
+                             stack_dims=SD)
+
+
+def test_block_n_clamped_to_leaf():
+    cfg = DMDConfig(m=4)
+    plans = leafplan.build_plans(small_params(), cfg, stack_dims=SD)
+    assert plans["b"].block_n == 128             # 8 -> one 128-lane tile
+    assert plans["w"].block_n == 128             # 16*8 = exactly one tile
+    assert leafplan.default_block_n(5000) == 2048
+    assert leafplan.default_block_n(130) == 256
+    assert leafplan.default_block_n(7) == 128
+
+
+def test_structural_stack_dims_match_model_layout():
+    """The stack annotation is derived from the segment plan — spot-check
+    each stacking pattern (plain seg scan, gemma local sub-stack, zamba
+    mamba sub-stack, unstacked shared block)."""
+    g = get_config("gemma3-27b").model
+    sd = param_stack_dims(g)
+    assert sd["emb"] == 0
+    assert sd["seg0"]["local"]["attn"]["wq"] == 2
+    assert sd["seg0"]["global"]["attn"]["wq"] == 1
+    assert sd["seg1"]["attn"]["wq"] == 1         # dense_local tail
+
+    z = get_config("zamba2-2.7b").model
+    sdz = param_stack_dims(z)
+    assert sdz["shared_block"]["attn"]["wq"] == 0
+    assert sdz["seg0"]["mamba"]["ssm"]["A_log"] == 2
+
+    q = get_config("qwen3-moe-30b-a3b").model
+    sdq = param_stack_dims(q)
+    assert sdq["seg0"]["moe"]["experts_in"] == 1
+    assert sdq["lm_head"] == 0
+
+
+def test_plan_shapes_consistent_with_buffers_and_grams():
+    """init_buffers/init_grams sized by the plan agree with the leaf shapes
+    for every production config (abstract params — no allocation)."""
+    for arch in ("gemma3-27b", "zamba2-2.7b", "qwen3-moe-30b-a3b"):
+        acfg = get_config(arch)
+        params = init_params(acfg.model, abstract=True)
+        plans = leafplan.build_plans(params, acfg.dmd, None,
+                                     param_stack_dims(acfg.model, params))
+        bufs = snap.init_buffers(params, acfg.dmd, plans)
+        grams = snap.init_grams(bufs, acfg.dmd, plans)
+
+        def chk(pl, p, b, g):
+            if pl is None:
+                assert b is None and g is None
+                return None
+            assert b.shape == (acfg.dmd.m,) + tuple(p.shape)
+            assert g.shape == pl.stack_shape + (acfg.dmd.m, acfg.dmd.m)
+            assert pl.stack_shape == tuple(p.shape[:pl.stack_dims])
+            return None
+        jax.tree_util.tree_map(chk, plans, params, bufs, grams,
+                               is_leaf=leafplan.is_plan_leaf)
+
+
+def test_plan_table_renders_every_selected_leaf():
+    acfg = get_config("qwen3-moe-30b-a3b")
+    acc = DMDAccelerator(acfg.dmd,
+                         stack_dims=param_stack_dims(acfg.model))
+    table = acc.plan_table(init_params(acfg.model, abstract=True))
+    assert "/seg0/attn/wqkv" in table or "/seg0/attn/wq" in table
+    assert "pallas_shard_map" in table and "route" in table
+    n_selected = len(leafplan.plan_entries(acc._plans))
+    assert len(table.splitlines()) == n_selected + 2   # header + rule
+
+
+def test_trace_time_plan_building():
+    """build_plans reads only metadata, so it works on tracers inside jit —
+    the train step builds the table at trace time."""
+    cfg = DMDConfig(m=4)
+    acc = DMDAccelerator(cfg, stack_dims={"w": 0, "b": 0, "seg0": {"wq": 1}})
+    params = small_params()
+
+    @jax.jit
+    def probe(p):
+        plans = acc.plans_for(p)
+        assert plans["seg0"]["wq"].stack_dims == 1
+        return jax.tree_util.tree_map(lambda x: x * 1.0, p)
+
+    probe(params)
+
+
+def test_apply_handles_tuple_leaf_params():
+    """Regression (ISSUE 2): a params pytree containing a genuine 2-tuple
+    node must round-trip through apply unharmed — the old (params, rank)
+    tuple-sniffing silently mis-split it; LeafJump is isinstance-checked."""
+    cfg = DMDConfig(m=4, s=5, tol=1e-4, warmup_steps=0, cooldown_steps=0)
+    acc = DMDAccelerator(cfg)
+    rng = np.random.default_rng(1)
+    params = {"pair": (jnp.asarray(rng.normal(size=(6,)), jnp.float32),
+                       jnp.asarray(rng.normal(size=(6,)), jnp.float32)),
+              "w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    for slot in range(cfg.m):
+        params = jax.tree_util.tree_map(
+            lambda p: p + 0.02 * jnp.asarray(rng.normal(size=p.shape),
+                                             jnp.float32), params)
+        bufs, grams = acc.record(bufs, params, slot, grams)
+    new_params, info = acc.apply(
+        jax.tree_util.tree_map(jnp.copy, params), bufs, 0, grams=grams)
+    assert isinstance(new_params["pair"], tuple)
+    assert len(new_params["pair"]) == 2
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert leaf.shape in ((6,), (4, 3))
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert float(info["mean_rank"]) >= 1
+
+
+def test_dmd_step_handles_tuple_leaf_params():
+    """Same regression for the jitted train-side jump."""
+    from repro.train.state import TrainState
+    from repro.train.step import make_dmd_step
+
+    acfg = get_config("tinyllama-1.1b")
+    acfg = dataclasses.replace(
+        acfg, dmd=DMDConfig(m=4, s=5, tol=1e-4, warmup_steps=0,
+                            cooldown_steps=0))
+    acc = DMDAccelerator(acfg.dmd)
+    rng = np.random.default_rng(2)
+    params = {"pair": (jnp.asarray(rng.normal(size=(6,)), jnp.float32),
+                       jnp.asarray(rng.normal(size=(6,)), jnp.float32))}
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    for slot in range(acfg.dmd.m):
+        params = jax.tree_util.tree_map(
+            lambda p: p + 0.05 * jnp.asarray(rng.normal(size=p.shape),
+                                             jnp.float32), params)
+        bufs, grams = acc.record(bufs, params, slot, grams)
+    from repro.optim import make_optimizer
+    opt_state = make_optimizer(acfg.optimizer).init(params)
+    state = TrainState(params, opt_state, jnp.zeros((), jnp.int32), bufs,
+                       grams)
+    dmd_step = jax.jit(make_dmd_step(acfg, acc=acc))
+    new_state, info = dmd_step(state, jnp.asarray(1.0))
+    assert isinstance(new_state.params["pair"], tuple)
+    for leaf in jax.tree_util.tree_leaves(new_state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))

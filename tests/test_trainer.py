@@ -106,18 +106,18 @@ def test_restore_rebuilds_grams_from_pre_streaming_checkpoint(tmp_path):
     trainer2, _ = _tiny_setup(tmp_path, dmd=True)
     restored = trainer2.restore()
     assert restored is not None and int(restored.step) == 9
+    plans = trainer2.acc.plans_for(restored.params)
 
-    def chk(path, buf, g):
-        if buf is None:
+    def chk(plan, buf, g):
+        if buf is None or plan is None:
             return None
         assert g is not None
         if bool(jnp.any(buf != 0)):
-            nstack = snap.stack_dims_for_path(jax.tree_util.keystr(path))
             oracle = dmd.gram_matrix(buf, anchor=trainer2.acfg.dmd.anchor,
-                                     stack_dims=nstack)
+                                     stack_dims=plan.stack_dims)
             np.testing.assert_allclose(np.asarray(g), np.asarray(oracle),
                                        rtol=1e-5, atol=1e-5)
         return None
-    jax.tree_util.tree_map_with_path(chk, restored.dmd_buffers,
-                                     restored.dmd_gram,
-                                     is_leaf=lambda x: x is None)
+    from repro.core.leafplan import is_plan_leaf
+    jax.tree_util.tree_map(chk, plans, restored.dmd_buffers,
+                           restored.dmd_gram, is_leaf=is_plan_leaf)
