@@ -141,9 +141,18 @@ def measure_optimizer(acfg, mesh) -> dict:
 
 
 def measure_dmd(acfg, mesh) -> dict:
-    """Per-round DMD jump cost (amortize over m steps for per-step cost)."""
+    """PER-STEP amortized DMD jump cost under the group schedule.
+
+    Each schedule group g jumps once per cycle_g = m_g + cooldown_g steps,
+    and the staggered jump program is masked to that group's leaves — so
+    the per-step cost is sum_g cost(jump of group g alone) / cycle_g. Each
+    group's jump is lowered separately (dmd_step with static groups=(g,));
+    with one group this reduces to the old whole-jump / (m + cooldown)
+    accounting. Returns the amortized totals plus per-group detail.
+    """
     if not acfg.dmd.enabled:
-        return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+        return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
+                "per_group": []}
     from repro.models.transformer import LanguageModel
     from repro.train.step import make_dmd_step
     from repro.train.state import TrainState
@@ -163,18 +172,33 @@ def measure_dmd(acfg, mesh) -> dict:
     state = TrainState(params, opt_state, jax.ShapeDtypeStruct((), jnp.int32),
                        bufs)
     step = make_dmd_step(acfg, mesh=mesh, acc=acc)
+    total = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+    per_group = []
     with mesh_context(mesh):
         st_specs = inputs_mod.state_specs(state, mesh,
                                           plans=acc.plans_for(params))
-        compiled = jax.jit(step, in_shardings=(
-            inputs_mod.shardings_of(st_specs, mesh),
-            None), donate_argnums=(0,)).lower(
-                state, jnp.zeros((), jnp.float32)).compile()
-    ca = compiled.cost_analysis() or {}
-    coll, _ = parse_collectives(compiled.as_text())
-    return {"flops": float(ca.get("flops") or 0.0),
-            "bytes": float(ca.get("bytes accessed") or 0.0),
-            "coll_bytes": sum(COLL_MULT.get(k, 1) * v for k, v in coll.items())}
+        for g in acc.groups:
+            # groups positional + static: pjit rejects kwargs when
+            # in_shardings is given
+            compiled = jax.jit(
+                step, in_shardings=(
+                    inputs_mod.shardings_of(st_specs, mesh), None),
+                static_argnums=(2,), donate_argnums=(0,)).lower(
+                    state, jnp.zeros((), jnp.float32),
+                    (g.index,)).compile()
+            ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):    # older jaxlibs: one dict
+                ca = ca[0] if ca else {}         # per executable
+            coll, _ = parse_collectives(compiled.as_text())
+            cost = {"flops": float(ca.get("flops") or 0.0),
+                    "bytes": float(ca.get("bytes accessed") or 0.0),
+                    "coll_bytes": sum(COLL_MULT.get(k, 1) * v
+                                      for k, v in coll.items())}
+            per_group.append({"group": g.name, "cycle": g.cycle, **cost})
+            for k in total:
+                total[k] += cost[k] / max(g.cycle, 1)
+    total["per_group"] = per_group
+    return total
 
 
 def model_flops(acfg, shape) -> float:
@@ -295,18 +319,18 @@ def analyze_cell(arch: str, shape_name: str, mesh_kind: str = "single",
 
     ga = 1
     opt_cost = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
-    dmd_cost = dict(opt_cost)
+    dmd_cost = dict(opt_cost, per_group=[])
     if shape.kind == "train":
         ga = resolve_grad_accum(acfg, mesh, shape.global_batch)
         opt_cost = measure_optimizer(acfg, mesh)
         dmd_cost = measure_dmd(acfg, mesh)
-        m = max(acfg.dmd.m + acfg.dmd.cooldown_steps, 1)
-        # per step: ga x param-part + activation-part + optimizer
-        # (+ DMD jump amortized over the m-step window). The unit lowerings
-        # include one param-part already (they ran at ga=1); opt cost is
-        # separate and NOT multiplied.
+        # per step: ga x param-part + activation-part + optimizer (+ the
+        # DMD jumps, already amortized per group over each group's own
+        # cycle inside measure_dmd). The unit lowerings include one
+        # param-part already (they ran at ga=1); opt cost is separate and
+        # NOT multiplied.
         total = {k: (ga * total_p[k] + total_a[k] + opt_cost[k]
-                     + dmd_cost[k] / m) for k in KEYS}
+                     + dmd_cost[k]) for k in KEYS}
     else:
         total = {k: total_p[k] + total_a[k] for k in KEYS}
 
@@ -336,7 +360,8 @@ def analyze_cell(arch: str, shape_name: str, mesh_kind: str = "single",
         "hlo_flops_global": flops_global,
         "useful_ratio": mf / flops_global if flops_global else 0.0,
         "optimizer_cost": opt_cost,
-        "dmd_cost_per_round": dmd_cost,
+        "dmd_cost_per_step": {k: dmd_cost[k] for k in KEYS},
+        "dmd_cost_per_group": dmd_cost.get("per_group", []),
         "wall_s": round(time.time() - t0, 1),
     })
     if out_dir:

@@ -81,7 +81,7 @@ def main():
     args = ap.parse_args()
     from benchmarks.paper_benches import (fig3_sensitivity, fig4_curves,
                                           sec3_overhead, sharded_gram,
-                                          streaming_gram)
+                                          staggered_jump, streaming_gram)
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
 
@@ -90,6 +90,9 @@ def main():
         ("streaming_gram", lambda: streaming_gram(
             n=1_000_000 if args.quick else 4_000_000)),
         ("sharded_gram", sharded_gram),
+        ("staggered_jump", (lambda: staggered_jump(
+            sizes=(6, 400, 400, 400), reps=5)) if args.quick
+         else staggered_jump),
         ("kernels", bench_kernels),
         ("fig3", (lambda: fig3_sensitivity(ms=(6, 14), ss=(10, 55),
                                            steps=300))

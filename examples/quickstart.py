@@ -1,10 +1,12 @@
 """Quickstart: DMD-accelerated training of a tiny LM on synthetic tokens.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps N]
 
 Trains the same model twice (plain Adam vs Adam + DMD extrapolation at equal
-optimizer-step budget) and prints both loss curves.
+optimizer-step budget) and prints both loss curves. `--steps` shrinks the
+run (the CI examples smoke lane uses a short budget).
 """
+import argparse
 import dataclasses
 import sys
 import time
@@ -48,8 +50,11 @@ def run(dmd_enabled: bool, steps: int = 200):
 
 
 if __name__ == "__main__":
-    base, t_base = run(False)
-    dmd, t_dmd = run(True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    base, t_base = run(False, steps=args.steps)
+    dmd, t_dmd = run(True, steps=args.steps)
     print(f"\n{'step':>6} {'baseline':>10} {'dmd':>10}")
     for s in range(0, len(base), 25):
         print(f"{s:>6} {base[s]:>10.4f} {dmd[s]:>10.4f}")

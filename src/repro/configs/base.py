@@ -10,6 +10,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from repro.core.schedule import DMDGroupRule
+
 
 # ---------------------------------------------------------------------------
 # Model
@@ -145,11 +147,30 @@ class DMDConfig:
                                     # unsharded); other leaves keep the auto
                                     # choice. See DESIGN.md §3.
     param_filter: str = "all"       # all | non_expert | matrices_only
+                                    # (legacy strings — mapped onto exclusion
+                                    # group rules by core/schedule.py)
     min_param_size: int = 0         # skip leaves smaller than this many elements
+    groups: Tuple[DMDGroupRule, ...] = ()
+                                    # per-leaf schedule groups (DESIGN.md §4):
+                                    # each rule's structural matcher (path
+                                    # regex / ndim / size) either excludes
+                                    # matching leaves or gives them their own
+                                    # (m, s, warmup, cooldown, relax, anneal,
+                                    # phase) schedule; unset fields inherit
+                                    # the globals above, which form the
+                                    # default group 0. First match wins.
+                                    # Phase offsets stagger jumps across
+                                    # groups (at most one group's jump spike
+                                    # per step instead of every leaf at once).
     anneal: float = 1.0             # multiplicative decay of `relax` per DMD round
     reset_opt_state: bool = True    # reset Adam moments after a DMD jump (the
                                     # jump teleports weights; stale moments
-                                    # poison the next window's dynamics)
+                                    # poison the next window's dynamics).
+                                    # Per-group override: DMDGroupRule.
+                                    # reset_opt — with staggered groups only
+                                    # the JUMPED groups' moments reset, and
+                                    # slow groups (norms/biases) usually opt
+                                    # out entirely (DESIGN.md §4).
 
 
 # ---------------------------------------------------------------------------

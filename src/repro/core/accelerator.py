@@ -7,10 +7,20 @@ Usage (see repro.train.loop for full integration):
     buffers = acc.init(params)               # also builds the LeafPlan table
     grams = acc.init_grams(buffers)          # streaming-Gram state (or None)
     # every optimizer step (record always returns the (buffers, grams)
-    # pair; grams stays None when not streaming):
-    buffers, grams = acc.record(buffers, params, acc.slot(step), grams)
-    if acc.should_apply(step):
-        params, stats = acc.apply(params, buffers, round_idx, grams=grams)
+    # pair; grams stays None when not streaming). acc.slots(step) is the
+    # per-group slot vector — groups not recording (slot < 0) are skipped:
+    buffers, grams = acc.record(buffers, params, acc.slots(step), grams)
+    if acc.should_apply(step):               # some group's window closed
+        params, stats = acc.apply(params, buffers, grams=grams, step=step)
+
+Per-leaf scheduling (core/schedule.py, DESIGN.md §4): the schedule is a
+TABLE of groups — group 0 is the DMDConfig globals, further groups come
+from cfg.groups rules resolved per leaf at plan-build time. slot /
+should_record / should_apply / round_index are per-group queries
+(`group=` arg, default 0); `slots(step)` / `apply_groups(step)` /
+`relax_vector(step)` are the whole-table views the Trainer and the fused
+train step consume. Groups with distinct `phase` offsets jump on different
+steps, so at most a subset of leaves pays the jump at any step.
 
 `record` is fused into the jitted train step by the trainer; `apply` is its
 own jitted program (runs every m steps). Both operate on the whole param
@@ -23,13 +33,15 @@ decision — leading stack axes, kernel route (``pallas_flat`` |
 is computed ONCE per leaf from the real param pytree + mesh + the model's
 structural `param_stack_dims()` annotation, and carried as a pytree of frozen
 `LeafPlan` records aligned 1:1 with params/buffers/grams. `plans_for(params)`
-builds (and caches) the table — it reads only shape/path metadata, so it also
-works at trace time inside a jitted step — and `plan_table()` renders the
-audited dispatch table:
+builds (and caches, keyed by structure+shape+dtype) the table — it reads only
+shape/path metadata, so it also works at trace time inside a jitted step —
+and `plan_table()` renders the audited dispatch table with the schedule
+columns (group / m / phase):
 
     print(acc.plan_table(params))
-    # path           route             stack  shape        flat_n  spec ...
-    # /seg0/attn/wqkv pallas_shard_map 1      48x2048x2560 5242880 ...
+    # path            route            group    m   phase stack shape ...
+    # /seg0/attn/wqkv pallas_shard_map default  14  0     1     48x2048x2560
+    # /final_norm/... pallas_flat      norms    6   7     0     2560
 
 Streaming Gram (DESIGN.md §2): with cfg.streaming_gram the (stack..., m, m)
 Gram is maintained incrementally — each record adds one O(m*n) row pass —
@@ -40,12 +52,14 @@ correctness oracle (and the cfg.streaming_gram=False A/B baseline).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import dmd, leafplan, snapshots as snap
+from repro.core import dmd, leafplan, schedule as sched_mod
+from repro.core import snapshots as snap
 
 PyTree = Any
 
@@ -64,8 +78,10 @@ class LeafJump:
 def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
     """One leaf of the DMD jump: coefficients from `gram` (the carried
     streaming Gram; recomputed from the buffer when None) + one combine
-    pass, both kernel-routed by the leaf's plan. Shared by
-    DMDAccelerator.apply and train.step.make_dmd_step."""
+    pass, both kernel-routed by the leaf's plan. The extrapolation horizon
+    `s` is the leaf's GROUP horizon (plan.sched.s) — mixed-window groups
+    jump different distances. Shared by DMDAccelerator.apply and
+    train.step.make_dmd_step."""
     from repro.kernels import ops, sharded
 
     nstack = plan.stack_dims
@@ -79,8 +95,9 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
         else:
             gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
                                    upcast=cfg.gram_upcast)
+    s = plan.sched.s if plan.sched is not None else cfg.s
     c, info = dmd.dmd_coefficients(
-        gram, s=cfg.s, tol=cfg.tol, mode=cfg.mode,
+        gram, s=s, tol=cfg.tol, mode=cfg.mode,
         clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
         affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
     if plan.route == "pallas_shard_map":
@@ -98,13 +115,27 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
 
 
 def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
-              grams: PyTree, relax) -> Tuple[PyTree, jnp.ndarray]:
+              grams: PyTree, relax, groups: Optional[Sequence[int]] = None
+              ) -> Tuple[PyTree, jnp.ndarray]:
     """Whole-pytree DMD jump keyed by the plan table: returns (new_params,
-    mean_rank). Excluded leaves (plan None) pass through untouched."""
+    mean_rank). Excluded leaves (plan None) pass through untouched.
+
+    `groups` (STATIC iterable of schedule-group indices) masks the jump to
+    those groups' leaves — the staggered schedule jumps only the group(s)
+    whose window closed, so the other groups' leaves cost nothing (they are
+    compile-time pass-throughs, not runtime selects). None jumps every
+    group. `relax` is a scalar or a per-group (n_groups,) vector indexed by
+    ``plan.group`` (each group anneals on its own round counter)."""
+    gset = None if groups is None else frozenset(int(g) for g in groups)
+    per_group = getattr(relax, "ndim", 0) == 1
+
     def one(plan, p, buf, g):
         if plan is None or buf is None:
             return p
-        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, relax)
+        if gset is not None and plan.group not in gset:
+            return p
+        r = relax[plan.group] if per_group else relax
+        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, r)
         return LeafJump(w, rank)
 
     out = jax.tree_util.tree_map(one, plans, params, buffers, grams,
@@ -130,10 +161,15 @@ class DMDAccelerator:
     def __init__(self, cfg, *, mesh=None, stack_dims: Optional[PyTree] = None):
         """`mesh` + `stack_dims` (the model's structural
         `param_stack_dims()` pytree; None = no stacked leaves) feed the
-        LeafPlan table built lazily from the first param pytree seen."""
+        LeafPlan table built lazily from the first param pytree seen.
+        The schedule-group table (core/schedule.py) resolves eagerly from
+        the config: group 0 = the globals, one more group per non-exclude
+        cfg.groups rule."""
         self.cfg = cfg
         self.mesh = mesh
         self.stack_dims = stack_dims
+        self.groups = sched_mod.resolve_groups(cfg)
+        self.n_groups = len(self.groups)
         self._plans = None
         self._plans_key = None
         self._apply_jit = None
@@ -148,11 +184,14 @@ class DMDAccelerator:
 
     # ---- the per-leaf dispatch table --------------------------------------
     def plans_for(self, params: PyTree) -> PyTree:
-        """LeafPlan pytree for `params`, cached by structure+shape. Reads
-        only metadata, so it is trace-safe (params may be tracers or
+        """LeafPlan pytree for `params`, cached by structure+shape+DTYPE.
+        Dtypes are part of the key because the plan records them (and
+        anchor/route decisions may consult them): a bf16<->fp32 param cast
+        must rebuild the table, not silently reuse a stale one. Reads only
+        metadata, so it is trace-safe (params may be tracers or
         ShapeDtypeStructs)."""
         key = (jax.tree_util.tree_structure(params),
-               tuple(tuple(l.shape)
+               tuple((tuple(l.shape), str(getattr(l, "dtype", "?")))
                      for l in jax.tree_util.tree_leaves(params)))
         if self._plans is None or self._plans_key != key:
             self._plans = leafplan.build_plans(params, self.cfg, self.mesh,
@@ -171,37 +210,57 @@ class DMDAccelerator:
         return leafplan.plan_table(self._plans)
 
     # ---- schedule ---------------------------------------------------------
-    # Cycle after warmup: [cooldown unrecorded steps][m recorded steps -> jump]
-    # The cooldown (beyond-paper, default 0 = paper's Algorithm 1) lets the
-    # optimizer moments re-adapt after a jump so the next window measures the
-    # trajectory's own dynamics, not the post-jump transient.
-    def _cycle(self) -> int:
-        return self.cfg.cooldown_steps + self.cfg.m
+    # Per-group cycle after warmup+phase: [cooldown unrecorded steps]
+    # [m recorded steps -> jump]. The math lives in core/schedule.py
+    # (GroupSchedule); these are the per-group queries plus the whole-table
+    # views the Trainer consumes. Single-group configs reproduce the
+    # pre-refactor scalar schedule bit-exactly (group 0 == the globals).
+    def slot(self, step: int, group: int = 0) -> int:
+        """Buffer row for group `group`'s snapshot after optimizer step
+        `step`; negative while the group is not recording (warmup / phase /
+        cooldown). A group jumps when its slot m-1 is written, then its
+        window restarts (paper: bp_iter = 0)."""
+        return self.groups[group].slot(step)
 
-    def slot(self, step: int) -> int:
-        """Buffer row for the snapshot taken after optimizer step `step`.
-
-        Returns -1 during warmup/cooldown phases (not recorded); otherwise the
-        row 0..m-1. A DMD jump happens when slot m-1 is written, then the
-        window restarts (paper: bp_iter = 0).
-        """
-        eff = step - self.cfg.warmup_steps
-        if eff < 0:
-            return -1
-        return (eff % self._cycle()) - self.cfg.cooldown_steps
+    def slots(self, step: int) -> np.ndarray:
+        """(n_groups,) per-group slot vector — the `record` write positions
+        (groups with a negative entry are skipped)."""
+        return sched_mod.slots_array(self.groups, step)
 
     def should_record(self, step: int) -> bool:
-        return self.cfg.enabled and self.slot(step) >= 0
+        return self.cfg.enabled and any(
+            g.should_record(step) for g in self.groups)
 
     def should_apply(self, step: int) -> bool:
-        return self.cfg.enabled and self.slot(step) == self.cfg.m - 1
+        return self.cfg.enabled and bool(self.apply_groups(step))
 
-    def round_index(self, step: int) -> int:
-        eff = step - self.cfg.warmup_steps
-        return eff // self._cycle()
+    def apply_groups(self, step: int) -> Tuple[int, ...]:
+        """Indices of the groups whose window closes at `step` (staggered
+        phases make this usually empty or a single group)."""
+        if not self.cfg.enabled:
+            return ()
+        return tuple(i for i, g in enumerate(self.groups)
+                     if g.should_apply(step))
 
-    def relax_for_round(self, round_idx: int) -> float:
-        return float(self.cfg.relax * (self.cfg.anneal ** max(round_idx, 0)))
+    def round_index(self, step: int, group: int = 0) -> int:
+        return self.groups[group].round_index(step)
+
+    def relax_for_round(self, round_idx: int, group: int = 0) -> float:
+        return self.groups[group].relax_for_round(round_idx)
+
+    def relax_vector(self, step: int) -> np.ndarray:
+        """(n_groups,) relax factors at `step` — each group annealed on its
+        OWN round counter. Indexed by plan.group inside jump_tree."""
+        return np.asarray([g.relax_for_round(g.round_index(step))
+                           for g in self.groups], np.float32)
+
+    def reset_groups(self, groups: Optional[Sequence[int]] = None
+                     ) -> Tuple[int, ...]:
+        """Of the jumped groups (None = all), the ones whose optimizer
+        moments should reset afterwards (sched.reset_opt — slow leaf
+        families typically opt out; see core/schedule.py)."""
+        src = range(self.n_groups) if groups is None else groups
+        return tuple(g for g in src if self.groups[g].reset_opt)
 
     # ---- state ------------------------------------------------------------
     def init(self, params: PyTree) -> PyTree:
@@ -219,12 +278,18 @@ class DMDAccelerator:
 
     def record(self, buffers: PyTree, params: PyTree, slot,
                grams: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
-        """Write params into row `slot`; with `grams` also refresh the
-        streaming Gram row. ALWAYS returns (buffers, grams) — grams stays
-        None for non-streaming callers — so `buffers, grams =
+        """Write params into each buffer's row; with `grams` also refresh
+        the streaming Gram rows. `slot` is a scalar (single-group / legacy)
+        or the per-group vector from ``slots(step)`` — groups with a
+        negative entry are skipped. ALWAYS returns (buffers, grams) — grams
+        stays None for non-streaming callers — so `buffers, grams =
         acc.record(...)` is the one idiom regardless of configuration."""
         if buffers is None:
             return None, None
+        if self.n_groups > 1 and getattr(slot, "ndim", 0) != 1:
+            raise ValueError(
+                f"{self.n_groups} schedule groups need the per-group slot "
+                "vector — pass acc.slots(step), not a scalar slot")
         plans = self.plans_for(params)
         new_bufs = snap.record(buffers, params, slot, plans)
         if grams is None:
@@ -235,21 +300,39 @@ class DMDAccelerator:
 
     # ---- the DMD jump -----------------------------------------------------
     def _apply_impl(self, params: PyTree, buffers: PyTree, grams: PyTree,
-                    relax: jnp.ndarray) -> Tuple[PyTree, dict]:
+                    relax: jnp.ndarray, groups=None) -> Tuple[PyTree, dict]:
         plans = self.plans_for(params)
         new_params, mean_rank = jump_tree(self.cfg, plans, params, buffers,
-                                          grams, relax)
+                                          grams, relax, groups=groups)
         return new_params, {"mean_rank": mean_rank}
 
     def apply(self, params: PyTree, buffers: PyTree,
-              round_idx: int = 0, grams: Optional[PyTree] = None
-              ) -> Tuple[PyTree, dict]:
+              round_idx: int = 0, grams: Optional[PyTree] = None,
+              groups: Optional[Tuple[int, ...]] = None,
+              step: Optional[int] = None) -> Tuple[PyTree, dict]:
+        """The jump. Two idioms:
+
+          * ``apply(params, buffers, round_idx, grams=...)`` — legacy:
+            every group jumps, relaxed at `round_idx` (per-group anneal).
+          * ``apply(params, buffers, grams=..., step=step)`` — schedule-
+            driven: only ``apply_groups(step)`` jump, each at its own
+            round's relax. `groups` (static tuple) overrides the mask.
+        """
         if buffers is None:
             return params, {}
         if grams is None or not self.streaming:
             grams = _none_like(buffers)
         self.plans_for(params)        # build outside the trace for caching
+        if step is not None:
+            if groups is None:
+                groups = self.apply_groups(step)
+            relax = jnp.asarray(self.relax_vector(step), jnp.float32)
+        else:
+            relax = jnp.asarray(
+                [self.relax_for_round(round_idx, g)
+                 for g in range(self.n_groups)], jnp.float32)
+        groups = None if groups is None else tuple(sorted(groups))
         if self._apply_jit is None:
-            self._apply_jit = jax.jit(self._apply_impl, donate_argnums=(0,))
-        relax = jnp.asarray(self.relax_for_round(round_idx), jnp.float32)
-        return self._apply_jit(params, buffers, grams, relax)
+            self._apply_jit = jax.jit(self._apply_impl, donate_argnums=(0,),
+                                      static_argnames=("groups",))
+        return self._apply_jit(params, buffers, grams, relax, groups=groups)

@@ -31,8 +31,14 @@ Kernel routes (see kernels/ops.py + kernels/sharded.py):
   * ``dot_general``       — the batched-contraction reference path in
                             core/dmd.py (config override / oracle).
 
-`plan_table()` renders the whole table for auditing; tests/test_configs.py
-pins it for the production configs.
+Schedule groups (core/schedule.py, DESIGN.md §4): each plan also records
+which schedule group the leaf resolved to (`group`, `sched`) — the group's
+window length `m` sizes the leaf's snapshot buffer and Gram, its phase
+staggers its jumps, and its index keys the per-group slot/relax vectors
+threaded through the train step.
+
+`plan_table()` renders the whole table for auditing (route + group/m/phase
+columns); tests/test_configs.py pins it for the production configs.
 """
 from __future__ import annotations
 
@@ -42,6 +48,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import schedule as sched_mod
+from repro.core.schedule import GroupSchedule
 
 PyTree = Any
 
@@ -71,12 +80,25 @@ class LeafPlan:
     gram_spec: P                  # spec for the (stack..., m, m) Gram leaf
     block_n: int                  # n-tile for the Pallas kernels (128-lane
                                   # multiple, clamped to the leaf)
+    group: int = 0                # schedule-group index (core/schedule.py);
+                                  # indexes per-group slot/relax vectors
+    sched: Optional[GroupSchedule] = None
+                                  # the group's resolved schedule (m, s,
+                                  # warmup, cooldown, phase, relax, anneal)
     mesh: Optional[Mesh] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property
     def stack_shape(self) -> Tuple[int, ...]:
         return self.shape[:self.stack_dims]
+
+    @property
+    def m(self) -> int:
+        """Snapshot-window length for THIS leaf — its buffer is (m, *shape)
+        and its Gram (stack..., m, m). Heterogeneous across groups."""
+        if self.sched is None:
+            raise ValueError(f"plan for {self.path} has no schedule")
+        return self.sched.m
 
     @property
     def stack_spec_entries(self) -> Tuple[Any, ...]:
@@ -155,10 +177,9 @@ def build_plans(params: PyTree, cfg, mesh: Optional[Mesh] = None,
     only shape/dtype/path metadata is read, so plans can be built at trace
     time inside a jitted step.
     """
-    from repro.core.snapshots import param_filter_fn
     from repro.distributed.sharding import normalize_path, spec_for_path
 
-    pred = param_filter_fn(cfg)
+    groups = sched_mod.resolve_groups(cfg)
 
     if stack_dims is None:
         # No annotation means NO stacked leaves. Guessing zero for a
@@ -188,8 +209,10 @@ def build_plans(params: PyTree, cfg, mesh: Optional[Mesh] = None,
     def one(keypath, leaf):
         raw = jax.tree_util.keystr(keypath)
         path = normalize_path(raw)
-        if not pred(raw, leaf):
-            return None
+        gi = sched_mod.group_for_leaf(cfg, path, leaf.ndim, leaf.size)
+        if gi is None:                       # excluded by a group rule (or
+            return None                      # the legacy filters mapped onto
+                                             # rules — core/schedule.py)
         nstack = stack_of(path, leaf)
         if not 0 <= nstack < leaf.ndim + 1:
             raise ValueError(
@@ -217,6 +240,8 @@ def build_plans(params: PyTree, cfg, mesh: Optional[Mesh] = None,
             gram_spec=P(*((ent[:nstack] + (None,) * (nstack - len(ent))
                            )[:nstack]), None, None),
             block_n=default_block_n(flat_size),
+            group=gi,
+            sched=groups[gi],
             mesh=mesh,
         )
 
@@ -240,11 +265,16 @@ def plan_summary(plans: PyTree) -> Dict[str, Tuple[str, int]]:
 
 
 def plan_table(plans: PyTree) -> str:
-    """Human-readable audit dump of the whole dispatch table."""
-    rows = [("path", "route", "stack", "shape", "flat_n", "block_n",
-             "spec", "psum")]
+    """Human-readable audit dump of the whole dispatch table (kernel route
+    + schedule group / window / phase per selected leaf)."""
+    rows = [("path", "route", "group", "m", "phase", "stack", "shape",
+             "flat_n", "block_n", "spec", "psum")]
     for p in plan_entries(plans):
-        rows.append((p.path, p.route, str(p.stack_dims),
+        rows.append((p.path, p.route,
+                     p.sched.name if p.sched is not None else str(p.group),
+                     str(p.m if p.sched is not None else "?"),
+                     str(p.sched.phase if p.sched is not None else "?"),
+                     str(p.stack_dims),
                      "x".join(map(str, p.shape)), str(p.flat_size),
                      str(p.block_n), str(p.param_spec),
                      ",".join(p.psum_axes()) or "-"))

@@ -1,0 +1,244 @@
+"""Per-leaf DMD scheduling: group rules -> per-group windows (DESIGN.md §4).
+
+The paper treats the snapshot window ``m`` and jump horizon ``s`` as one
+global knob, but its own premise — POD/DMD learns *per-layer* dynamics —
+implies each layer family deserves its own schedule (Turjeman et al. 2022:
+layer families evolve on visibly different timescales; Manojlović et al.
+2020: per-layer Koopman spectra a single window cannot serve). This module
+is the scheduling control plane on top of the LeafPlan registry:
+
+  * ``DMDGroupRule``   — a structural matcher (path regex / ndim / size
+                         bounds) plus either ``exclude`` or per-group
+                         schedule overrides (m, s, warmup, cooldown, relax,
+                         anneal, phase).
+  * ``GroupSchedule``  — one resolved group's schedule. Group 0 is always
+                         the DEFAULT group built from the DMDConfig globals
+                         (phase 0), so a config with no rules reproduces the
+                         pre-refactor single-window behavior bit-exactly.
+  * ``group_for_leaf`` — rule resolution, run ONCE per leaf at plan-build
+                         time (core/leafplan.py): legacy-filter rules first
+                         (``param_filter`` / ``min_param_size`` are mapped
+                         onto exclusion rules — no string dispatch survives
+                         below the config layer), then ``cfg.groups`` in
+                         declaration order, first match wins, no match ->
+                         the default group.
+
+Schedule math (per group g): with ``cycle = cooldown + m`` and
+``eff = step - warmup - phase``,
+
+    slot(step) = -1                          if eff < 0   (not started)
+                 eff % cycle - cooldown      otherwise    (< 0 in cooldown)
+
+a snapshot is recorded when slot >= 0, and the group jumps when
+slot == m - 1. The ``phase`` offset staggers groups against each other:
+two groups with disjoint jump residues (e.g. m=14/phase=0 jumps on odd
+effective steps, m=6/phase=7 on even ones) never jump on the same step, so
+the whole-tree jump spike of the synchronous schedule is amortized into
+smaller per-group jumps (benchmarks: ``staggered_jump``).
+
+Everything here is pure arithmetic on Python ints or traced scalars:
+``slots_for_step`` is the in-trace variant the fused train step uses, and
+it agrees with the host-side ``GroupSchedule.slot`` for every step
+(tests/test_schedule.py pins both, plus the legacy closed form).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DMDGroupRule:
+    """One config-declared scheduling rule: matcher + overrides.
+
+    Matcher fields (all must hold for the rule to match a leaf):
+      path_regex  re.search against the normalized param path ("" = any)
+      min_ndim /  bounds on the RAW leaf ndim, stack axes included — the
+      max_ndim    same convention the legacy "matrices_only" filter used
+                  (max_ndim = -1 means unbounded)
+      min_size /  bounds on the RAW leaf element count (max_size = -1
+      max_size    means unbounded)
+
+    Action: ``exclude=True`` removes matching leaves from DMD entirely;
+    otherwise the rule defines a schedule group whose ``None`` fields
+    inherit the DMDConfig globals. ``phase`` delays the group's first
+    window by that many steps, staggering its jumps against other groups.
+    ``reset_opt`` controls the post-jump optimizer-moment reset for THIS
+    group's leaves (inherits cfg.reset_opt_state): slow leaf families
+    (norms/biases) whose jumps barely move the weights should usually set
+    it False — zeroing their Adam moments every short cycle costs more
+    adaptation than the tiny teleport justifies.
+    """
+    name: str = ""
+    path_regex: str = ""
+    min_ndim: int = 0
+    max_ndim: int = -1
+    min_size: int = 0
+    max_size: int = -1
+    exclude: bool = False
+    m: Optional[int] = None
+    s: Optional[int] = None
+    warmup_steps: Optional[int] = None
+    cooldown_steps: Optional[int] = None
+    phase: int = 0
+    relax: Optional[float] = None
+    anneal: Optional[float] = None
+    reset_opt: Optional[bool] = None
+
+    def matches(self, path: str, ndim: int, size: int) -> bool:
+        if self.path_regex and not re.search(self.path_regex, path):
+            return False
+        if ndim < self.min_ndim:
+            return False
+        if 0 <= self.max_ndim < ndim:
+            return False
+        if size < self.min_size:
+            return False
+        if 0 <= self.max_size < size:
+            return False
+        return True
+
+
+@dataclass(frozen=True)
+class GroupSchedule:
+    """One resolved schedule group. Hashable/static: lives inside LeafPlan
+    records and jit-static config closures."""
+    index: int
+    name: str
+    m: int
+    s: int
+    warmup_steps: int
+    cooldown_steps: int
+    phase: int
+    relax: float
+    anneal: float
+    reset_opt: bool = True
+
+    @property
+    def cycle(self) -> int:
+        return self.cooldown_steps + self.m
+
+    # Cycle after warmup+phase: [cooldown unrecorded steps][m recorded
+    # steps -> jump]. cooldown (beyond-paper, default 0 = the paper's
+    # Algorithm 1) lets the optimizer moments re-adapt after a jump so the
+    # next window measures the trajectory's own dynamics, not the post-jump
+    # transient.
+    def slot(self, step: int) -> int:
+        """Buffer row for the snapshot taken after optimizer step `step`;
+        negative while not recording (warmup / phase / cooldown)."""
+        eff = int(step) - self.warmup_steps - self.phase
+        if eff < 0:
+            return -1
+        return eff % self.cycle - self.cooldown_steps
+
+    def should_record(self, step: int) -> bool:
+        return self.slot(step) >= 0
+
+    def should_apply(self, step: int) -> bool:
+        return self.slot(step) == self.m - 1
+
+    def round_index(self, step: int) -> int:
+        return (int(step) - self.warmup_steps - self.phase) // self.cycle
+
+    def relax_for_round(self, round_idx: int) -> float:
+        return float(self.relax * (self.anneal ** max(round_idx, 0)))
+
+
+def rules_for_config(cfg) -> Tuple[DMDGroupRule, ...]:
+    """The config's full rule list: the legacy ``param_filter`` /
+    ``min_param_size`` strings mapped onto exclusion rules (resolved FIRST,
+    so a legacy filter excludes a leaf even when a group rule would match),
+    followed by ``cfg.groups`` in declaration order."""
+    legacy = []
+    if cfg.param_filter == "non_expert":
+        legacy.append(DMDGroupRule(name="legacy_non_expert",
+                                   path_regex="expert", exclude=True))
+    elif cfg.param_filter == "matrices_only":
+        legacy.append(DMDGroupRule(name="legacy_matrices_only",
+                                   max_ndim=1, exclude=True))
+    elif cfg.param_filter != "all":
+        raise ValueError(f"unknown param_filter {cfg.param_filter!r}")
+    if cfg.min_param_size > 1:
+        legacy.append(DMDGroupRule(name="legacy_min_param_size",
+                                   max_size=cfg.min_param_size - 1,
+                                   exclude=True))
+    return tuple(legacy) + tuple(getattr(cfg, "groups", ()) or ())
+
+
+def _validate(g: GroupSchedule) -> GroupSchedule:
+    if g.m < 3:
+        raise ValueError(f"group {g.name!r}: DMD needs m >= 3 (got {g.m})")
+    for field in ("warmup_steps", "cooldown_steps", "phase"):
+        if getattr(g, field) < 0:
+            raise ValueError(f"group {g.name!r}: {field} must be >= 0")
+    if g.s < 1:
+        raise ValueError(f"group {g.name!r}: s must be >= 1 (got {g.s})")
+    return g
+
+
+def resolve_groups(cfg) -> Tuple[GroupSchedule, ...]:
+    """Config -> the resolved group table. Group 0 is ALWAYS the default
+    group (the DMDConfig globals, phase 0); groups 1..K are the non-exclude
+    rules in rule order, each inheriting unset fields from the globals."""
+    reset_default = bool(getattr(cfg, "reset_opt_state", True))
+    groups = [_validate(GroupSchedule(
+        index=0, name="default", m=cfg.m, s=cfg.s,
+        warmup_steps=cfg.warmup_steps, cooldown_steps=cfg.cooldown_steps,
+        phase=0, relax=cfg.relax, anneal=cfg.anneal,
+        reset_opt=reset_default))]
+    for rule in rules_for_config(cfg):
+        if rule.exclude:
+            continue
+        idx = len(groups)
+        pick = lambda v, d: d if v is None else v
+        groups.append(_validate(GroupSchedule(
+            index=idx, name=rule.name or f"group{idx}",
+            m=pick(rule.m, cfg.m), s=pick(rule.s, cfg.s),
+            warmup_steps=pick(rule.warmup_steps, cfg.warmup_steps),
+            cooldown_steps=pick(rule.cooldown_steps, cfg.cooldown_steps),
+            phase=rule.phase,
+            relax=pick(rule.relax, cfg.relax),
+            anneal=pick(rule.anneal, cfg.anneal),
+            reset_opt=pick(rule.reset_opt, reset_default))))
+    return tuple(groups)
+
+
+def group_for_leaf(cfg, path: str, ndim: int, size: int) -> Optional[int]:
+    """Rule resolution for one leaf: index into ``resolve_groups(cfg)`` or
+    None (excluded). `path` is the NORMALIZED param path ("/seg0/attn/wq").
+    First matching rule wins; an exclude match returns None; no match falls
+    through to the default group 0. Zero-size leaves are never schedulable.
+    """
+    if size < 1:
+        return None
+    next_group = 1
+    for rule in rules_for_config(cfg):
+        gi = None if rule.exclude else next_group
+        if not rule.exclude:
+            next_group += 1
+        if rule.matches(path, ndim, size):
+            return gi
+    return 0
+
+
+def slots_for_step(groups: Sequence[GroupSchedule], step) -> jnp.ndarray:
+    """(n_groups,) int32 slot vector for a (possibly traced) step scalar —
+    the in-trace counterpart of ``GroupSchedule.slot``, used by the fused
+    train step. Entry g is -1 before group g's first window, else
+    ``eff % cycle - cooldown`` (negative during cooldown)."""
+    step = jnp.asarray(step, jnp.int32)
+    slots = []
+    for g in groups:
+        eff = step - (g.warmup_steps + g.phase)
+        slots.append(jnp.where(eff < 0, jnp.int32(-1),
+                               eff % g.cycle - g.cooldown_steps))
+    return jnp.stack(slots).astype(jnp.int32)
+
+
+def slots_array(groups: Sequence[GroupSchedule], step: int) -> np.ndarray:
+    """Host-side per-group slot vector (concrete ints)."""
+    return np.asarray([g.slot(step) for g in groups], np.int32)

@@ -1,13 +1,19 @@
 """Cyclic per-parameter snapshot buffers (the paper's weight matrices W^l).
 
 A buffer pytree mirrors the (filtered) param pytree with a leading snapshot
-axis of length m. Buffers are stored in ``snapshot_dtype`` and sharded with
-the *same* PartitionSpec as the parameter (snapshot axis replicated), so the
-Gram pass is local + one O(m^2) psum — see DESIGN.md §2.
+axis of length m_leaf — HETEROGENEOUS across schedule groups (DESIGN.md §4):
+each leaf's window length comes from its plan's resolved GroupSchedule, so a
+norm/bias group with m=6 stores 6 rows while the matrices keep the global
+m=14. Buffers are stored in ``snapshot_dtype`` and sharded with the *same*
+PartitionSpec as the parameter (snapshot axis replicated), so the Gram pass
+is local + one O(m^2) psum — see DESIGN.md §2.
 
-Per-leaf routing (stack axes, kernel route, specs) comes from the LeafPlan
-pytree (core/leafplan.py), computed once at accelerator init and threaded
-through every function here — the old path-string stack matcher is gone.
+Per-leaf routing (stack axes, kernel route, specs, schedule group) comes
+from the LeafPlan pytree (core/leafplan.py), computed once at accelerator
+init and threaded through every function here. Write positions arrive as a
+scalar slot (legacy single-group path) or a per-group slot vector indexed by
+``plan.group`` — computed in-trace from the step index by
+``schedule.slots_for_step`` inside the fused train step.
 """
 from __future__ import annotations
 
@@ -24,18 +30,39 @@ PyTree = Any
 
 
 def param_filter_fn(cfg) -> Callable[[str, Any], bool]:
-    """cfg: DMDConfig -> predicate(path_string, leaf) for DMD applicability."""
+    """cfg: DMDConfig -> predicate(path_string, leaf) for DMD applicability.
+
+    Thin wrapper over the group-rule resolution in core/schedule.py: a leaf
+    is selected iff it resolves to a schedule group. The legacy
+    ``param_filter`` strings / ``min_param_size`` are mapped onto exclusion
+    rules there (``schedule.rules_for_config``) — no string dispatch here.
+    """
+    from repro.core.schedule import group_for_leaf
+    from repro.distributed.sharding import normalize_path
+
     def pred(path: str, leaf) -> bool:
-        if leaf.size < max(cfg.min_param_size, 1):
-            return False
-        if cfg.param_filter == "all":
-            return True
-        if cfg.param_filter == "non_expert":
-            return "expert" not in path
-        if cfg.param_filter == "matrices_only":
-            return leaf.ndim >= 2
-        raise ValueError(f"unknown param_filter {cfg.param_filter!r}")
+        return group_for_leaf(cfg, normalize_path(path), leaf.ndim,
+                              leaf.size) is not None
     return pred
+
+
+def _static_int(s) -> Optional[int]:
+    """Concrete value of a slot scalar, or None when traced."""
+    if isinstance(s, jax.core.Tracer):
+        return None
+    try:
+        return int(s)
+    except (TypeError, jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return None
+
+
+def _leaf_slot(plan, slot):
+    """Per-leaf write position: vector slots index by the plan's schedule
+    group; scalars apply to every leaf (single-group / legacy callers)."""
+    if getattr(slot, "ndim", 0) == 1:
+        return slot[plan.group]
+    return slot
 
 
 def _iter_paths(tree: PyTree):
@@ -51,12 +78,14 @@ def selected_paths(params: PyTree, cfg) -> Dict[str, bool]:
 
 def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None
                  ) -> PyTree:
-    """Zeros buffer (m, *shape) per selected leaf; None for excluded leaves.
+    """Zeros buffer (m_leaf, *shape) per selected leaf; None for excluded
+    leaves. The window length is PER LEAF (plan.m — the leaf's schedule
+    group), so mixed-m configs size each buffer to its own group.
 
-    Selection comes from `plans` when given (the accelerator path), else from
-    the raw param filter (standalone callers with flat pytrees). Abstract-
-    aware: ShapeDtypeStruct params produce ShapeDtypeStruct buffers (the
-    dry-run path must never materialize m x params of zeros).
+    Selection comes from `plans` when given (the accelerator path), else
+    from plans built on the spot (standalone callers with flat pytrees).
+    Abstract-aware: ShapeDtypeStruct params produce ShapeDtypeStruct buffers
+    (the dry-run path must never materialize m x params of zeros).
     """
     if plans is None:
         plans = build_plans(params, cfg)
@@ -65,7 +94,7 @@ def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None
     def make(plan, leaf):
         if plan is None:
             return None
-        shape = (cfg.m,) + tuple(leaf.shape)
+        shape = (plan.m,) + tuple(leaf.shape)
         if isinstance(leaf, jax.ShapeDtypeStruct):
             return jax.ShapeDtypeStruct(shape, dtype)
         return jnp.zeros(shape, dtype)
@@ -73,30 +102,62 @@ def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None
 
 
 def record(buffers: PyTree, params: PyTree, slot,
-           plans: Optional[PyTree] = None) -> PyTree:
-    """Write current params into row `slot` of each buffer (donated update).
-    `plans` is accepted for API uniformity with the other buffer passes (the
-    row write needs no routing — it is a local dynamic-slice regardless of
-    sharding or stacking)."""
-    del plans
+           plans: Optional[PyTree] = None, group: Optional[int] = None
+           ) -> PyTree:
+    """Write current params into each buffer's row for this step (donated
+    update; a local dynamic-slice regardless of sharding or stacking).
 
-    def upd(buf, p):
-        if buf is None:
+    `slot` is a scalar (one row for every leaf — the legacy single-group
+    idiom) or a per-group vector indexed by ``plan.group``. Concrete
+    negative slots skip the leaf (host-side standalone callers pass
+    ``acc.slots(step)`` directly); traced slots must be pre-gated by the
+    caller — the fused train step conds per group — and are clamped to 0.
+    `group` (static) restricts the write to that group's leaves: the
+    per-group ``lax.cond`` branches use it so a cooldown group's buffers
+    are never touched.
+    """
+    if plans is None:
+        if group is not None or getattr(slot, "ndim", 0) == 1:
+            raise ValueError("per-group record needs the plan pytree")
+
+        def upd(buf, p):
+            if buf is None:
+                return None
+            return jax.lax.dynamic_update_index_in_dim(
+                buf, p.astype(buf.dtype), slot, axis=0)
+        return jax.tree_util.tree_map(upd, buffers, params,
+                                      is_leaf=lambda x: x is None)
+
+    def upd(plan, buf, p):
+        if buf is None or plan is None:
             return None
+        if group is not None and plan.group != group:
+            return buf
+        s = _leaf_slot(plan, slot)
+        si = _static_int(s)
+        if si is not None:
+            if si < 0:
+                return buf
+            s = si
+        else:
+            s = jnp.maximum(s, 0)
         return jax.lax.dynamic_update_index_in_dim(
-            buf, p.astype(buf.dtype), slot, axis=0)
-    return jax.tree_util.tree_map(upd, buffers, params,
-                                  is_leaf=lambda x: x is None)
+            buf, p.astype(buf.dtype), s, axis=0)
+    return jax.tree_util.tree_map(upd, plans, buffers, params,
+                                  is_leaf=is_plan_leaf)
 
 
 def init_grams(buffers: PyTree, cfg, plans: PyTree) -> PyTree:
-    """Zeros running Gram (stack..., m, m) fp32 per buffer leaf; None where
-    the buffer is None. Mirrors the buffer pytree so the two thread through
-    jitted steps together. Abstract-aware like init_buffers."""
+    """Zeros running Gram (stack..., m_leaf, m_leaf) fp32 per buffer leaf
+    (m_leaf from the leaf's schedule group); None where the buffer is None.
+    Mirrors the buffer pytree so the two thread through jitted steps
+    together. Abstract-aware like init_buffers."""
+    del cfg
+
     def make(plan, buf):
         if buf is None or plan is None:
             return None
-        shape = plan.stack_shape + (cfg.m, cfg.m)
+        shape = plan.stack_shape + (plan.m, plan.m)
         if isinstance(buf, jax.ShapeDtypeStruct):
             return jax.ShapeDtypeStruct(shape, jnp.float32)
         return jnp.zeros(shape, jnp.float32)
@@ -123,18 +184,26 @@ def _stream_gram_row(plan: LeafPlan, buf, p, cfg):
 
 
 def update_grams(grams: PyTree, buffers: PyTree, params: PyTree, slot,
-                 cfg, plans: PyTree) -> PyTree:
-    """Streaming Gram maintenance: after `record` wrote params into row
-    `slot`, refresh row+column `slot` of every running Gram with one O(m*n)
-    anchored inner-product pass per leaf, kernel-routed by the leaf's plan.
-    See DESIGN.md §2 for why this equals the full gram_matrix recompute at
-    every window-complete point.
+                 cfg, plans: PyTree, group: Optional[int] = None) -> PyTree:
+    """Streaming Gram maintenance: after `record` wrote params into each
+    leaf's row, refresh that row+column of every running Gram with one
+    O(m*n) anchored inner-product pass per leaf, kernel-routed by the
+    leaf's plan. `slot` / `group` follow the `record` conventions (scalar
+    or per-group vector; concrete negatives skip; static `group` restricts
+    to one schedule group). See DESIGN.md §2 for why this equals the full
+    gram_matrix recompute at every window-complete point.
     """
     def upd(plan, g, buf, p):
         if g is None or plan is None:
             return None
+        if group is not None and plan.group != group:
+            return g
+        s = _leaf_slot(plan, slot)
+        si = _static_int(s)
+        if si is not None and si < 0:
+            return g
         row = _stream_gram_row(plan, buf, p, cfg)
-        return dmd_math.set_gram_row(g, row, slot)
+        return dmd_math.set_gram_row(g, row, s if si is None else si)
 
     return jax.tree_util.tree_map(upd, plans, grams, buffers, params,
                                   is_leaf=is_plan_leaf)

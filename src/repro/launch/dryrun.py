@@ -103,6 +103,8 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
                                           plans=acc.plans_for(params))
         step = make_train_step(model, acfg, mesh=mesh,
                                global_batch=shape.global_batch, acc=acc)
+        # third arg = the step index (the per-group DMD slot vector is
+        # derived from it in-trace — train/step.py)
         args = (state, batch, jax.ShapeDtypeStruct((), jnp.int32))
         shardings = (inputs_mod.shardings_of(st_specs, mesh),
                      inputs_mod.shardings_of(batch_specs, mesh),

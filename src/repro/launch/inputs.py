@@ -124,6 +124,9 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
     specs come from the plan table (plan.snapshot_spec / plan.gram_spec — the
     single audited source, DESIGN.md §3/§5) instead of being re-derived from
     the path rules. Both derivations agree; the plan is authoritative.
+    Specs are shape-agnostic, so heterogeneous per-group windows (a mixed-m
+    schedule sizes each leaf's buffer (m_leaf, ...) — DESIGN.md §4) need no
+    special casing: the snapshot axis is replicated whatever its length.
     """
     from repro.core.leafplan import plan_entries
     from repro.distributed.sharding import resolve_rule, rule_for_path

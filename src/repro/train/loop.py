@@ -2,7 +2,11 @@
 
 The loop is deliberately thin: all math lives in jitted steps. Host-side
 responsibilities:
-  * the DMD schedule (warmup / cooldown / m-window / jump) via DMDAccelerator,
+  * the DMD schedule via DMDAccelerator: the fused train step derives every
+    group's (warmup / phase / cooldown / m-window) position from the step
+    index in-trace; the loop only decides WHICH groups' windows closed
+    (acc.apply_groups) and dispatches the jump masked to those groups —
+    with staggered phases that is at most one group's jump spike per step,
   * checkpoint cadence + atomic save + resume (bit-exact, tested),
   * preemption (SIGTERM) -> save-and-exit,
   * failure injection for tests (raise at step k, resume from disk).
@@ -51,8 +55,11 @@ class Trainer:
             make_train_step(model, acfg, mesh=mesh, loss_fn=loss_fn,
                             acc=self.acc),
             donate_argnums=(0,))
+        # `groups` static: each distinct jumping-group subset compiles its
+        # own (small) jump program — the staggered-schedule spike killer.
         self.dmd_step = jax.jit(make_dmd_step(acfg, mesh=mesh, acc=self.acc),
-                                donate_argnums=(0,))
+                                donate_argnums=(0,),
+                                static_argnames=("groups",))
 
     # -- state ---------------------------------------------------------------
     def init_state(self, key=None) -> TrainState:
@@ -84,7 +91,12 @@ class Trainer:
                 and state.dmd_gram is not None:
             # Pre-streaming checkpoints restore the template's all-zero
             # Grams; rebuild those from the restored buffers so a mid-window
-            # resume never applies DMD on a Gram with zeroed rows.
+            # resume never applies DMD on a Gram with zeroed rows. Template
+            # buffer/Gram shapes come from the same plan table that wrote
+            # the checkpoint, so mixed-m (per-group) states round-trip, and
+            # every group's window position is re-derived from the restored
+            # step index — a mid-window resume with heterogeneous m is
+            # bit-exact (tests/test_trainer.py).
             state = state._replace(dmd_gram=snap.recompute_grams(
                 state.dmd_gram, state.dmd_buffers, self.acfg.dmd,
                 self.acc.plans_for(state.params)))
@@ -129,14 +141,14 @@ class Trainer:
             if self.fail_at_step is not None and step == self.fail_at_step:
                 raise RuntimeError(f"injected failure at step {step}")
             batch = next(batches)
-            slot = self.acc.slot(step) if self.acfg.dmd.enabled else -1
             state, metrics = self.train_step(state, batch,
-                                             jnp.asarray(slot, jnp.int32))
-            if self.acfg.dmd.enabled and self.acc.should_apply(step):
-                relax = jnp.asarray(
-                    self.acc.relax_for_round(self.acc.round_index(step)),
-                    jnp.float32)
-                state, dmd_info = self.dmd_step(state, relax)
+                                             jnp.asarray(step, jnp.int32))
+            apply_groups = (self.acc.apply_groups(step)
+                            if self.acfg.dmd.enabled else ())
+            if apply_groups:
+                relax = jnp.asarray(self.acc.relax_vector(step), jnp.float32)
+                state, dmd_info = self.dmd_step(state, relax,
+                                                groups=apply_groups)
                 metrics.update(dmd_info)
             if log_every and step % log_every == 0:
                 loss = float(metrics["loss"])

@@ -1,32 +1,40 @@
 """Jitted train / DMD steps.
 
-train_step:
+train_step(state, batch, step):
   * microbatch gradient accumulation via lax.scan (per-arch grad_accum,
     resolved against the mesh so each microbatch keeps >= 1 row per batch
     shard),
   * fp32 gradient accumulators,
-  * fused DMD snapshot recording (lax.cond'd on the slot, so warmup/cooldown
-    phases reuse the same executable) — with dmd.streaming_gram the O(m*n)
-    Gram row update rides in the same cond, against params that are already
-    resident from the optimizer update. The row pass is kernel-routed per
-    leaf by the accelerator's LeafPlan table (DESIGN.md §3): Pallas for flat
-    leaves, shard_map'd Pallas for stacked/sharded ones.
+  * fused DMD snapshot recording, driven by the STEP INDEX: the per-group
+    slot vector is computed in-trace (schedule.slots_for_step) and each
+    schedule group gets its own lax.cond, so a group in warmup/phase/
+    cooldown costs nothing while another group records (DESIGN.md §4). With
+    dmd.streaming_gram the O(m*n) Gram row update rides in the same
+    per-group cond, against params that are already resident from the
+    optimizer update. The row pass is kernel-routed per leaf by the
+    accelerator's LeafPlan table (DESIGN.md §3): Pallas for flat leaves,
+    shard_map'd Pallas for stacked/sharded ones.
   * optional int8-compressed cross-pod gradient sync (distributed/gradsync).
 
-dmd_step: the paper's jump. With the streaming Gram carried in TrainState it
-is pure O(m^3) coefficient algebra + one combine pass; without it (the
-cfg.streaming_gram=False A/B baseline) it recomputes the full O(m^2*n) Gram.
-Both steps share the same accelerator instance (hence the same plan table) —
-pass `acc=` to avoid rebuilding it.
+dmd_step(state, relax, groups=None): the paper's jump, masked to the
+schedule group(s) whose window closed (`groups` is a STATIC tuple — the
+Trainer jits it as a static argname, so a staggered schedule compiles one
+small program per jumping group instead of one whole-tree spike). With the
+streaming Gram carried in TrainState it is pure O(m^3) coefficient algebra
++ one combine pass per jumped leaf; without it (the
+cfg.streaming_gram=False A/B baseline) it recomputes the full O(m^2*n)
+Gram. Both steps share the same accelerator instance (hence the same plan
+table) — pass `acc=` to avoid rebuilding it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import leafplan, schedule as sched_mod
 from repro.core import snapshots as snap
 from repro.core.accelerator import DMDAccelerator, _none_like, jump_tree
 from repro.distributed.sharding import constrain
@@ -64,7 +72,11 @@ def _accelerator_for(model, acfg, mesh, acc: Optional[DMDAccelerator]
 def make_train_step(model, acfg, *, mesh=None, global_batch=None,
                     loss_fn: Callable = None, donate: bool = True,
                     acc: Optional[DMDAccelerator] = None):
-    """Returns train_step(state, batch, dmd_slot) -> (state, metrics)."""
+    """Returns train_step(state, batch, step) -> (state, metrics).
+
+    `step` is the (traced) optimizer-step index — the per-group DMD slot
+    vector is derived from it in-trace, replacing the old single `dmd_slot`
+    scalar (which could only express one global window)."""
     opt = make_optimizer(acfg.optimizer)
     gb = global_batch or acfg.train.global_batch
     ga = resolve_grad_accum(acfg, mesh, gb)
@@ -73,7 +85,7 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
     streaming_on = acc.streaming
     _loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
 
-    def train_step(state: TrainState, batch: PyTree, dmd_slot) -> tuple:
+    def train_step(state: TrainState, batch: PyTree, step) -> tuple:
         params = state.params
 
         def one_loss(p, mb):
@@ -116,17 +128,23 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
         if dmd_on and buffers is not None:
             streaming = streaming_on and grams is not None
             plans = acc.plans_for(params)       # trace-time, cached
+            slots = sched_mod.slots_for_step(acc.groups, step)
 
-            def write(args):
-                bufs, g = args
-                slot = jnp.maximum(dmd_slot, 0)
-                bufs = snap.record(bufs, params, slot, plans)
-                if streaming:
-                    g = snap.update_grams(g, bufs, params, slot, acfg.dmd,
-                                          plans)
-                return bufs, g
-            buffers, grams = jax.lax.cond(dmd_slot >= 0, write, lambda a: a,
-                                          (buffers, grams))
+            # One cond per schedule group: group gi's leaves are written
+            # only while gi records (its slot >= 0); other groups' leaves
+            # are compile-time pass-throughs inside the branch, so XLA
+            # sees the same single-cond program as before for one group.
+            for gi in range(len(acc.groups)):
+                def write(args, gi=gi):
+                    bufs, g = args
+                    slot = jnp.maximum(slots[gi], 0)
+                    bufs = snap.record(bufs, params, slot, plans, group=gi)
+                    if streaming:
+                        g = snap.update_grams(g, bufs, params, slot,
+                                              acfg.dmd, plans, group=gi)
+                    return bufs, g
+                buffers, grams = jax.lax.cond(slots[gi] >= 0, write,
+                                              lambda a: a, (buffers, grams))
 
         new_state = TrainState(params, opt_state, state.step + 1, buffers,
                                grams)
@@ -137,15 +155,57 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
     return train_step
 
 
+def reset_opt_state_after_jump(opt, opt_state, params, plans, groups,
+                               n_groups):
+    """Post-jump optimizer-moment reset.
+
+    `groups` is the set of group indices whose moments should reset
+    (callers filter by each group's ``reset_opt`` flag —
+    DMDAccelerator.reset_groups). When that covers every group this is the
+    legacy full ``opt.init`` — bit-exact with the pre-refactor behavior.
+    Otherwise (staggered schedule, or reset-exempt groups), reset ONLY
+    those groups' leaves' entries in each params-shaped field of the
+    optimizer state: a staggered jump must not clobber the moments the
+    other groups are accumulating mid-window. Fields that do not mirror
+    the param pytree (scalar counters, empty states) are kept as-is in the
+    masked case.
+    """
+    if groups is None or len(frozenset(groups)) >= n_groups:
+        return opt.init(params)
+    fresh = opt.init(params)
+    pdef = jax.tree_util.tree_structure(params)
+    gset = frozenset(int(g) for g in groups)
+
+    def merge(old_field, new_field):
+        if jax.tree_util.tree_structure(old_field) != pdef:
+            return old_field
+        return jax.tree_util.tree_map(
+            lambda plan, o, n: n if (plan is not None and plan.group in gset)
+            else o,
+            plans, old_field, new_field, is_leaf=leafplan.is_plan_leaf)
+
+    if jax.tree_util.tree_structure(opt_state) == pdef:
+        return merge(opt_state, fresh)            # momentum-style state
+    if isinstance(opt_state, tuple):              # NamedTuple of field trees
+        return type(opt_state)(*(merge(o, n)
+                                 for o, n in zip(opt_state, fresh)))
+    return opt_state
+
+
 def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
                   model=None):
-    """Returns dmd_step(state, relax) -> (state, info): the paper's jump."""
+    """Returns dmd_step(state, relax, groups=None) -> (state, info): the
+    paper's jump. `groups` is a STATIC tuple of schedule-group indices to
+    jump (the Trainer passes acc.apply_groups(step) and jits it as a static
+    argname); None jumps every group — the legacy single-window call.
+    `relax` is a scalar or the per-group vector from acc.relax_vector."""
     cfg = acfg.dmd
     opt = make_optimizer(acfg.optimizer)
     acc = _accelerator_for(model, acfg, mesh, acc)
     streaming_on = acc.streaming
 
-    def dmd_step(state: TrainState, relax) -> tuple:
+    def dmd_step(state: TrainState, relax,
+                 groups: Optional[Sequence[int]] = None) -> tuple:
         if state.dmd_buffers is None:
             return state, {"mean_rank": jnp.zeros((), jnp.float32)}
         grams = state.dmd_gram
@@ -153,10 +213,15 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
             grams = _none_like(state.dmd_buffers)
         plans = acc.plans_for(state.params)
         params, mean_rank = jump_tree(cfg, plans, state.params,
-                                      state.dmd_buffers, grams, relax)
+                                      state.dmd_buffers, grams, relax,
+                                      groups=groups)
         opt_state = state.opt_state
-        if cfg.reset_opt_state:
-            opt_state = opt.init(params)
+        # the jump teleports the jumped groups' weights; reset those
+        # groups' moments — unless the group opts out (sched.reset_opt)
+        reset = acc.reset_groups(groups)
+        if reset:
+            opt_state = reset_opt_state_after_jump(
+                opt, state.opt_state, params, plans, reset, acc.n_groups)
         new_state = TrainState(params, opt_state, state.step,
                                state.dmd_buffers, state.dmd_gram)
         return new_state, {"mean_rank": mean_rank}

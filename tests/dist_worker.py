@@ -8,10 +8,13 @@ Modes (argv[1]):
   elastic_save <dir>          train 2 steps on (2,2) mesh, checkpoint
   elastic_restore <dir>       restore on (4,) x model=2... different mesh,
                               run 1 more step, print checksum
-  gram_save <dir> keep|zero   train through one full DMD window on (2,2),
+  gram_save <dir> keep|zero|hetero
+                              train through full DMD window(s) on (2,2),
                               checkpoint (zero: strip dmd_gram — the
-                              pre-streaming format)
-  gram_restore <dir>          restore on the REMAPPED (4,2) mesh; check every
+                              pre-streaming format; hetero: TWO schedule
+                              groups with different m, saved at a step
+                              where both windows are complete)
+  gram_restore <dir> [hetero] restore on the REMAPPED (4,2) mesh; check every
                               running Gram == gram_matrix oracle; GRAMS_OK
   sharded_kernels             pallas_shard_map route vs dot_general oracle
                               across window wraps (fsdp/tp-sharded + stacked
@@ -39,14 +42,22 @@ from repro.train import Trainer
 from repro.train.state import TrainState
 
 
-def small_acfg():
+def small_acfg(hetero=False):
     acfg = get_config("tinyllama-1.1b")
     mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
                  n_heads=4, n_kv_heads=2, head_dim=8)
+    groups = ()
+    if hetero:
+        # Two schedule groups with DIFFERENT windows: norm scales (both the
+        # unstacked final_norm and the scan-stacked ln1/ln2) get m=3,
+        # everything else the default m=4. Both windows complete at step 13
+        # (default jumps at 5, 9, 13; norms at 4, 7, 10, 13).
+        from repro.core.schedule import DMDGroupRule
+        groups = (DMDGroupRule(name="norms", path_regex="norm|/ln", m=3),)
     return dataclasses.replace(
         acfg, model=mc,
         dmd=DMDConfig(enabled=True, m=4, s=8, tol=1e-4, warmup_steps=2,
-                      cooldown_steps=0),
+                      cooldown_steps=0, groups=groups),
         optimizer=OptimizerConfig(name="adam", lr=1e-3, schedule="constant"),
         parallel=dataclasses.replace(acfg.parallel, grad_accum=2,
                                      remat="none"),
@@ -66,14 +77,14 @@ def run_train(mesh_shape, axis_names, steps=6):
         trainer = Trainer(model, acfg, mesh=mesh)
         state = trainer.init_state()
         losses = []
-        from repro.train.step import make_train_step
         for step in range(steps):
             batch = batch_for_step(0, step, 8, 16, acfg.model.vocab_size)
-            slot = trainer.acc.slot(step)
             state, m = trainer.train_step(state, batch,
-                                          jnp.asarray(slot, jnp.int32))
-            if trainer.acc.should_apply(step):
-                state, _ = trainer.dmd_step(state, jnp.asarray(1.0))
+                                          jnp.asarray(step, jnp.int32))
+            groups = trainer.acc.apply_groups(step)
+            if groups:
+                relax = jnp.asarray(trainer.acc.relax_vector(step))
+                state, _ = trainer.dmd_step(state, relax, groups=groups)
             losses.append(float(m["loss"]))
         return losses, checksum(state.params)
 
@@ -295,40 +306,50 @@ def main():
         print("SAVED", checksum(state.params))
     elif mode == "gram_save":
         ckpt, variant = sys.argv[2], sys.argv[3]
-        acfg = small_acfg()                # m=4, warmup=2, cooldown=0
+        hetero = variant == "hetero"
+        acfg = small_acfg(hetero)          # m=4 (+ norms m=3), warmup=2
         mesh = jax.make_mesh((2, 2), ("data", "model"))
         model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
         with mesh_context(mesh):
             trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
             batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
                        for s in range(100))
-            # steps 0..5: records at slots 0..3, jump at step 5 — the window
-            # completes, so the streaming Gram equals the oracle exactly.
-            state = trainer.fit(batches, steps=6)
+            # single group: steps 0..5 record slots 0..3, jump at step 5 —
+            # the window completes, so the streaming Gram == oracle.
+            # hetero: run through step 13, where BOTH groups' windows
+            # complete (m=4 jumps at 5,9,13; m=3 at 4,7,10,13).
+            steps = 14 if hetero else 6
+            state = trainer.fit(batches, steps=steps)
             assert state.dmd_gram is not None
             if variant == "zero":
                 state = state._replace(dmd_gram=None)   # pre-streaming format
-            trainer.save(state, 6)
+            trainer.save(state, steps)
         print("SAVED", checksum(state.params))
     elif mode == "gram_restore":
         ckpt = sys.argv[2]
+        hetero = len(sys.argv) > 3 and sys.argv[3] == "hetero"
         from repro.core import dmd as dmd_mod
         from repro.core.leafplan import is_plan_leaf
-        acfg = small_acfg()
+        acfg = small_acfg(hetero)
         mesh = jax.make_mesh((4, 2), ("data", "model"))   # REMAPPED topology
         model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
         with mesh_context(mesh):
             trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
             state = trainer.restore()
-            assert state is not None and int(state.step) == 6
+            assert state is not None
+            assert int(state.step) == (14 if hetero else 6)
             plans = trainer.acc.plans_for(state.params)
             n_checked = 0
+            n_small = 0
 
             def chk(plan, buf, g):
-                nonlocal n_checked
+                nonlocal n_checked, n_small
                 if plan is None or buf is None:
                     return None
                 assert g is not None
+                # heterogeneous windows restore heterogeneous shapes
+                assert buf.shape[0] == plan.m and g.shape[-1] == plan.m
+                n_small += plan.m != acfg.dmd.m
                 oracle = dmd_mod.gram_matrix(buf, anchor=acfg.dmd.anchor,
                                              stack_dims=plan.stack_dims)
                 np.testing.assert_allclose(np.asarray(g), np.asarray(oracle),
@@ -338,6 +359,8 @@ def main():
             jax.tree_util.tree_map(chk, plans, state.dmd_buffers,
                                    state.dmd_gram, is_leaf=is_plan_leaf)
             assert n_checked > 0
+            if hetero:
+                assert n_small > 0          # the m=3 group really exists
         print("GRAMS_OK", n_checked)
     elif mode == "sharded_kernels":
         run_sharded_kernels()
@@ -352,7 +375,7 @@ def main():
             assert state is not None and int(state.step) == 2
             batch = batch_for_step(0, 2, 8, 16, acfg.model.vocab_size)
             state, m = trainer.train_step(state, batch,
-                                          jnp.asarray(-1, jnp.int32))
+                                          jnp.asarray(2, jnp.int32))
             assert np.isfinite(float(m["loss"]))
         print("RESTORED", checksum(state.params), f"{float(m['loss']):.6f}")
     else:

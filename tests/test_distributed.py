@@ -69,12 +69,15 @@ def test_elastic_restart_different_mesh(tmp_path):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("variant", ["keep", "zero"])
+@pytest.mark.parametrize("variant", ["keep", "zero", "hetero"])
 def test_gram_restore_on_remapped_mesh(tmp_path, variant):
-    """Both a streaming-era checkpoint (grams carried) and a zeroed-gram /
+    """A streaming-era checkpoint (grams carried), a zeroed-gram /
     pre-streaming checkpoint (grams rebuilt by recompute_grams' batched
-    staleness pass) resume to gram_matrix equality on a REMAPPED mesh."""
+    staleness pass), and a HETEROGENEOUS two-group checkpoint (norm scales
+    on m=3 windows, the rest on m=4) all resume to gram_matrix equality on
+    a REMAPPED mesh with per-group buffer/Gram shapes intact."""
     ckpt = str(tmp_path / f"ckpt_{variant}")
     run_worker("gram_save", ckpt, variant)
-    out = run_worker("gram_restore", ckpt)
+    out = (run_worker("gram_restore", ckpt, "hetero")
+           if variant == "hetero" else run_worker("gram_restore", ckpt))
     assert "GRAMS_OK" in out

@@ -139,6 +139,24 @@ def test_plan_table_renders_every_selected_leaf():
     assert len(table.splitlines()) == n_selected + 2   # header + rule
 
 
+def test_plans_for_cache_keyed_by_dtype():
+    """Regression (ISSUE 3 satellite): the plan cache used to hash only
+    structure+shape, so a bf16<->fp32 param cast silently reused a stale
+    table (wrong recorded dtypes / audit rows). The key now includes leaf
+    dtypes: a cast rebuilds the plans, identical metadata reuses them."""
+    cfg = DMDConfig(m=4)
+    acc = DMDAccelerator(cfg, stack_dims=SD)
+    params = small_params()
+    plans_f32 = acc.plans_for(params)
+    assert plans_f32["w"].dtype == "float32"
+    assert acc.plans_for(params) is plans_f32            # cache hit
+    cast = jax.tree_util.tree_map(lambda x: x.astype(jnp.bfloat16), params)
+    plans_bf16 = acc.plans_for(cast)
+    assert plans_bf16 is not plans_f32                   # dtype -> rebuild
+    assert plans_bf16["w"].dtype == "bfloat16"
+    assert acc.plans_for(cast) is plans_bf16
+
+
 def test_trace_time_plan_building():
     """build_plans reads only metadata, so it works on tracers inside jit —
     the train step builds the table at trace time."""

@@ -1,0 +1,254 @@
+"""Per-leaf scheduling (core/schedule.py): group resolution, schedule
+invariants over (warmup, cooldown, m, phase), legacy param_filter mapping,
+trace/host agreement, and bit-exactness with the pre-refactor closed form."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.configs.base import DMDConfig
+from repro.core import DMDAccelerator, leafplan
+from repro.core.schedule import (DMDGroupRule, GroupSchedule, group_for_leaf,
+                                 resolve_groups, rules_for_config,
+                                 slots_array, slots_for_step)
+
+
+def _sched(m=4, s=8, warmup=0, cooldown=0, phase=0, relax=1.0, anneal=1.0,
+           index=0, name="g"):
+    return GroupSchedule(index=index, name=name, m=m, s=s,
+                         warmup_steps=warmup, cooldown_steps=cooldown,
+                         phase=phase, relax=relax, anneal=anneal)
+
+
+# ---------------------------------------------------------------------------
+# schedule invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(warmup=st.integers(0, 17), cooldown=st.integers(0, 5),
+       m=st.integers(3, 12), phase=st.integers(0, 19))
+def test_slot_should_apply_round_invariants(warmup, cooldown, m, phase):
+    g = _sched(m=m, warmup=warmup, cooldown=cooldown, phase=phase)
+    cycle = m + cooldown
+    start = warmup + phase
+    applies, slots_seen = [], []
+    for step in range(start + 3 * cycle + 2):
+        s = g.slot(step)
+        if step < start:
+            assert s == -1                       # not started
+        else:
+            assert -cooldown <= s <= m - 1       # cooldown or window row
+        assert g.should_record(step) == (s >= 0)
+        assert g.should_apply(step) == (s == m - 1)
+        if g.should_apply(step):
+            applies.append(step)
+        if s >= 0:
+            slots_seen.append((step, s))
+    # first jump closes the first full window; spacing is exactly the cycle
+    assert applies[0] == start + cooldown + m - 1
+    assert all(b - a == cycle for a, b in zip(applies, applies[1:]))
+    # recorded slots run 0..m-1 consecutively within each window
+    for (t0, s0), (t1, s1) in zip(slots_seen, slots_seen[1:]):
+        if s1 != 0:
+            assert (s1 - s0, t1 - t0) == (1, 1)
+    # round_index is constant within a cycle and increments across it,
+    # and equals the number of completed jumps at each jump step
+    for i, t in enumerate(applies):
+        assert g.round_index(t) == i
+        assert g.round_index(t + cycle) == i + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(3, 10), anneal=st.floats(0.5, 1.0))
+def test_relax_anneal_per_round(m, anneal):
+    g = _sched(m=m, relax=0.8, anneal=anneal)
+    for r in range(4):
+        assert g.relax_for_round(r) == pytest.approx(0.8 * anneal ** r)
+    assert g.relax_for_round(-2) == pytest.approx(0.8)   # pre-start clamps
+
+
+def test_traced_slots_match_host():
+    groups = (_sched(m=5, warmup=3, cooldown=2, phase=0),
+              _sched(m=3, warmup=3, cooldown=0, phase=4, index=1, name="h"))
+    f = jax.jit(lambda t: slots_for_step(groups, t))
+    for step in range(40):
+        np.testing.assert_array_equal(np.asarray(f(jnp.int32(step))),
+                                      slots_array(groups, step))
+
+
+def test_default_group_bit_exact_with_legacy_formula():
+    """The pre-refactor scalar schedule, reimplemented verbatim: a config
+    with no group rules must reproduce it exactly (oracle for the
+    'default single-group configs bit-exact' acceptance)."""
+    def legacy_slot(cfg, step):
+        eff = step - cfg.warmup_steps
+        if eff < 0:
+            return -1
+        return (eff % (cfg.cooldown_steps + cfg.m)) - cfg.cooldown_steps
+
+    for cfg in (DMDConfig(), DMDConfig(m=6, s=10, warmup_steps=7,
+                                       cooldown_steps=3, relax=0.7,
+                                       anneal=0.9)):
+        acc = DMDAccelerator(cfg)
+        assert acc.n_groups == 1
+        for step in range(250):
+            s = legacy_slot(cfg, step)
+            assert acc.slot(step) == s
+            assert acc.slots(step).tolist() == [s]
+            assert acc.should_record(step) == (s >= 0)
+            assert acc.should_apply(step) == (s == cfg.m - 1)
+            assert acc.round_index(step) == \
+                (step - cfg.warmup_steps) // (cfg.cooldown_steps + cfg.m)
+            r = acc.round_index(step)
+            assert acc.relax_for_round(r) == pytest.approx(
+                cfg.relax * cfg.anneal ** max(r, 0))
+
+
+def test_issue_example_two_groups_never_jump_together():
+    """The acceptance-criteria config — matrices m=14 phase 0, norms/biases
+    m=6 phase 7 (cooldown 0): matrix jumps land on odd effective steps,
+    bias jumps on even ones, so the staggered schedule never pays two jump
+    spikes in one step."""
+    cfg = DMDConfig(m=14, s=55, warmup_steps=100, cooldown_steps=0,
+                    groups=(DMDGroupRule(name="small", max_ndim=1, m=6,
+                                         phase=7),))
+    acc = DMDAccelerator(cfg)
+    n_jumps = [0, 0]
+    for step in range(20000):
+        gs = acc.apply_groups(step)
+        assert len(gs) <= 1, (step, gs)
+        for g in gs:
+            n_jumps[g] += 1
+    assert n_jumps[0] > 0 and n_jumps[1] > 0
+
+
+def test_group_validation_errors():
+    with pytest.raises(ValueError, match="m >= 3"):
+        resolve_groups(DMDConfig(m=2))
+    with pytest.raises(ValueError, match="phase"):
+        resolve_groups(DMDConfig(groups=(DMDGroupRule(phase=-1),)))
+    with pytest.raises(ValueError, match="m >= 3"):
+        resolve_groups(DMDConfig(groups=(DMDGroupRule(m=1),)))
+
+
+# ---------------------------------------------------------------------------
+# rule resolution + legacy mapping
+# ---------------------------------------------------------------------------
+
+def test_param_filter_strings_map_to_rules():
+    """Satellite pin: the three legacy param_filter values become exclusion
+    rules (no string dispatch below the config layer)."""
+    assert rules_for_config(DMDConfig(param_filter="all")) == ()
+    assert rules_for_config(DMDConfig(param_filter="non_expert")) == (
+        DMDGroupRule(name="legacy_non_expert", path_regex="expert",
+                     exclude=True),)
+    assert rules_for_config(DMDConfig(param_filter="matrices_only")) == (
+        DMDGroupRule(name="legacy_matrices_only", max_ndim=1, exclude=True),)
+    assert rules_for_config(DMDConfig(min_param_size=10)) == (
+        DMDGroupRule(name="legacy_min_param_size", max_size=9, exclude=True),)
+    with pytest.raises(ValueError, match="param_filter"):
+        rules_for_config(DMDConfig(param_filter="nope"))
+    # legacy exclusions resolve BEFORE user group rules
+    cfg = DMDConfig(param_filter="non_expert",
+                    groups=(DMDGroupRule(name="experts", path_regex="expert",
+                                         m=6),))
+    assert group_for_leaf(cfg, "/moe/experts_in", 3, 4096) is None
+
+
+def test_legacy_filters_equal_explicit_rules():
+    params = {"experts_in": jnp.zeros((4, 8, 8)), "wq": jnp.zeros((8, 8)),
+              "scale": jnp.zeros((8,)), "tiny": jnp.zeros((3,))}
+
+    def selected(cfg):
+        plans = leafplan.build_plans(params, cfg)
+        return {k for k, v in plans.items() if v is not None}
+
+    assert selected(DMDConfig(param_filter="non_expert")) == \
+        selected(DMDConfig(groups=(DMDGroupRule(path_regex="expert",
+                                                exclude=True),)))
+    assert selected(DMDConfig(param_filter="matrices_only")) == \
+        selected(DMDConfig(groups=(DMDGroupRule(max_ndim=1, exclude=True),)))
+    assert selected(DMDConfig(min_param_size=4)) == \
+        {"experts_in", "wq", "scale"}
+
+
+def test_first_matching_rule_wins_and_default_falls_through():
+    cfg = DMDConfig(m=10, s=20, groups=(
+        DMDGroupRule(name="a", path_regex="/attn/", m=4),
+        DMDGroupRule(name="b", min_ndim=2, m=6, phase=2),
+        DMDGroupRule(name="drop", path_regex="skip_me", exclude=True),
+    ))
+    groups = resolve_groups(cfg)
+    assert [g.name for g in groups] == ["default", "a", "b"]
+    assert [g.m for g in groups] == [10, 4, 6]
+    assert groups[2].s == 20                     # inherits the global s
+    # /attn/ matches rule a even though rule b also matches
+    assert group_for_leaf(cfg, "/seg0/attn/wq", 3, 999) == 1
+    assert group_for_leaf(cfg, "/seg0/mlp/w_in", 3, 999) == 2
+    assert group_for_leaf(cfg, "/seg0/skip_me", 1, 999) is None
+    assert group_for_leaf(cfg, "/final_norm/scale", 1, 999) == 0
+    assert group_for_leaf(cfg, "/zero", 1, 0) is None    # empty leaf
+
+
+def test_plans_carry_group_and_heterogeneous_buffers():
+    from repro.core import snapshots as snap
+    cfg = DMDConfig(m=8, s=16, groups=(
+        DMDGroupRule(name="small", max_ndim=1, m=4, phase=3),))
+    params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,))}
+    acc = DMDAccelerator(cfg)
+    plans = acc.plans_for(params)
+    assert (plans["w"].group, plans["w"].m) == (0, 8)
+    assert (plans["b"].group, plans["b"].m) == (1, 4)
+    assert plans["b"].sched.phase == 3
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    assert bufs["w"].shape == (8, 16, 8) and bufs["b"].shape == (4, 8)
+    assert grams["w"].shape == (8, 8) and grams["b"].shape == (4, 4)
+    # plan_table shows the schedule columns
+    table = acc.plan_table()
+    assert "group" in table and "phase" in table
+    assert "small" in table and "default" in table
+
+
+def test_multi_group_record_requires_slot_vector():
+    cfg = DMDConfig(m=6, groups=(DMDGroupRule(max_ndim=1, m=4),))
+    acc = DMDAccelerator(cfg)
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    bufs = acc.init(params)
+    with pytest.raises(ValueError, match="slot"):
+        acc.record(bufs, params, 0)
+    bufs, _ = acc.record(bufs, params, acc.slots(cfg.warmup_steps))
+
+
+def test_staggered_streaming_grams_match_oracle_at_window_close():
+    """End-to-end through the accelerator: two groups with different m and
+    phases; at every group's window-complete step its streaming Gram equals
+    the gram_matrix oracle over ITS buffer."""
+    from repro.core import dmd as dmd_mod
+    rng = np.random.default_rng(0)
+    cfg = DMDConfig(m=5, s=9, tol=1e-4, warmup_steps=2, cooldown_steps=0,
+                    groups=(DMDGroupRule(name="vec", max_ndim=1, m=4,
+                                         phase=2),))
+    acc = DMDAccelerator(cfg)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 5)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    checked = 0
+    for t in range(40):
+        params = jax.tree_util.tree_map(
+            lambda p: p + 0.05 * jnp.asarray(rng.normal(size=p.shape),
+                                             jnp.float32), params)
+        if acc.should_record(t):
+            bufs, grams = acc.record(bufs, params, acc.slots(t), grams)
+        for g in acc.apply_groups(t):
+            key = "w" if g == 0 else "b"
+            oracle = dmd_mod.gram_matrix(bufs[key], anchor=cfg.anchor)
+            np.testing.assert_allclose(np.asarray(grams[key]),
+                                       np.asarray(oracle), rtol=1e-5,
+                                       atol=1e-5)
+            checked += 1
+    assert checked >= 4

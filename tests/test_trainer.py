@@ -14,7 +14,8 @@ from repro.models.transformer import LanguageModel
 from repro.train import Trainer
 
 
-def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0):
+def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0,
+                groups=()):
     acfg = get_config("tinyllama-1.1b")
     mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
                  n_heads=2, n_kv_heads=1, head_dim=16)
@@ -22,7 +23,7 @@ def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0):
         acfg,
         model=mc,
         dmd=DMDConfig(enabled=dmd, m=4, s=10, tol=1e-4, warmup_steps=4,
-                      cooldown_steps=2),
+                      cooldown_steps=2, groups=groups),
         optimizer=OptimizerConfig(name="adam", lr=3e-3, schedule="constant"),
         parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
                                      remat="none"),
@@ -87,6 +88,156 @@ def test_dmd_trainer_end_to_end_finite(tmp_path):
     state = trainer.fit(batches, steps=14)
     for leaf in jax.tree_util.tree_leaves(state.params):
         assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def _two_groups():
+    """Two schedule groups with different windows AND phases: norm scales
+    (incl. the scan-stacked ln1/ln2) on m=3/phase=1/no-cooldown windows,
+    the rest on the default m=4 + cooldown 2."""
+    from repro.core.schedule import DMDGroupRule
+    return (DMDGroupRule(name="norms", path_regex="norm|/ln", m=3, phase=1,
+                         cooldown_steps=0),)
+
+
+def test_two_group_trainer_staggers_jumps():
+    """The fused step + masked dmd_step drive a two-group schedule end to
+    end: both groups jump, never in lock-step with identical cadence, and
+    the params stay finite."""
+    trainer, batches = _tiny_setup(dmd=True, groups=_two_groups())
+    acc = trainer.acc
+    assert acc.n_groups == 2
+    # plan-table sanity: both groups own leaves, heterogeneous buffers
+    state = trainer.init_state()
+    plans = acc.plans_for(state.params)
+    from repro.core.leafplan import plan_entries
+    ms = {pl.m for pl in plan_entries(plans)}
+    assert ms == {3, 4}
+    jumped = {0: 0, 1: 0}
+    state = trainer.fit(batches, steps=26, state=state)
+    for step in range(26):
+        for g in acc.apply_groups(step):
+            jumped[g] += 1
+    assert jumped[0] > 0 and jumped[1] > 0
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_mixed_m_mid_window_resume_bitexact(tmp_path):
+    """Mid-window checkpoint resume with HETEROGENEOUS windows: a run
+    interrupted while both groups sit at different points of different-m
+    windows must resume bit-exactly (slots are re-derived from the restored
+    step index; buffers/grams restore at per-group shapes)."""
+    groups = _two_groups()
+    trainer_a, batches_a = _tiny_setup(dmd=True, groups=groups)
+    final_a = trainer_a.fit(batches_a, steps=18)
+
+    # checkpoint at step 7: default group (warmup 4, cooldown 2) is at
+    # slot 0 of its window; norms group (m=3, phase 1) mid-window too
+    trainer_b, batches_b = _tiny_setup(tmp_path, dmd=True, fail_at=12,
+                                       ckpt_every=7, groups=groups)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        trainer_b.fit(batches_b, steps=18)
+
+    trainer_c, _ = _tiny_setup(tmp_path, dmd=True, groups=groups)
+    from repro.checkpoint import latest_step
+    start = latest_step(tmp_path)
+    assert 0 < start < 18
+    batches_c = synthetic_lm_batches(0, 4, 16,
+                                     trainer_c.model.cfg.vocab_size,
+                                     start_step=start)
+    final_c = trainer_c.fit(batches_c, steps=18)
+    for a, c in zip(jax.tree_util.tree_leaves(final_a.params),
+                    jax.tree_util.tree_leaves(final_c.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    # the mixed-m DMD state round-tripped too
+    for a, c in zip(jax.tree_util.tree_leaves(final_a.dmd_buffers),
+                    jax.tree_util.tree_leaves(final_c.dmd_buffers)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_default_config_fused_path_matches_pre_refactor_oracle():
+    """Oracle for the schedule refactor (acceptance: 'default single-group
+    configs bit-exact with pre-refactor behavior'): the pre-refactor fused
+    step — one scalar dmd_slot argument, one lax.cond, scalar relax, full
+    opt reset — reimplemented verbatim here, driven by the legacy scalar
+    schedule, must produce the BIT-IDENTICAL trajectory to the new
+    step-index-driven Trainer path."""
+    from repro.core import snapshots as snap
+    from repro.core.accelerator import jump_tree
+    from repro.optim import apply_updates, make_optimizer
+    from repro.train.state import TrainState
+
+    trainer, batches = _tiny_setup(dmd=True)
+    acfg, model, acc = trainer.acfg, trainer.model, trainer.acc
+    cfg = acfg.dmd
+    steps = 16
+
+    state_f = trainer.fit(batches, steps=steps)
+
+    opt = make_optimizer(acfg.optimizer)
+
+    def old_train_step(state, batch, dmd_slot):
+        params = state.params
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch)[0])(params)
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        updates, opt_state = opt.update(grads, state.opt_state, params,
+                                        state.step)
+        params = apply_updates(params, updates)
+        buffers, grams = state.dmd_buffers, state.dmd_gram
+        plans = acc.plans_for(params)
+
+        def write(args):
+            bufs, g = args
+            slot = jnp.maximum(dmd_slot, 0)
+            bufs = snap.record(bufs, params, slot, plans)
+            g = snap.update_grams(g, bufs, params, slot, cfg, plans)
+            return bufs, g
+        buffers, grams = jax.lax.cond(dmd_slot >= 0, write, lambda a: a,
+                                      (buffers, grams))
+        new_state = TrainState(params, opt_state, state.step + 1, buffers,
+                               grams)
+        gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
+                             for g in jax.tree_util.tree_leaves(grads)))
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    def old_dmd_step(state, relax):
+        plans = acc.plans_for(state.params)
+        params, mean_rank = jump_tree(cfg, plans, state.params,
+                                      state.dmd_buffers, state.dmd_gram,
+                                      relax)
+        opt_state = opt.init(params) if cfg.reset_opt_state \
+            else state.opt_state
+        return TrainState(params, opt_state, state.step, state.dmd_buffers,
+                          state.dmd_gram), {"mean_rank": mean_rank}
+
+    old_train = jax.jit(old_train_step, donate_argnums=(0,))
+    old_jump = jax.jit(old_dmd_step, donate_argnums=(0,))
+
+    def legacy_slot(t):
+        eff = t - cfg.warmup_steps
+        if eff < 0:
+            return -1
+        return eff % (cfg.cooldown_steps + cfg.m) - cfg.cooldown_steps
+
+    state = trainer.init_state()
+    batches2 = synthetic_lm_batches(0, 4, 16, model.cfg.vocab_size)
+    for t in range(steps):
+        state, _ = old_train(state, next(batches2),
+                             jnp.asarray(legacy_slot(t), jnp.int32))
+        if legacy_slot(t) == cfg.m - 1:
+            round_idx = (t - cfg.warmup_steps) // (cfg.cooldown_steps + cfg.m)
+            relax = jnp.asarray(
+                cfg.relax * cfg.anneal ** max(round_idx, 0), jnp.float32)
+            state, _ = old_jump(state, relax)
+
+    for a, b in zip(jax.tree_util.tree_leaves(state_f.params),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(state_f.dmd_gram),
+                    jax.tree_util.tree_leaves(state.dmd_gram)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_restore_rebuilds_grams_from_pre_streaming_checkpoint(tmp_path):
