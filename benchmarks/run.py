@@ -79,9 +79,10 @@ def main():
     ap.add_argument("--out", default=".",
                     help="directory for the BENCH_<suite>.json files")
     args = ap.parse_args()
-    from benchmarks.paper_benches import (fig3_sensitivity, fig4_curves,
-                                          sec3_overhead, sharded_gram,
-                                          staggered_jump, streaming_gram)
+    from benchmarks.paper_benches import (controller, fig3_sensitivity,
+                                          fig4_curves, sec3_overhead,
+                                          sharded_gram, staggered_jump,
+                                          streaming_gram)
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
 
@@ -93,6 +94,9 @@ def main():
         ("staggered_jump", (lambda: staggered_jump(
             sizes=(6, 400, 400, 400), reps=5)) if args.quick
          else staggered_jump),
+        ("controller", (lambda: controller(
+            steps=300, sizes=(6, 40, 80, 200))) if args.quick
+         else controller),
         ("kernels", bench_kernels),
         ("fig3", (lambda: fig3_sensitivity(ms=(6, 14), ss=(10, 55),
                                            steps=300))

@@ -92,7 +92,14 @@ def latest_step(ckpt_dir) -> Optional[int]:
 def restore_checkpoint(ckpt_dir: str, template: PyTree, *, mesh=None,
                        step: Optional[int] = None) -> Optional[PyTree]:
     """Restore onto the CURRENT topology. template supplies the pytree
-    structure (and target shardings via its leaves or the mesh rules)."""
+    structure (and target shardings via its leaves or the mesh rules).
+
+    Leaves present in the template but absent from the manifest keep the
+    template's value — this is the forward-compat path for state grown
+    AFTER a checkpoint was written (e.g. the jump-controller arrays in
+    TrainState: a pre-controller checkpoint restores with a freshly
+    initialized ControllerState, while controller-era checkpoints restore
+    counters / s_eff / relax_eff bit-exactly)."""
     ckpt_dir = Path(ckpt_dir)
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:

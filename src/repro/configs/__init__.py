@@ -5,9 +5,9 @@ import importlib
 from typing import Dict, List
 
 from repro.configs.base import (
-    ArchConfig, DMDConfig, ModelConfig, MoEConfig, OptimizerConfig,
-    ParallelConfig, SSMConfig, ShapeConfig, TrainConfig, STANDARD_SHAPES,
-    reduced,
+    ArchConfig, DMDConfig, DMDControllerConfig, ModelConfig, MoEConfig,
+    OptimizerConfig, ParallelConfig, SSMConfig, ShapeConfig, TrainConfig,
+    STANDARD_SHAPES, reduced,
 )
 
 _ARCH_MODULES: Dict[str, str] = {

@@ -108,6 +108,38 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class DMDControllerConfig:
+    """Loss-gated adaptive jump controller (DESIGN.md §5).
+
+    The paper tunes the number of backprop steps per DMD estimation by hand;
+    the controller closes that loop: every jump is gated on a held-out
+    microbatch loss evaluated inside the jitted DMD step (accept / halve the
+    effective relax and re-blend / reject with bit-exact rollback), and the
+    per-group accept history adapts the effective horizon ``s_g`` and the
+    POD truncation. ``enabled=False`` (the default) is bit-exact with the
+    ungated schedule — no gate forward, no controller state in TrainState.
+    """
+    enabled: bool = False
+    eval_rows: int = 32             # held-out microbatch rows for the gate
+                                    # (0 = use the full eval batch)
+    accept_tol: float = 0.0         # accept iff loss_post <= loss_pre *
+                                    # (1 + accept_tol); small positive values
+                                    # tolerate noise-level regressions
+    grow: float = 1.5               # s_eff multiplier on consecutive full
+                                    # accepts (capped at the group's s)
+    shrink: float = 0.5             # s_eff multiplier on a rejected jump
+    s_min: float = 1.0              # lower bound for the adapted horizon
+    relax_floor: float = 0.125      # lower bound for the effective relax
+                                    # scale (halved on every scale-back)
+    gain_ema: float = 0.8           # EMA decay of the per-jump relative gain
+                                    # (loss_pre - loss_final) / loss_pre
+    energy: float = 0.995           # target cumulative-energy fraction for
+                                    # the POD rank (replaces the global tol
+                                    # noise floor while the controller is on;
+                                    # per-group override: DMDGroupRule.energy)
+
+
+@dataclass(frozen=True)
 class DMDConfig:
     enabled: bool = True
     m: int = 14                     # snapshots per DMD round (paper: 14)
@@ -163,6 +195,15 @@ class DMDConfig:
                                     # groups (at most one group's jump spike
                                     # per step instead of every leaf at once).
     anneal: float = 1.0             # multiplicative decay of `relax` per DMD round
+    controller: DMDControllerConfig = field(
+        default_factory=DMDControllerConfig)
+                                    # loss-gated adaptive jump controller
+                                    # (core/controller.py, DESIGN.md §5):
+                                    # accept / scale-back / reject-with-
+                                    # rollback gate on a held-out microbatch,
+                                    # auto-tuned per-group horizons, energy-
+                                    # based POD rank. Off by default (bit-
+                                    # exact with the ungated schedule).
     reset_opt_state: bool = True    # reset Adam moments after a DMD jump (the
                                     # jump teleports weights; stale moments
                                     # poison the next window's dynamics).

@@ -1,7 +1,7 @@
 """Zamba2-2.7B [arXiv:2411.15242]: 54 Mamba-2 layers d=2560 (d_inner=5120,
 H=80, P=64, N=64) + ONE shared attention+MLP block invoked every 6 layers
 (pure weight sharing; the per-invocation LoRA of the paper is simplified
-away — DESIGN.md §8). attn 32H MHA hd=80, d_ff=10240. Runs long_500k
+away — DESIGN.md §9). attn 32H MHA hd=80, d_ff=10240. Runs long_500k
 (SSM state is O(1); shared attn blocks use full KV, 9 invocations)."""
 from repro.configs.base import (ArchConfig, DMDConfig, ModelConfig,
                                 OptimizerConfig, ParallelConfig, SSMConfig)

@@ -3,12 +3,13 @@ from repro.core.dmd import (
     combine_snapshots, dmd_extrapolate, dmd_eigenvalues,
 )
 from repro.core.accelerator import DMDAccelerator
+from repro.core.controller import ControllerState
 from repro.core.leafplan import LeafPlan, build_plans, plan_table
-from repro.core import leafplan, snapshots
+from repro.core import controller, leafplan, snapshots
 
 __all__ = [
     "gram_matrix", "gram_row_matrix", "set_gram_row", "dmd_coefficients",
     "combine_snapshots", "dmd_extrapolate", "dmd_eigenvalues",
-    "DMDAccelerator", "LeafPlan", "build_plans", "plan_table", "leafplan",
-    "snapshots",
+    "DMDAccelerator", "ControllerState", "LeafPlan", "build_plans",
+    "plan_table", "controller", "leafplan", "snapshots",
 ]

@@ -39,15 +39,27 @@ and `plan_table()` renders the audited dispatch table with the schedule
 columns (group / m / phase):
 
     print(acc.plan_table(params))
-    # path            route            group    m   phase stack shape ...
-    # /seg0/attn/wqkv pallas_shard_map default  14  0     1     48x2048x2560
-    # /final_norm/... pallas_flat      norms    6   7     0     2560
+    # path            route            group    m   s  phase energy stack ...
+    # /seg0/attn/wqkv pallas_shard_map default  14  55 0     -      1
+    # /final_norm/... pallas_flat      norms    6   24 7     0.995  0
+
+(`s` is the group's configured horizon — the static cap the controller's
+adapted horizon lives under; `energy` shows the controller-mode
+cumulative-energy rank target, "-" while the tol mask rules.)
 
 Streaming Gram (DESIGN.md §2): with cfg.streaming_gram the (stack..., m, m)
 Gram is maintained incrementally — each record adds one O(m*n) row pass —
 so `apply` skips the O(m^2*n) gram_matrix recompute entirely and runs pure
 O(m^3) coefficient algebra plus one combine pass. gram_matrix remains the
 correctness oracle (and the cfg.streaming_gram=False A/B baseline).
+
+Jump controller (core/controller.py, DESIGN.md §5): with
+cfg.controller.enabled the Trainer's jitted DMD step gates every jump on a
+held-out microbatch loss (accept / halve-relax re-blend / bit-exact
+rollback) and carries per-group ControllerState in TrainState —
+`init_controller()` builds it, `controller_on` reports the mode. The
+host-side `apply` below stays UNGATED (benches and examples gate by hand);
+the gated path lives in train/step.py::make_dmd_step.
 """
 from __future__ import annotations
 
@@ -75,13 +87,16 @@ class LeafJump:
     rank: Any
 
 
-def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
+def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax,
+                  s_dyn=None):
     """One leaf of the DMD jump: coefficients from `gram` (the carried
     streaming Gram; recomputed from the buffer when None) + one combine
     pass, both kernel-routed by the leaf's plan. The extrapolation horizon
     `s` is the leaf's GROUP horizon (plan.sched.s) — mixed-window groups
-    jump different distances. Shared by DMDAccelerator.apply and
-    train.step.make_dmd_step."""
+    jump different distances; in controller mode `s_dyn` (a traced scalar,
+    the group's adapted horizon) replaces it, with plan.sched.s as the
+    static cap, and the group's energy target replaces the tol mask. Shared
+    by DMDAccelerator.apply and train.step.make_dmd_step."""
     from repro.kernels import ops, sharded
 
     nstack = plan.stack_dims
@@ -96,10 +111,12 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
             gram = dmd.gram_matrix(buf, anchor=cfg.anchor, stack_dims=nstack,
                                    upcast=cfg.gram_upcast)
     s = plan.sched.s if plan.sched is not None else cfg.s
+    energy = plan.sched.energy if plan.sched is not None else 0.0
     c, info = dmd.dmd_coefficients(
         gram, s=s, tol=cfg.tol, mode=cfg.mode,
         clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
-        affine=cfg.affine, trust_region=cfg.trust_region, relax=relax)
+        affine=cfg.affine, trust_region=cfg.trust_region, relax=relax,
+        energy=energy, s_dyn=s_dyn)
     if plan.route == "pallas_shard_map":
         w = sharded.combine(buf, c, plan)
     elif plan.route == "pallas_flat":
@@ -115,8 +132,8 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax):
 
 
 def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
-              grams: PyTree, relax, groups: Optional[Sequence[int]] = None
-              ) -> Tuple[PyTree, jnp.ndarray]:
+              grams: PyTree, relax, groups: Optional[Sequence[int]] = None,
+              s_vec=None) -> Tuple[PyTree, jnp.ndarray]:
     """Whole-pytree DMD jump keyed by the plan table: returns (new_params,
     mean_rank). Excluded leaves (plan None) pass through untouched.
 
@@ -125,7 +142,9 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
     whose window closed, so the other groups' leaves cost nothing (they are
     compile-time pass-throughs, not runtime selects). None jumps every
     group. `relax` is a scalar or a per-group (n_groups,) vector indexed by
-    ``plan.group`` (each group anneals on its own round counter)."""
+    ``plan.group`` (each group anneals on its own round counter). `s_vec`
+    (controller mode) is a traced per-group (n_groups,) int vector of
+    adapted horizons — None keeps each group's static configured s."""
     gset = None if groups is None else frozenset(int(g) for g in groups)
     per_group = getattr(relax, "ndim", 0) == 1
 
@@ -135,7 +154,8 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
         if gset is not None and plan.group not in gset:
             return p
         r = relax[plan.group] if per_group else relax
-        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, r)
+        sd = None if s_vec is None else s_vec[plan.group]
+        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, r, s_dyn=sd)
         return LeafJump(w, rank)
 
     out = jax.tree_util.tree_map(one, plans, params, buffers, grams,
@@ -181,6 +201,22 @@ class DMDAccelerator:
         recompute path.)"""
         return (self.cfg.enabled and self.cfg.streaming_gram
                 and self.cfg.anchor in ("none", "first"))
+
+    @property
+    def controller_on(self) -> bool:
+        """Loss-gated jump controller active? (core/controller.py,
+        DESIGN.md §5). Off = the ungated schedule, bit-exact legacy."""
+        ccfg = getattr(self.cfg, "controller", None)
+        return bool(self.cfg.enabled and ccfg is not None and ccfg.enabled)
+
+    def init_controller(self, abstract: bool = False):
+        """Fresh per-group ControllerState carried in TrainState (None when
+        the controller is off). `abstract=True` -> ShapeDtypeStruct leaves
+        (dry-run)."""
+        if not self.controller_on:
+            return None
+        from repro.core import controller as ctrl_mod
+        return ctrl_mod.init_state(self.groups, abstract=abstract)
 
     # ---- the per-leaf dispatch table --------------------------------------
     def plans_for(self, params: PyTree) -> PyTree:

@@ -1,0 +1,177 @@
+"""Loss-gated adaptive jump controller (DESIGN.md §5).
+
+The paper's headline speedup depends on hand-tuning how many backprop steps
+feed each DMD estimation and silently trusts every extrapolation; a bad jump
+poisons the next window with nothing to catch it. This module closes the
+loop, following two observations from the related work: weight trajectories
+concentrate in a small, *drifting* number of correlated modes (Turjeman et
+al. 2022), and feeding an objective signal back into the DMD fit improves
+extrapolation (Weiner & Semaan 2023).
+
+Mechanism (all of it inside the jitted DMD step — train/step.py):
+
+  * **Gate.** At a group's jump step, evaluate a held-out microbatch loss at
+    the pre-jump and jumped params. Three outcomes:
+      - ACCEPT  (loss_post <= loss_pre * (1 + accept_tol)): keep the jump.
+      - SCALED  : halve the effective relax and re-blend — the midpoint
+        (w_pre + w_jump) / 2 IS the halved-relax jump, because relax enters
+        the coefficients linearly; one extra forward decides it.
+      - REJECT  : bit-exact rollback — params and optimizer moments are the
+        donated pre-jump buffers passed straight through (the snapshot
+        buffers and Gram were never touched by the jump), and the group
+        re-enters its scheduled cooldown because the schedule is pure
+        step-index arithmetic.
+  * **Adaptation.** Per-group counters (accepts / rejects / scale-backs), a
+    consecutive-full-accept streak, and an EMA of the per-jump relative gain
+    drive two knobs: the effective horizon s_eff grows multiplicatively on
+    consecutive accepts and shrinks on rejects, clamped into
+    [s_min, configured s] (the static cap sizes the unrolled matrix-power
+    chain — core/schedule.py's dynamic-s round math); the effective relax
+    scale halves on every scale-back and recovers toward 1 on full accepts.
+  * **Rank.** While the controller is on, the POD truncation is
+    energy-based per group (GroupSchedule.energy -> dmd_coefficients'
+    cumulative-energy mask) instead of the global tol noise floor.
+
+ControllerState is a NamedTuple of tiny (n_groups,) arrays carried in
+TrainState — checkpointed, restored, and resharded like any other leaf, so
+preemption on the exact jump step resumes counters, s_eff, and the cooldown
+phase bit-exactly (tests/test_checkpoint.py, tests/dist_worker.py).
+
+Memory: the gate holds ONE extra params-sized buffer (the pre-jump params)
+alive across the jump step only; every other candidate (the half blend) is
+formed inside a cond branch and freed with it.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as sched_mod
+
+PyTree = Any
+
+# Gate outcomes (scalar int32 emitted by the jitted gate).
+REJECT, SCALED, ACCEPT = 0, 1, 2
+OUTCOME_NAMES = ("reject", "scaled", "accept")
+
+
+class ControllerState(NamedTuple):
+    """Per-group controller state, all (n_groups,) arrays."""
+    accepts: jnp.ndarray      # int32: jumps kept at full strength
+    scaled: jnp.ndarray       # int32: jumps kept after a relax halving
+    rejects: jnp.ndarray      # int32: jumps rolled back
+    streak: jnp.ndarray       # int32: consecutive FULL accepts
+    gain_ema: jnp.ndarray     # fp32: EMA of (loss_pre - loss_final)/loss_pre
+    s_eff: jnp.ndarray        # fp32: adapted horizon (<= configured s)
+    relax_eff: jnp.ndarray    # fp32: effective relax scale in (0, 1]
+
+
+def init_state(groups: Sequence[sched_mod.GroupSchedule],
+               abstract: bool = False) -> ControllerState:
+    """Fresh controller state: zero counters, s_eff at each group's
+    configured cap, relax scale 1. `abstract=True` returns ShapeDtypeStruct
+    leaves (the dry-run path allocates nothing)."""
+    import jax
+    n = len(groups)
+    if abstract:
+        i = jax.ShapeDtypeStruct((n,), jnp.int32)
+        f = jax.ShapeDtypeStruct((n,), jnp.float32)
+        return ControllerState(i, i, i, i, f, f, f)
+    # distinct arrays per field: donated TrainStates may not alias buffers
+    zi = lambda: jnp.zeros((n,), jnp.int32)
+    return ControllerState(
+        accepts=zi(), scaled=zi(), rejects=zi(), streak=zi(),
+        gain_ema=jnp.zeros((n,), jnp.float32),
+        s_eff=jnp.asarray(sched_mod.s_caps(groups)),
+        relax_eff=jnp.ones((n,), jnp.float32))
+
+
+def effective_s(state: ControllerState,
+                groups: Sequence[sched_mod.GroupSchedule],
+                ccfg) -> jnp.ndarray:
+    """Traced (n_groups,) integer horizons for this jump (schedule math in
+    core/schedule.py so host audits agree with the trace)."""
+    return sched_mod.effective_s_vector(groups, state.s_eff,
+                                        s_floor=ccfg.s_min)
+
+
+def gate_outcome(loss_pre, loss_candidate, accept_tol: float):
+    """The accept predicate: finite AND within (1 + accept_tol) of the
+    pre-jump held-out loss. Shared by the full-jump and half-blend conds."""
+    thresh = loss_pre * (1.0 + accept_tol)
+    return jnp.isfinite(loss_candidate) & (loss_candidate <= thresh)
+
+
+def update_on_jump(state: ControllerState, jumped: Tuple[int, ...],
+                   outcome, gain, ccfg,
+                   groups: Sequence[sched_mod.GroupSchedule]
+                   ) -> ControllerState:
+    """Fold one gate decision into the per-group state.
+
+    `jumped` is the STATIC tuple of group indices whose window closed this
+    step (staggered schedules: usually one; simultaneous closers share the
+    single gate decision — the gate evaluates the combined update).
+    `outcome` is the traced scalar {REJECT, SCALED, ACCEPT}; `gain` the
+    traced relative improvement of the final (kept) params on the eval
+    batch. Non-jumped groups pass through untouched.
+    """
+    n = len(groups)
+    gmask = np.zeros((n,), bool)
+    gmask[list(jumped)] = True
+    gmask = jnp.asarray(gmask)
+
+    full = outcome == ACCEPT
+    half = outcome == SCALED
+    rej = outcome == REJECT
+
+    accepts = state.accepts + (gmask & full).astype(jnp.int32)
+    scaled = state.scaled + (gmask & half).astype(jnp.int32)
+    rejects = state.rejects + (gmask & rej).astype(jnp.int32)
+    streak = jnp.where(gmask,
+                       jnp.where(full, state.streak + 1, 0), state.streak)
+
+    # the SAME [floor, cap] band the realized horizon is clamped into
+    # (schedule.s_bounds): persisted state and used horizon cannot drift
+    lo, caps = sched_mod.s_bounds(groups, s_floor=ccfg.s_min)
+    s_grown = jnp.minimum(state.s_eff * ccfg.grow, caps)
+    s_shrunk = jnp.maximum(state.s_eff * ccfg.shrink, lo)
+    # grow only on CONSECUTIVE accepts (streak >= 2 after this one), shrink
+    # on every reject; a scale-back leaves the horizon alone (the relax
+    # halving already tempers the next window's blend).
+    s_eff = jnp.where(gmask & rej, s_shrunk,
+                      jnp.where(gmask & full & (streak >= 2), s_grown,
+                                state.s_eff))
+
+    r_halved = jnp.maximum(state.relax_eff * 0.5, ccfg.relax_floor)
+    r_recovered = jnp.minimum(state.relax_eff * 2.0, 1.0)
+    relax_eff = jnp.where(gmask & half, r_halved,
+                          jnp.where(gmask & full, r_recovered,
+                                    state.relax_eff))
+
+    gain = jnp.asarray(gain, jnp.float32)
+    gain_ema = jnp.where(
+        gmask, ccfg.gain_ema * state.gain_ema + (1.0 - ccfg.gain_ema) * gain,
+        state.gain_ema)
+
+    return ControllerState(accepts, scaled, rejects, streak, gain_ema,
+                           s_eff, relax_eff)
+
+
+def summary(state: ControllerState,
+            groups: Sequence[sched_mod.GroupSchedule]) -> str:
+    """Host-side audit table (benches / logging)."""
+    rows = [("group", "accepts", "scaled", "rejects", "streak",
+             "gain_ema", "s_eff", "relax_eff")]
+    for g in groups:
+        i = g.index
+        rows.append((g.name, str(int(state.accepts[i])),
+                     str(int(state.scaled[i])), str(int(state.rejects[i])),
+                     str(int(state.streak[i])),
+                     f"{float(state.gain_ema[i]):.4f}",
+                     f"{float(state.s_eff[i]):.1f}",
+                     f"{float(state.relax_eff[i]):.3f}"))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    return "\n".join("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+                     for r in rows)

@@ -141,13 +141,33 @@ def set_gram_row(gram: jnp.ndarray, row: jnp.ndarray, slot) -> jnp.ndarray:
     return jnp.where(onehot[None, :], row[..., :, None], gram)
 
 
-def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float):
+def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float, energy: float = 0.0):
     """eigvals of G- (ascending; batched over leading dims) ->
-    sigma, 1/sigma, mask."""
+    sigma, 1/sigma, mask.
+
+    Two truncation policies (static choice):
+      * ``energy == 0`` (legacy / paper): keep sigma_r / sigma_0 > tol — a
+        global noise-floor constant.
+      * ``energy > 0`` (controller mode): keep the smallest leading set of
+        modes whose cumulative eigenvalue energy reaches the ``energy``
+        fraction of the total — the effective rank tracks the trajectory's
+        own spectrum instead of a fixed constant (per-group target resolved
+        in core/schedule.py). A small sigma floor (1e-6 * sigma_max) still
+        guards the fp32 Gram noise tail.
+    """
     lam = jnp.maximum(eigvals, 0.0)
     sigma = jnp.sqrt(lam)
     smax = jnp.max(sigma, axis=-1, keepdims=True)
-    mask = sigma > tol * jnp.maximum(smax, 1e-30)
+    if energy and energy > 0:
+        lam_desc = lam[..., ::-1]                 # descending energies
+        cum = jnp.cumsum(lam_desc, axis=-1)
+        total = cum[..., -1:]
+        # keep mode k while the energy captured BEFORE it is still short of
+        # the target (always keeps the top mode)
+        keep = (cum - lam_desc) < energy * jnp.maximum(total, 1e-30)
+        mask = keep[..., ::-1] & (sigma > 1e-6 * jnp.maximum(smax, 1e-30))
+    else:
+        mask = sigma > tol * jnp.maximum(smax, 1e-30)
     inv = jnp.where(mask, 1.0 / jnp.where(mask, sigma, 1.0), 0.0)
     return sigma, inv, mask
 
@@ -168,40 +188,131 @@ def _matrix_power(a: jnp.ndarray, s: int) -> jnp.ndarray:
     return result
 
 
+def _matrix_power_traced(a: jnp.ndarray, s, s_max: int) -> jnp.ndarray:
+    """a^s for a TRACED integer s in [1, s_max]: masked binary
+    exponentiation with a static bit bound (controller mode — the adapted
+    horizon is a carried device scalar, but the unroll length stays static
+    at ceil(log2(s_max))). For s >= 1 at least one factor of ``a`` enters
+    the product, so masked (zero) rows/cols stay zero exactly as in the
+    static path."""
+    eye = jnp.broadcast_to(jnp.eye(a.shape[-1], dtype=a.dtype), a.shape)
+    s = jnp.asarray(s, jnp.int32)
+    result, base = eye, a
+    nbits = max(int(s_max).bit_length(), 1)
+    for bit in range(nbits):
+        take = ((s >> bit) & 1).astype(bool)
+        result = jnp.where(take, result @ base, result)
+        if bit + 1 < nbits:
+            base = base @ base
+    return result
+
+
 def _host_eig(a: np.ndarray):
     w, v = np.linalg.eig(a)              # batched over leading dims
-    return w.astype(np.complex64), v.astype(np.complex64)
+    # rcond of the eigenvector matrix: ~0 for defective (Jordan) operators,
+    # where Y Lambda^s Y^-1 reconstruction is meaningless garbage.
+    sv = np.linalg.svd(v, compute_uv=False)
+    rcond = (sv[..., -1] / np.maximum(sv[..., 0], 1e-300)).astype(np.float32)
+    return w.astype(np.complex64), v.astype(np.complex64), rcond
 
 
-def _eig_power(atilde: jnp.ndarray, s: int, clamp_eigs: bool) -> jnp.ndarray:
+def _eig_power(atilde: jnp.ndarray, s, clamp_eigs: bool,
+               s_max=None) -> jnp.ndarray:
     """Atilde^s via eigendecomposition (host callback), optional |lambda|
-    clamp. Batched over leading dims (np.linalg.eig batches natively)."""
+    clamp. Batched over leading dims (np.linalg.eig batches natively).
+
+    Defective guard (regression: ISSUE 4 satellite): weight drifts produce
+    Jordan-block operators (eigenvalue 1, multiplicity 2) whose eigenvector
+    matrix is (numerically) singular — eig perturbs the double eigenvalue
+    into a split pair with nearly parallel eigenvectors, and the
+    reconstruction returns FINITE but wrong powers (measured ~one full
+    drift step of error at s=5; worse with s), which no non-finite check
+    can catch. The guard is self-validating: reconstruct the UNCLAMPED
+    power through the eigenbasis and compare it against the exact matpow
+    evolution of the same operator — if the eigendecomposition cannot
+    reproduce the power it claims (relative error above a fp32-noise
+    threshold, or rcond(Y) ~ 0, or non-finite), fall back to matpow. The
+    fallback cannot honor ``clamp_eigs`` (a defective operator has no
+    eigenbasis to clamp in); for the drift case the paper cares about,
+    |lambda| = 1, so the clamp is a no-op there anyway — eig+clamp agrees
+    with matpow (pinned in tests/test_dmd.py).
+
+    ``s`` may be a traced scalar (controller mode) — then ``s_max`` bounds
+    the matpow fallback's unroll and lambda^s goes through exp/log.
+    """
     shape = atilde.shape
-    eigvals, eigvecs = jax.pure_callback(
+    eigvals, eigvecs, rcond = jax.pure_callback(
         _host_eig,
         (jax.ShapeDtypeStruct(shape[:-1], jnp.complex64),
-         jax.ShapeDtypeStruct(shape, jnp.complex64)),
+         jax.ShapeDtypeStruct(shape, jnp.complex64),
+         jax.ShapeDtypeStruct(shape[:-2], jnp.float32)),
         atilde, vmap_method="sequential")
     if clamp_eigs:
+        # Clamp only |lambda| MEANINGFULLY above 1. A defective lambda = 1
+        # pair splits under fp32 eigendecomposition noise into 1 +- delta
+        # (delta ~ 1e-4) with huge OPPOSING mode amplitudes ~ 1/delta;
+        # clamping just the upper one breaks their cancellation and injects
+        # an O(1) error while the unclamped reconstruction is fine. Modes
+        # within the 1e-3 band grow at most ~6% over the paper's s = 55 —
+        # noise the trust region already owns — so the clamp targets real
+        # spurious-growth modes only.
         mag = jnp.abs(eigvals)
-        eigvals = jnp.where(mag > 1.0, eigvals / jnp.maximum(mag, 1e-30), eigvals)
-    lam_s = eigvals ** s
-    # Y Lambda^s Y^-1 ; solve instead of invert for stability.
-    m_complex = eigvecs * lam_s[..., None, :]
-    yt = jnp.swapaxes(eigvecs, -1, -2)
-    m_full = jnp.swapaxes(jax.numpy.linalg.solve(
-        yt, jnp.swapaxes(m_complex, -1, -2)), -1, -2)
-    return jnp.real(m_full)
+        lam_clamped = jnp.where(mag > 1.0 + 1e-3,
+                                eigvals / jnp.maximum(mag, 1e-30), eigvals)
+    else:
+        lam_clamped = eigvals
+
+    if isinstance(s, (int, np.integer)):
+        fallback = _matrix_power(atilde, int(s))
+    else:
+        fallback = _matrix_power_traced(atilde, s, int(s_max))
+
+    def reconstruct(lam):
+        # lambda^s with a zero-eigenvalue guard: with a traced s the power
+        # lowers to exp(s*log(lambda)) and log(0) would poison the whole
+        # reconstruction; masked modes are exactly zero either way.
+        mag0 = jnp.abs(lam)
+        lam_safe = jnp.where(mag0 > 0, lam, 1.0)
+        if isinstance(s, (int, np.integer)):
+            lam_s = jnp.where(mag0 > 0, lam_safe ** int(s), 0.0)
+        else:
+            lam_s = jnp.where(
+                mag0 > 0,
+                lam_safe ** jnp.asarray(s, jnp.float32).astype(jnp.complex64),
+                0.0)
+        # Y Lambda^s Y^-1 ; solve instead of invert for stability.
+        m_complex = eigvecs * lam_s[..., None, :]
+        yt = jnp.swapaxes(eigvecs, -1, -2)
+        return jnp.real(jnp.swapaxes(jax.numpy.linalg.solve(
+            yt, jnp.swapaxes(m_complex, -1, -2)), -1, -2))
+
+    m_full = reconstruct(lam_clamped)
+    m_check = m_full if not clamp_eigs else reconstruct(eigvals)
+    norm = lambda x: jnp.sqrt(jnp.sum(jnp.square(x), axis=(-2, -1)))
+    rel_err = norm(m_check - fallback) / jnp.maximum(norm(fallback), 1e-30)
+    eig_finite = jnp.all(jnp.isfinite(m_full), axis=(-2, -1))
+    fb_finite = jnp.all(jnp.isfinite(fallback), axis=(-2, -1))
+    # Use the eig reconstruction when it validates against matpow — OR when
+    # the matpow fallback itself is unusable: a genuinely explosive
+    # operator (|lambda|^s past fp32 range, the very regime clamp_eigs
+    # exists for) overflows the unclamped power, which would otherwise
+    # poison rel_err and evict the perfectly finite CLAMPED result.
+    validated = (rel_err < 1e-2) & (rcond > 1e-7)
+    use_eig = eig_finite & (validated | ~fb_finite)
+    return jnp.where(use_eig[..., None, None], m_full, fallback)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "tol", "mode", "clamp_eigs",
                                              "keep_residual", "anchor",
-                                             "affine", "trust_region"))
+                                             "affine", "trust_region",
+                                             "energy", "s_max"))
 def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
                      mode: str = "matpow", clamp_eigs: bool = False,
                      keep_residual: bool = False, anchor: str = "none",
                      affine: bool = False, trust_region: float = 0.0,
-                     relax: jnp.ndarray | float = 1.0) -> Tuple[jnp.ndarray, dict]:
+                     relax: jnp.ndarray | float = 1.0,
+                     energy: float = 0.0, s_max: int = None,
+                     s_dyn=None) -> Tuple[jnp.ndarray, dict]:
     """Coefficient vector c (m,) such that w_extrapolated = S^T c.
 
     Args:
@@ -209,6 +320,8 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
          GSPMD), where D = gram_matrix(S, anchor=anchor)'s anchored data.
       s: extrapolation horizon (paper's ``s``): the returned combination
          estimates the weights ``s`` optimizer steps past the last snapshot.
+         Always static — with a dynamic horizon (below) it is the CAP that
+         sizes the unrolled power chain.
       tol: singular-value filter threshold (paper's "DMD filter tolerance").
       mode: "matpow" | "eig".
       keep_residual: also carry the component of w_last orthogonal to the POD
@@ -222,10 +335,17 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
          0 disables (paper-faithful).
       relax: blend factor, w <- (1-relax) w_last + relax w_dmd. Traced scalar
          so annealing does not trigger recompiles.
+      energy: if > 0, replace the tol mask with the cumulative-energy rank
+         rule (controller mode — see _masked_inv_sigma). Static.
+      s_max: static bound for a traced ``s_dyn`` (defaults to ``s``).
+      s_dyn: optional TRACED integer horizon in [1, s_max] (the controller's
+         adapted per-group s). None (default) uses the static ``s`` — the
+         bit-exact legacy path.
 
     Returns:
       c: (m,) fp32 coefficients over snapshot rows.
-      info: diagnostics dict (rank, sigma_ratio, jump_scale).
+      info: diagnostics dict (rank, sigma_ratio, jump_scale, jump_norm,
+      step_rms — the last two feed the controller's gate telemetry).
     """
     m = gram.shape[-1]
     if m < 3:
@@ -248,17 +368,24 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
     g_last = gram[..., :-1, -1]                  # X^T d_last
 
     eigvals, v = jnp.linalg.eigh(g_lag)          # ascending; batched
-    sigma, inv_sigma, mask = _masked_inv_sigma(eigvals, tol)
+    sigma, inv_sigma, mask = _masked_inv_sigma(eigvals, tol, energy)
     vt = jnp.swapaxes(v, -1, -2)
 
     # Reduced Koopman, masked dims are zero rows/cols.
     vt_c_v = vt @ g_cross @ v
     atilde = (inv_sigma[..., :, None] * vt_c_v) * inv_sigma[..., None, :]
 
+    cap = int(s if s_max is None else s_max)
+    s_val = s if s_dyn is None else jnp.clip(
+        jnp.asarray(s_dyn, jnp.int32), 1, cap)
     if mode == "matpow":
-        atilde_s = _matrix_power(atilde, int(s))
+        if s_dyn is None:
+            atilde_s = _matrix_power(atilde, int(s))
+        else:
+            atilde_s = _matrix_power_traced(atilde, s_val, cap)
     elif mode == "eig":
-        atilde_s = _eig_power(atilde, int(s), clamp_eigs)
+        atilde_s = _eig_power(atilde, int(s) if s_dyn is None else s_val,
+                              clamp_eigs, s_max=cap)
         atilde_s = jnp.where(mask[..., :, None] & mask[..., None, :],
                              atilde_s, 0.0)
     else:
@@ -284,19 +411,28 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
     e_last = jnp.zeros((m,), jnp.float32).at[-1].set(1.0)
     e_last = jnp.broadcast_to(e_last, c.shape)
 
+    # Jump-gain diagnostics, computed for every call (O(m^2) algebra):
+    # ||w_new - w_last||^2 = (c-e)^T G (c-e) — translation-invariant, so the
+    # RAW (unaugmented) anchored Gram is the right form; rms_step from the
+    # super-diagonal. The trust region reuses both; the controller's gate
+    # telemetry reads them from `info` even when the trust region is off.
+    d = c - e_last
+    jump2 = jnp.maximum(
+        jnp.einsum("...i,...ij,...j->...", d, raw_gram, d), 0.0)
+    diag = jnp.diagonal(raw_gram, axis1=-2, axis2=-1)
+    sup = jnp.diagonal(raw_gram, 1, -2, -1)
+    step2 = jnp.mean(diag[..., 1:] + diag[..., :-1] - 2.0 * sup, axis=-1)
+
     jump_scale = jnp.ones(batch_shape, jnp.float32)
     if trust_region and trust_region > 0:
-        # ||w_new - w_last||^2 = (c-e)^T G (c-e); translation-invariant.
-        # Uses the RAW (unaugmented) Gram: the constant coordinate is not a
-        # real parameter. Consecutive-step distances are unaffected by the
+        # Uses the RAW Gram: the constant coordinate is not a real
+        # parameter. Consecutive-step distances are unaffected by the
         # rank-one augmentation anyway ((e_{t+1}-e_t)^T 1 1^T (e_{t+1}-e_t)=0).
-        d = c - e_last
-        jump2 = jnp.maximum(
-            jnp.einsum("...i,...ij,...j->...", d, raw_gram, d), 0.0)
-        diag = jnp.diagonal(raw_gram, axis1=-2, axis2=-1)
-        sup = jnp.diagonal(raw_gram, 1, -2, -1)
-        step2 = jnp.mean(diag[..., 1:] + diag[..., :-1] - 2.0 * sup, axis=-1)
-        radius2 = (trust_region * s) ** 2 * jnp.maximum(step2, 0.0)
+        if s_dyn is None:       # static horizon: python-float radius, the
+            radius2 = (trust_region * s) ** 2 * jnp.maximum(step2, 0.0)
+        else:                   # bit-exact legacy expression
+            radius2 = (trust_region * s_val.astype(jnp.float32)) ** 2 \
+                * jnp.maximum(step2, 0.0)
         jump_scale = jnp.minimum(1.0, jnp.sqrt(
             radius2 / jnp.maximum(jump2, 1e-30)))
         # The guard must survive non-finite inputs anywhere in the chain: a
@@ -335,6 +471,13 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
         "sigma_ratio": jnp.min(jnp.where(mask, sigma, jnp.inf), axis=-1)
                        / jnp.maximum(jnp.max(sigma, axis=-1), 1e-30),
         "jump_scale": jump_scale,
+        # Gate telemetry (controller / benches): the realized jump length is
+        # relax * jump_scale * ||D^T (c_raw - e_last)||, and rms_step sets
+        # its natural scale. Both survive non-finite inputs as 0 / 0.
+        "jump_norm": jnp.abs(jnp.asarray(relax, jnp.float32)) * jump_scale
+                     * jnp.sqrt(jnp.where(jnp.isfinite(jump2), jump2, 0.0)),
+        "step_rms": jnp.sqrt(jnp.maximum(
+            jnp.where(jnp.isfinite(step2), step2, 0.0), 0.0)),
     }
     return c, info
 

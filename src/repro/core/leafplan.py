@@ -266,14 +266,20 @@ def plan_summary(plans: PyTree) -> Dict[str, Tuple[str, int]]:
 
 def plan_table(plans: PyTree) -> str:
     """Human-readable audit dump of the whole dispatch table (kernel route
-    + schedule group / window / phase per selected leaf)."""
-    rows = [("path", "route", "group", "m", "phase", "stack", "shape",
-             "flat_n", "block_n", "spec", "psum")]
+    + schedule group / window / horizon / phase per selected leaf; the
+    `energy` column is the group's controller-mode cumulative-energy rank
+    target — "-" while the controller is off, i.e. the tol mask rules)."""
+    rows = [("path", "route", "group", "m", "s", "phase", "energy", "stack",
+             "shape", "flat_n", "block_n", "spec", "psum")]
     for p in plan_entries(plans):
+        sched = p.sched
         rows.append((p.path, p.route,
-                     p.sched.name if p.sched is not None else str(p.group),
-                     str(p.m if p.sched is not None else "?"),
-                     str(p.sched.phase if p.sched is not None else "?"),
+                     sched.name if sched is not None else str(p.group),
+                     str(p.m if sched is not None else "?"),
+                     str(sched.s if sched is not None else "?"),
+                     str(sched.phase if sched is not None else "?"),
+                     (f"{sched.energy:.3f}"
+                      if sched is not None and sched.energy > 0 else "-"),
                      str(p.stack_dims),
                      "x".join(map(str, p.shape)), str(p.flat_size),
                      str(p.block_n), str(p.param_spec),

@@ -88,6 +88,10 @@ class DMDGroupRule:
     relax: Optional[float] = None
     anneal: Optional[float] = None
     reset_opt: Optional[bool] = None
+    energy: Optional[float] = None      # controller mode only: this group's
+                                        # cumulative-energy rank target
+                                        # (inherits cfg.controller.energy;
+                                        # ignored while the controller is off)
 
     def matches(self, path: str, ndim: int, size: int) -> bool:
         if self.path_regex and not re.search(self.path_regex, path):
@@ -117,6 +121,10 @@ class GroupSchedule:
     relax: float
     anneal: float
     reset_opt: bool = True
+    energy: float = 0.0         # > 0 only in controller mode: POD rank from
+                                # cumulative-energy fraction instead of the
+                                # global tol (core/dmd.py). 0.0 keeps the
+                                # tol mask — bit-exact legacy behavior.
 
     @property
     def cycle(self) -> int:
@@ -177,19 +185,31 @@ def _validate(g: GroupSchedule) -> GroupSchedule:
             raise ValueError(f"group {g.name!r}: {field} must be >= 0")
     if g.s < 1:
         raise ValueError(f"group {g.name!r}: s must be >= 1 (got {g.s})")
+    if not 0.0 <= g.energy <= 1.0:
+        raise ValueError(
+            f"group {g.name!r}: energy must be in [0, 1] (got {g.energy})")
     return g
 
 
 def resolve_groups(cfg) -> Tuple[GroupSchedule, ...]:
     """Config -> the resolved group table. Group 0 is ALWAYS the default
     group (the DMDConfig globals, phase 0); groups 1..K are the non-exclude
-    rules in rule order, each inheriting unset fields from the globals."""
+    rules in rule order, each inheriting unset fields from the globals.
+
+    The energy-rank target resolves to 0.0 (tol mask — legacy) unless the
+    jump controller is enabled, in which case each group inherits
+    ``cfg.controller.energy`` overridable per rule — the "tol becomes a
+    per-group cumulative-energy fraction" switch (DESIGN.md §5).
+    """
     reset_default = bool(getattr(cfg, "reset_opt_state", True))
+    ccfg = getattr(cfg, "controller", None)
+    ctrl_on = ccfg is not None and ccfg.enabled
+    energy_default = float(ccfg.energy) if ctrl_on else 0.0
     groups = [_validate(GroupSchedule(
         index=0, name="default", m=cfg.m, s=cfg.s,
         warmup_steps=cfg.warmup_steps, cooldown_steps=cfg.cooldown_steps,
         phase=0, relax=cfg.relax, anneal=cfg.anneal,
-        reset_opt=reset_default))]
+        reset_opt=reset_default, energy=energy_default))]
     for rule in rules_for_config(cfg):
         if rule.exclude:
             continue
@@ -203,7 +223,9 @@ def resolve_groups(cfg) -> Tuple[GroupSchedule, ...]:
             phase=rule.phase,
             relax=pick(rule.relax, cfg.relax),
             anneal=pick(rule.anneal, cfg.anneal),
-            reset_opt=pick(rule.reset_opt, reset_default))))
+            reset_opt=pick(rule.reset_opt, reset_default),
+            energy=(pick(rule.energy, energy_default)
+                    if ctrl_on else 0.0))))
     return tuple(groups)
 
 
@@ -242,3 +264,50 @@ def slots_for_step(groups: Sequence[GroupSchedule], step) -> jnp.ndarray:
 def slots_array(groups: Sequence[GroupSchedule], step: int) -> np.ndarray:
     """Host-side per-group slot vector (concrete ints)."""
     return np.asarray([g.slot(step) for g in groups], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-horizon round math (controller mode — core/controller.py)
+# ---------------------------------------------------------------------------
+# The configured ``s`` stays the STATIC per-group cap (it sizes the unrolled
+# matrix-power chain and the trust radius at compile time); the controller's
+# adapted horizon is a TRACED value clamped into [s_floor, s]. Keeping the
+# clamp math here, next to the rest of the schedule arithmetic, means the
+# host-side audit (`effective_s_array`) and the in-trace variant
+# (`effective_s_vector`) can never drift apart.
+
+def s_caps(groups: Sequence[GroupSchedule]) -> np.ndarray:
+    """(n_groups,) static horizon caps — each group's configured ``s``."""
+    return np.asarray([g.s for g in groups], np.float32)
+
+
+def s_bounds(groups: Sequence[GroupSchedule], s_floor: float = 1.0
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(lo, caps) fp32 bounds of the adapted horizon per group — THE one
+    definition of the [floor, configured-s] band. Both the controller's
+    grow/shrink update (core/controller.py) and the realized-horizon
+    rounding below consume it, so the persisted state and the horizon the
+    jump actually uses can never live under different rules."""
+    caps = jnp.asarray(s_caps(groups))
+    lo = jnp.minimum(jnp.float32(max(s_floor, 1.0)), caps)
+    return lo, caps
+
+
+def effective_s_vector(groups: Sequence[GroupSchedule], s_eff,
+                       s_floor: float = 1.0) -> jnp.ndarray:
+    """Traced (n_groups,) integer horizons from the controller's fp32
+    ``s_eff`` state: rounded, then clamped into [s_floor, s_g]. Entry g is
+    what ``dmd_coefficients`` receives as its dynamic ``s_dyn`` (with the
+    group's configured s as the static ``s_max``)."""
+    lo, caps = s_bounds(groups, s_floor)
+    return jnp.clip(jnp.round(jnp.asarray(s_eff, jnp.float32)), lo,
+                    caps).astype(jnp.int32)
+
+
+def effective_s_array(groups: Sequence[GroupSchedule], s_eff,
+                      s_floor: float = 1.0) -> np.ndarray:
+    """Host-side counterpart of ``effective_s_vector`` (concrete ints)."""
+    caps = s_caps(groups)
+    lo = np.minimum(np.float32(max(s_floor, 1.0)), caps)
+    return np.clip(np.round(np.asarray(s_eff, np.float32)), lo,
+                   caps).astype(np.int32)

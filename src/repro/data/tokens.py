@@ -2,7 +2,7 @@
 
 Batches are a pure function of (seed, step): a restarted/elastically-resized
 worker replays the identical stream — the fault-tolerance contract the
-trainer relies on (DESIGN.md §5). Tokens follow a Zipf-ish distribution so
+trainer relies on (DESIGN.md §6). Tokens follow a Zipf-ish distribution so
 losses behave like text rather than uniform noise.
 """
 from __future__ import annotations

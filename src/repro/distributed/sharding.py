@@ -1,7 +1,7 @@
 """Logical-axis sharding rules: param-path regex -> PartitionSpec.
 
 The mesh has physical axes ("pod", "data", "model") (pod optional). Logical
-mapping (see DESIGN.md §5):
+mapping (see DESIGN.md §6):
   * batch            -> ("pod", "data")      activations
   * tensor-parallel  -> "model"              heads / ffn hidden / vocab / experts
   * fsdp             -> "data"               the non-TP dim of every >=2D param

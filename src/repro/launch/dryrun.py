@@ -97,8 +97,12 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
                              stack_dims=model.param_stack_dims())
         bufs = acc.init(params)    # abstract-aware: ShapeDtypeStruct leaves
         grams = acc.init_grams(bufs)
+        # controller state (None unless dmd.controller.enabled): tiny
+        # (n_groups,) leaves, abstract like everything else here
+        ctrl = acc.init_controller(abstract=True)
         state = TrainState(params, opt_state,
-                           jax.ShapeDtypeStruct((), jnp.int32), bufs, grams)
+                           jax.ShapeDtypeStruct((), jnp.int32), bufs, grams,
+                           ctrl)
         st_specs = inputs_mod.state_specs(state, mesh,
                                           plans=acc.plans_for(params))
         step = make_train_step(model, acfg, mesh=mesh,

@@ -122,7 +122,7 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
 
     When the accelerator's LeafPlan pytree is given, DMD buffer and Gram
     specs come from the plan table (plan.snapshot_spec / plan.gram_spec — the
-    single audited source, DESIGN.md §3/§5) instead of being re-derived from
+    single audited source, DESIGN.md §3/§6) instead of being re-derived from
     the path rules. Both derivations agree; the plan is authoritative.
     Specs are shape-agnostic, so heterogeneous per-group windows (a mixed-m
     schedule sizes each leaf's buffer (m_leaf, ...) — DESIGN.md §4) need no

@@ -4,7 +4,7 @@ One blockwise (online-softmax, kv-chunked) core serves train, prefill and
 decode. It is sharding-agnostic jnp: callers set sharding via constraints.
 
 Two distribution layouts (selected per arch by head divisibility; see
-DESIGN.md §5):
+DESIGN.md §6):
   * head-TP:    q/k/v sharded on the head dim over "model". Zero attention
                 collectives. Requires n_heads % tp == 0 (and kv likewise, or
                 kv replicated when n_kv < tp).

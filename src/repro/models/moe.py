@@ -1,6 +1,6 @@
 """Mixture-of-Experts with expert parallelism over the "model" mesh axis.
 
-Layout rationale (DESIGN.md §5): activations under TP are replicated across
+Layout rationale (DESIGN.md §6): activations under TP are replicated across
 "model" (the hidden dim is unsharded between blocks), while expert weights
 (E, d, f) shard E over "model". Each shard therefore already HOLDS every
 token of its batch rows and OWNS E/tp experts — dispatch is a *local*

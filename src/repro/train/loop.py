@@ -7,6 +7,10 @@ responsibilities:
     index in-trace; the loop only decides WHICH groups' windows closed
     (acc.apply_groups) and dispatches the jump masked to those groups —
     with staggered phases that is at most one group's jump spike per step,
+  * controller mode (dmd.controller.enabled): the dispatched jump is the
+    LOSS-GATED step (accept / scale-back / bit-exact rollback on a held-out
+    microbatch — core/controller.py, DESIGN.md §5); the loop only plumbs
+    the eval batch, all gating happens in-trace,
   * checkpoint cadence + atomic save + resume (bit-exact, tested),
   * preemption (SIGTERM) -> save-and-exit,
   * failure injection for tests (raise at step k, resume from disk).
@@ -57,7 +61,11 @@ class Trainer:
             donate_argnums=(0,))
         # `groups` static: each distinct jumping-group subset compiles its
         # own (small) jump program — the staggered-schedule spike killer.
-        self.dmd_step = jax.jit(make_dmd_step(acfg, mesh=mesh, acc=self.acc),
+        # With the controller on, the jitted jump also carries the in-trace
+        # loss gate (extra eval_batch argument — train/step.py).
+        self.controller_on = self.acc.controller_on
+        self.dmd_step = jax.jit(make_dmd_step(acfg, mesh=mesh, acc=self.acc,
+                                              model=model, loss_fn=loss_fn),
                                 donate_argnums=(0,),
                                 static_argnames=("groups",))
 
@@ -68,8 +76,9 @@ class Trainer:
         opt_state = self.opt.init(params)
         bufs = self.acc.init(params) if self.acfg.dmd.enabled else None
         grams = self.acc.init_grams(bufs)
+        ctrl = self.acc.init_controller()
         return TrainState(params, opt_state, jnp.zeros((), jnp.int32), bufs,
-                          grams)
+                          grams, ctrl)
 
     # -- checkpointing --------------------------------------------------------
     def save(self, state: TrainState, step: int):
@@ -126,8 +135,14 @@ class Trainer:
     # -- the loop ---------------------------------------------------------------
     def fit(self, batches: Iterator[PyTree], steps: int,
             state: Optional[TrainState] = None,
-            log_every: int = 0, on_metrics: Optional[Callable] = None
-            ) -> TrainState:
+            log_every: int = 0, on_metrics: Optional[Callable] = None,
+            eval_batch: Optional[PyTree] = None) -> TrainState:
+        """`eval_batch` (controller mode only) is the held-out microbatch
+        the loss gate scores jumps on. None takes one batch off the
+        iterator before training starts — deterministic within a run, but a
+        PREEMPTION-exact resume should pass a step-independent batch (the
+        default eval batch is drawn at the stream's current position, which
+        differs after a restore). Sliced to controller.eval_rows rows."""
         self._install_preempt_handler()
         resumed = self.restore(state)
         if resumed is not None:
@@ -136,6 +151,14 @@ class Trainer:
             state = self.init_state()
         start_step = int(state.step)
         ckpt_every = self.acfg.train.checkpoint_every
+
+        if self.controller_on:
+            if eval_batch is None:
+                eval_batch = next(batches)
+            rows = self.acfg.dmd.controller.eval_rows
+            if rows:
+                eval_batch = jax.tree_util.tree_map(
+                    lambda x: x[:rows], eval_batch)
 
         for step in range(start_step, steps):
             if self.fail_at_step is not None and step == self.fail_at_step:
@@ -147,8 +170,12 @@ class Trainer:
                             if self.acfg.dmd.enabled else ())
             if apply_groups:
                 relax = jnp.asarray(self.acc.relax_vector(step), jnp.float32)
-                state, dmd_info = self.dmd_step(state, relax,
-                                                groups=apply_groups)
+                if self.controller_on:
+                    state, dmd_info = self.dmd_step(state, relax, eval_batch,
+                                                    groups=apply_groups)
+                else:
+                    state, dmd_info = self.dmd_step(state, relax,
+                                                    groups=apply_groups)
                 metrics.update(dmd_info)
             if log_every and step % log_every == 0:
                 loss = float(metrics["loss"])

@@ -15,3 +15,10 @@ class TrainState(NamedTuple):
     dmd_buffers: PyTree        # snapshot buffers (None when DMD disabled)
     dmd_gram: PyTree = None    # running (stack..., m, m) fp32 Grams per
                                # buffer leaf (None unless dmd.streaming_gram)
+    controller: PyTree = None  # per-group jump-controller state
+                               # (core/controller.py ControllerState of tiny
+                               # (n_groups,) arrays; None unless
+                               # dmd.controller.enabled). Checkpointed and
+                               # resharded with the rest of the state, so a
+                               # preemption on the exact jump step resumes
+                               # counters / s_eff / cooldown bit-exactly.

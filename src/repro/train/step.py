@@ -147,7 +147,7 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
                                               lambda a: a, (buffers, grams))
 
         new_state = TrainState(params, opt_state, state.step + 1, buffers,
-                               grams)
+                               grams, state.controller)
         gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
                              for g in jax.tree_util.tree_leaves(grads)))
         return new_state, {"loss": loss, "grad_norm": gnorm}
@@ -193,37 +193,152 @@ def reset_opt_state_after_jump(opt, opt_state, params, plans, groups,
 
 
 def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
-                  model=None):
-    """Returns dmd_step(state, relax, groups=None) -> (state, info): the
-    paper's jump. `groups` is a STATIC tuple of schedule-group indices to
-    jump (the Trainer passes acc.apply_groups(step) and jits it as a static
-    argname); None jumps every group — the legacy single-window call.
-    `relax` is a scalar or the per-group vector from acc.relax_vector."""
+                  model=None, loss_fn: Callable = None):
+    """Returns the paper's jump as a jittable step. Two variants:
+
+      * controller OFF (default): dmd_step(state, relax, groups=None) —
+        the ungated jump, VERBATIM the pre-controller path (bit-exact;
+        pinned by the fused-step oracle in tests/test_trainer.py).
+      * controller ON (cfg.controller.enabled): dmd_step(state, relax,
+        eval_batch, groups=None) — the loss-gated jump
+        (core/controller.py, DESIGN.md §5): one candidate jump at the
+        controller's adapted per-group horizon, then an in-trace gate on
+        the held-out `eval_batch` loss — accept / halve-the-relax re-blend /
+        reject with bit-exact rollback (pre-jump params and moments pass
+        through untouched; buffers, Gram, and the schedule's cooldown
+        arithmetic were never disturbed). Needs `model` or `loss_fn` for
+        the gate forwards.
+
+    `groups` is a STATIC tuple of schedule-group indices to jump (the
+    Trainer passes acc.apply_groups(step) and jits it as a static argname);
+    None jumps every group — the legacy single-window call. `relax` is a
+    scalar or the per-group vector from acc.relax_vector.
+    """
     cfg = acfg.dmd
     opt = make_optimizer(acfg.optimizer)
     acc = _accelerator_for(model, acfg, mesh, acc)
     streaming_on = acc.streaming
 
-    def dmd_step(state: TrainState, relax,
-                 groups: Optional[Sequence[int]] = None) -> tuple:
+    if not acc.controller_on:
+        def dmd_step(state: TrainState, relax,
+                     groups: Optional[Sequence[int]] = None) -> tuple:
+            if state.dmd_buffers is None:
+                return state, {"mean_rank": jnp.zeros((), jnp.float32)}
+            grams = state.dmd_gram
+            if grams is None or not streaming_on:
+                grams = _none_like(state.dmd_buffers)
+            plans = acc.plans_for(state.params)
+            params, mean_rank = jump_tree(cfg, plans, state.params,
+                                          state.dmd_buffers, grams, relax,
+                                          groups=groups)
+            opt_state = state.opt_state
+            # the jump teleports the jumped groups' weights; reset those
+            # groups' moments — unless the group opts out (sched.reset_opt)
+            reset = acc.reset_groups(groups)
+            if reset:
+                opt_state = reset_opt_state_after_jump(
+                    opt, state.opt_state, params, plans, reset, acc.n_groups)
+            new_state = TrainState(params, opt_state, state.step,
+                                   state.dmd_buffers, state.dmd_gram,
+                                   state.controller)
+            return new_state, {"mean_rank": mean_rank}
+
+        return dmd_step
+
+    # ---- loss-gated controller variant ------------------------------------
+    from repro.core import controller as ctrl_mod
+
+    ccfg = cfg.controller
+    if loss_fn is None and model is None:
+        raise ValueError("controller mode needs `model` or `loss_fn` for "
+                         "the gate's held-out-loss forwards")
+    _loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
+
+    def gated_dmd_step(state: TrainState, relax, eval_batch,
+                       groups: Optional[Sequence[int]] = None) -> tuple:
+        zero = jnp.zeros((), jnp.float32)
         if state.dmd_buffers is None:
-            return state, {"mean_rank": jnp.zeros((), jnp.float32)}
+            return state, {"mean_rank": zero, "ctrl_outcome":
+                           jnp.zeros((), jnp.int32), "ctrl_loss_pre": zero,
+                           "ctrl_loss_jump": zero, "ctrl_loss_kept": zero,
+                           "ctrl_gain": zero}
         grams = state.dmd_gram
         if grams is None or not streaming_on:
             grams = _none_like(state.dmd_buffers)
         plans = acc.plans_for(state.params)
-        params, mean_rank = jump_tree(cfg, plans, state.params,
-                                      state.dmd_buffers, grams, relax,
-                                      groups=groups)
-        opt_state = state.opt_state
-        # the jump teleports the jumped groups' weights; reset those
-        # groups' moments — unless the group opts out (sched.reset_opt)
-        reset = acc.reset_groups(groups)
-        if reset:
-            opt_state = reset_opt_state_after_jump(
-                opt, state.opt_state, params, plans, reset, acc.n_groups)
-        new_state = TrainState(params, opt_state, state.step,
-                               state.dmd_buffers, state.dmd_gram)
-        return new_state, {"mean_rank": mean_rank}
+        ctrl = state.controller
+        jumped = tuple(range(acc.n_groups)) if groups is None \
+            else tuple(groups)
 
-    return dmd_step
+        # Candidate jump at the adapted horizon, relax tempered by the
+        # per-group effective scale. `relax` may be scalar or (n_groups,);
+        # the product with relax_eff is always the per-group vector.
+        s_vec = ctrl_mod.effective_s(ctrl, acc.groups, ccfg)
+        relax_vec = jnp.broadcast_to(
+            jnp.asarray(relax, jnp.float32),
+            (acc.n_groups,)) * ctrl.relax_eff
+        p_jump, mean_rank = jump_tree(cfg, plans, state.params,
+                                      state.dmd_buffers, grams, relax_vec,
+                                      groups=groups, s_vec=s_vec)
+
+        loss_pre = _loss(state.params, eval_batch)
+        loss_post = _loss(p_jump, eval_batch)
+
+        reset = acc.reset_groups(groups)
+
+        def reset_moments(params):
+            if not reset:
+                return state.opt_state
+            return reset_opt_state_after_jump(
+                opt, state.opt_state, params, plans, reset, acc.n_groups)
+
+        def accept_full(_):
+            return p_jump, reset_moments(p_jump), \
+                jnp.asarray(ctrl_mod.ACCEPT, jnp.int32), loss_post
+
+        def try_half(_):
+            # Halve the effective relax and re-blend: relax enters the
+            # coefficients linearly, so the midpoint IS the halved-relax
+            # jump — no second coefficient solve, one extra gate forward
+            # (paid only inside this branch).
+            p_half = jax.tree_util.tree_map(
+                lambda a, b: (0.5 * a.astype(jnp.float32)
+                              + 0.5 * b.astype(jnp.float32)).astype(a.dtype),
+                state.params, p_jump)
+            loss_half = _loss(p_half, eval_batch)
+
+            def accept_half(_):
+                return p_half, reset_moments(p_half), \
+                    jnp.asarray(ctrl_mod.SCALED, jnp.int32), loss_half
+
+            def reject(_):
+                # Bit-exact rollback: the donated pre-jump params and
+                # moments pass straight through; buffers / Gram / schedule
+                # cooldown were never touched by the jump.
+                return state.params, state.opt_state, \
+                    jnp.asarray(ctrl_mod.REJECT, jnp.int32), loss_pre
+
+            return jax.lax.cond(
+                ctrl_mod.gate_outcome(loss_pre, loss_half, ccfg.accept_tol),
+                accept_half, reject, None)
+
+        params, opt_state, outcome, loss_final = jax.lax.cond(
+            ctrl_mod.gate_outcome(loss_pre, loss_post, ccfg.accept_tol),
+            accept_full, try_half, None)
+
+        gain = (loss_pre - loss_final) / jnp.maximum(loss_pre, 1e-30)
+        new_ctrl = ctrl_mod.update_on_jump(ctrl, jumped, outcome, gain,
+                                           ccfg, acc.groups)
+        new_state = TrainState(params, opt_state, state.step,
+                               state.dmd_buffers, state.dmd_gram, new_ctrl)
+        # telemetry: `ctrl_loss_jump` is the FULL candidate's eval loss,
+        # `ctrl_loss_kept` the loss of whatever was kept (== loss_jump on
+        # accept, the half-blend's loss on a scale-back, loss_pre on a
+        # rollback) — gain is computed from `kept`, so the pair is always
+        # self-consistent.
+        return new_state, {"mean_rank": mean_rank, "ctrl_outcome": outcome,
+                           "ctrl_loss_pre": loss_pre,
+                           "ctrl_loss_jump": loss_post,
+                           "ctrl_loss_kept": loss_final, "ctrl_gain": gain}
+
+    return gated_dmd_step

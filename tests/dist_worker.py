@@ -20,6 +20,16 @@ Modes (argv[1]):
                               across window wraps (fsdp/tp-sharded + stacked
                               leaves, forced interpret-mode Pallas), plus the
                               update_grams HLO all-gather audit
+  ctrl_save <dir> jump|mid    controller-enabled run on (2,2), SIGTERM
+                              raised on the exact jump step (5) or
+                              mid-window (7) -> preempt-save; prints the
+                              CTRL line (counters / s_eff / relax_eff /
+                              slot vector at the saved step)
+  ctrl_restore <dir> <step>   restore on the REMAPPED (4,2) mesh; print the
+                              same CTRL line (bit-exact vs ctrl_save's),
+                              assert the cooldown/window phase re-derives
+                              from the restored step, run to step 14 and
+                              check the remaining gated jumps fire; CTRL_OK
 """
 import os
 import sys
@@ -42,7 +52,8 @@ from repro.train import Trainer
 from repro.train.state import TrainState
 
 
-def small_acfg(hetero=False):
+def small_acfg(hetero=False, controller=False):
+    from repro.configs.base import DMDControllerConfig
     acfg = get_config("tinyllama-1.1b")
     mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
                  n_heads=4, n_kv_heads=2, head_dim=8)
@@ -57,7 +68,8 @@ def small_acfg(hetero=False):
     return dataclasses.replace(
         acfg, model=mc,
         dmd=DMDConfig(enabled=True, m=4, s=8, tol=1e-4, warmup_steps=2,
-                      cooldown_steps=0, groups=groups),
+                      cooldown_steps=0, groups=groups,
+                      controller=DMDControllerConfig(enabled=controller)),
         optimizer=OptimizerConfig(name="adam", lr=1e-3, schedule="constant"),
         parallel=dataclasses.replace(acfg.parallel, grad_accum=2,
                                      remat="none"),
@@ -252,6 +264,89 @@ def run_sharded_kernels():
     print("SHARDED_KERNELS_OK")
 
 
+def _ctrl_line(state, acc):
+    """Canonical render of the controller + schedule phase at a step:
+    printed by ctrl_save and ctrl_restore, compared VERBATIM by the test —
+    counters, s_eff/relax_eff (full fp32 precision), and the per-group slot
+    vector re-derived from the step (cooldown/window phase)."""
+    c = state.controller
+    step = int(state.step)
+    slots = acc.slots(step)
+    fields = [
+        "step=" + str(step),
+        "acc=" + ",".join(map(str, np.asarray(c.accepts))),
+        "scl=" + ",".join(map(str, np.asarray(c.scaled))),
+        "rej=" + ",".join(map(str, np.asarray(c.rejects))),
+        "stk=" + ",".join(map(str, np.asarray(c.streak))),
+        "s=" + ",".join(f"{v:.9e}" for v in np.asarray(c.s_eff)),
+        "rx=" + ",".join(f"{v:.9e}" for v in np.asarray(c.relax_eff)),
+        "ema=" + ",".join(f"{v:.9e}" for v in np.asarray(c.gain_ema)),
+        "slots=" + ",".join(map(str, slots)),
+    ]
+    return "CTRL " + " ".join(fields)
+
+
+def run_controller_preempt(mode, argv):
+    """SIGTERM fault injection with the controller on, across a mesh remap
+    (ISSUE 4 satellite): save on (2,2) — preempted on the exact jump step
+    or mid-window — then restore on (4,2) and verify counters, s_eff, and
+    the cooldown phase resume bit-exactly, and the remaining gated jumps
+    still fire. Schedule (m=4, warmup=2, cooldown=0): jumps at 5, 9, 13."""
+    import signal
+    ckpt = argv[0]
+    eval_batch = batch_for_step(0, 10 ** 6, 8, 16, 128)   # step-independent
+    if mode == "ctrl_save":
+        variant = argv[1]
+        preempt_at = 5 if variant == "jump" else 7
+        acfg = small_acfg(controller=True)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
+                       for s in range(100))
+
+            def bomb(step, metrics):
+                if step == preempt_at:
+                    signal.raise_signal(signal.SIGTERM)
+            state = trainer.fit(batches, steps=14, on_metrics=bomb,
+                                eval_batch=eval_batch)
+            assert int(state.step) == preempt_at + 1
+            print(_ctrl_line(state, trainer.acc))
+        print("SAVED", preempt_at + 1)
+    else:
+        expected_step = int(argv[1])
+        acfg = small_acfg(controller=True)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))   # REMAPPED topology
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            state = trainer.restore()
+            assert state is not None and int(state.step) == expected_step
+            print(_ctrl_line(state, trainer.acc))
+            # the cooldown/window phase is pure step arithmetic: pin it
+            g = trainer.acc.groups[0]
+            assert trainer.acc.slots(expected_step)[0] == g.slot(
+                expected_step)
+            # finish the run: the remaining jump steps must gate + count
+            jumps_before = sum(
+                bool(trainer.acc.apply_groups(t))
+                for t in range(expected_step))
+            jumps_total = sum(bool(trainer.acc.apply_groups(t))
+                              for t in range(14))
+            batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
+                       for s in range(expected_step, 100))
+            final = trainer.fit(batches, steps=14, state=state,
+                                eval_batch=eval_batch)
+            c = final.controller
+            assert int(np.asarray(c.accepts).sum()
+                       + np.asarray(c.scaled).sum()
+                       + np.asarray(c.rejects).sum()) == jumps_total, \
+                (jumps_before, jumps_total)
+            assert np.isfinite(checksum(final.params))
+        print("CTRL_OK", jumps_total)
+
+
 def main():
     mode = sys.argv[1]
     if mode == "train":
@@ -362,6 +457,8 @@ def main():
             if hetero:
                 assert n_small > 0          # the m=3 group really exists
         print("GRAMS_OK", n_checked)
+    elif mode in ("ctrl_save", "ctrl_restore"):
+        run_controller_preempt(mode, sys.argv[2:])
     elif mode == "sharded_kernels":
         run_sharded_kernels()
     elif mode == "elastic_restore":

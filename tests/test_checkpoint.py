@@ -1,9 +1,16 @@
-"""Checkpointing: roundtrip, pruning, atomicity, bit-exact resume."""
+"""Checkpointing: roundtrip, pruning, atomicity, bit-exact resume — plus
+SIGTERM fault injection through Trainer._install_preempt_handler with the
+jump controller on (mid-window AND on the exact jump step): the saved-and-
+resumed run must match an uninterrupted run bit-exactly, including the
+controller's counters / s_eff / relax and the schedule's cooldown phase
+(re-derived from the restored step index)."""
 import os
+import signal
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.checkpoint import (latest_step, list_checkpoints,
                               restore_checkpoint, save_checkpoint)
@@ -54,3 +61,84 @@ def test_no_partial_dirs_on_disk(tmp_path):
 
 def test_restore_missing_returns_none(tmp_path):
     assert restore_checkpoint(tmp_path / "nothing", _state()) is None
+
+
+def test_controller_state_roundtrip(tmp_path):
+    """ControllerState arrays ride in TrainState and round-trip; a
+    pre-controller checkpoint (no controller leaves in the manifest)
+    restores the template's FRESH controller instead of dying."""
+    from repro.core import controller as C
+    from repro.core.schedule import GroupSchedule
+    g = (GroupSchedule(index=0, name="default", m=4, s=10, warmup_steps=0,
+                       cooldown_steps=0, phase=0, relax=1.0, anneal=1.0),)
+    ctrl = C.init_state(g)._replace(
+        accepts=jnp.asarray([3], jnp.int32),
+        s_eff=jnp.asarray([2.5], jnp.float32))
+    st = _state()._replace(controller=ctrl)
+    save_checkpoint(tmp_path, st, 5)
+    back = restore_checkpoint(tmp_path, _state()._replace(
+        controller=C.init_state(g)))
+    assert int(back.controller.accepts[0]) == 3
+    assert float(back.controller.s_eff[0]) == 2.5
+    # pre-controller manifest -> template's fresh state survives
+    save_checkpoint(tmp_path, _state(), 6)
+    back2 = restore_checkpoint(tmp_path, _state()._replace(
+        controller=C.init_state(g)))
+    assert int(back2.controller.accepts[0]) == 0
+    assert float(back2.controller.s_eff[0]) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM fault injection (ISSUE 4 satellite): preemption mid-window and on
+# the exact jump step, controller enabled.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("preempt_at", [12, 15])   # mid-window / jump step
+def test_sigterm_preempt_resumes_controller_bitexact(tmp_path, preempt_at):
+    """Schedule (warmup 4, cooldown 2, m 4): jumps at 9, 15, 21. SIGTERM
+    delivered during step 12 (mid-window) or step 15 (the exact jump step —
+    the save then carries that jump's fresh gate outcome). The preempt
+    handler saves at step+1 and exits; a new trainer resumes and must land
+    bit-exactly on the uninterrupted run: params, moments, buffers, Grams,
+    AND every controller field. The eval batch is pinned step-independent,
+    so the gate decisions replay identically across the restore."""
+    from test_trainer import _tiny_setup, _ctrl_cfg, _eval_batch_for
+    from repro.data.tokens import synthetic_lm_batches
+    steps = 24
+
+    try:
+        # uninterrupted reference
+        tr_a, batches_a = _tiny_setup(dmd=True, controller=_ctrl_cfg())
+        eval_batch = _eval_batch_for(tr_a)
+        final_a = tr_a.fit(batches_a, steps=steps, eval_batch=eval_batch)
+
+        # preempted run: SIGTERM lands inside on_metrics at `preempt_at`;
+        # the handler flips the flag and fit checkpoints step+1 and breaks
+        tr_b, batches_b = _tiny_setup(tmp_path, dmd=True,
+                                      controller=_ctrl_cfg())
+
+        def bomb(step, metrics):
+            if step == preempt_at:
+                signal.raise_signal(signal.SIGTERM)
+        state_b = tr_b.fit(batches_b, steps=steps, on_metrics=bomb,
+                           eval_batch=eval_batch)
+        assert int(state_b.step) == preempt_at + 1
+        assert latest_step(tmp_path) == preempt_at + 1
+
+        # resume in a fresh trainer from the checkpoint
+        tr_c, _ = _tiny_setup(tmp_path, dmd=True, controller=_ctrl_cfg())
+        vocab = tr_c.model.cfg.vocab_size
+        batches_c = synthetic_lm_batches(0, 4, 16, vocab,
+                                         start_step=preempt_at + 1)
+        final_c = tr_c.fit(batches_c, steps=steps, eval_batch=eval_batch)
+    finally:
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+
+    for name in ("params", "opt_state", "dmd_buffers", "dmd_gram",
+                 "controller"):
+        for x, y in zip(
+                jax.tree_util.tree_leaves(getattr(final_a, name)),
+                jax.tree_util.tree_leaves(getattr(final_c, name))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=name)

@@ -1,0 +1,194 @@
+"""Jump-controller unit tests: state init, gate outcome math, per-group
+adaptation, energy resolution, accelerator/plan-table integration
+(core/controller.py, DESIGN.md §5). End-to-end gating lives in
+tests/test_trainer.py; fault-injection in tests/test_checkpoint.py and
+tests/dist_worker.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import DMDConfig, DMDControllerConfig
+from repro.core import DMDAccelerator
+from repro.core import controller as C
+from repro.core import schedule as sched
+from repro.core.schedule import DMDGroupRule
+
+
+def _groups(**cfg_kw):
+    cfg = DMDConfig(m=6, s=20, warmup_steps=0, cooldown_steps=0,
+                    groups=(DMDGroupRule(name="small", max_ndim=1, m=4,
+                                         s=8, phase=3),), **cfg_kw)
+    return sched.resolve_groups(cfg), cfg
+
+
+def test_init_state_caps_and_zeros():
+    groups, _ = _groups()
+    st = C.init_state(groups)
+    np.testing.assert_array_equal(np.asarray(st.s_eff), [20.0, 8.0])
+    np.testing.assert_array_equal(np.asarray(st.relax_eff), [1.0, 1.0])
+    for f in (st.accepts, st.scaled, st.rejects, st.streak):
+        np.testing.assert_array_equal(np.asarray(f), [0, 0])
+    # donated TrainStates may not alias buffers: every field distinct
+    ids = [id(l) for l in jax.tree_util.tree_leaves(st)]
+    assert len(ids) == len(set(ids))
+
+
+def test_init_state_abstract_allocates_nothing():
+    groups, _ = _groups()
+    st = C.init_state(groups, abstract=True)
+    for leaf in jax.tree_util.tree_leaves(st):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_gate_outcome_predicate():
+    ok = C.gate_outcome(jnp.float32(1.0), jnp.float32(0.99), 0.0)
+    assert bool(ok)
+    assert not bool(C.gate_outcome(jnp.float32(1.0), jnp.float32(1.01), 0.0))
+    # accept_tol widens the band
+    assert bool(C.gate_outcome(jnp.float32(1.0), jnp.float32(1.01), 0.02))
+    # non-finite candidates always fail
+    assert not bool(C.gate_outcome(jnp.float32(1.0), jnp.float32(np.nan),
+                                   0.0))
+    assert not bool(C.gate_outcome(jnp.float32(1.0), jnp.float32(np.inf),
+                                   0.0))
+    # adversarial threshold: a negative tol below -1 is unsatisfiable for
+    # positive losses (the forced-reject fixture in test_trainer.py)
+    assert not bool(C.gate_outcome(jnp.float32(1.0), jnp.float32(1e-9),
+                                   -1.0))
+
+
+def test_update_accept_reject_scaled_semantics():
+    groups, _ = _groups()
+    ccfg = DMDControllerConfig(enabled=True, grow=1.5, shrink=0.5, s_min=2.0,
+                               relax_floor=0.25, gain_ema=0.5)
+    st = C.init_state(groups)
+
+    # reject on group 0: counter, streak reset, s_eff shrinks; group 1 idle
+    st = C.update_on_jump(st, (0,), jnp.int32(C.REJECT), jnp.float32(0.0),
+                          ccfg, groups)
+    assert int(st.rejects[0]) == 1 and int(st.rejects[1]) == 0
+    assert float(st.s_eff[0]) == 10.0 and float(st.s_eff[1]) == 8.0
+
+    # single full accept: streak 1, NO growth yet (growth needs consecutive)
+    st = C.update_on_jump(st, (0,), jnp.int32(C.ACCEPT), jnp.float32(0.1),
+                          ccfg, groups)
+    assert int(st.accepts[0]) == 1 and int(st.streak[0]) == 1
+    assert float(st.s_eff[0]) == 10.0
+
+    # second consecutive accept: multiplicative growth, capped at s later
+    st = C.update_on_jump(st, (0,), jnp.int32(C.ACCEPT), jnp.float32(0.1),
+                          ccfg, groups)
+    assert int(st.streak[0]) == 2
+    assert float(st.s_eff[0]) == pytest.approx(15.0)
+    for _ in range(6):
+        st = C.update_on_jump(st, (0,), jnp.int32(C.ACCEPT),
+                              jnp.float32(0.1), ccfg, groups)
+    assert float(st.s_eff[0]) == 20.0          # bounded by configured s
+
+    # scale-back: halves relax_eff (floored), breaks the streak, counts
+    st = C.update_on_jump(st, (0,), jnp.int32(C.SCALED), jnp.float32(0.02),
+                          ccfg, groups)
+    assert int(st.scaled[0]) == 1 and int(st.streak[0]) == 0
+    assert float(st.relax_eff[0]) == 0.5
+    st = C.update_on_jump(st, (0,), jnp.int32(C.SCALED), jnp.float32(0.0),
+                          ccfg, groups)
+    st = C.update_on_jump(st, (0,), jnp.int32(C.SCALED), jnp.float32(0.0),
+                          ccfg, groups)
+    assert float(st.relax_eff[0]) == 0.25      # floor
+
+    # full accept recovers relax toward 1
+    st = C.update_on_jump(st, (0,), jnp.int32(C.ACCEPT), jnp.float32(0.1),
+                          ccfg, groups)
+    assert float(st.relax_eff[0]) == 0.5
+
+    # shrink floor: rejects never push s_eff below s_min
+    st2 = C.init_state(groups)
+    for _ in range(10):
+        st2 = C.update_on_jump(st2, (0,), jnp.int32(C.REJECT),
+                               jnp.float32(0.0), ccfg, groups)
+    assert float(st2.s_eff[0]) == 2.0
+
+    # group 1 untouched throughout
+    assert float(st.s_eff[1]) == 8.0 and float(st.relax_eff[1]) == 1.0
+    assert int(st.accepts[1] + st.scaled[1] + st.rejects[1]) == 0
+
+
+def test_gain_ema_update():
+    groups, _ = _groups()
+    ccfg = DMDControllerConfig(enabled=True, gain_ema=0.8)
+    st = C.init_state(groups)
+    st = C.update_on_jump(st, (0,), jnp.int32(C.ACCEPT), jnp.float32(0.5),
+                          ccfg, groups)
+    assert float(st.gain_ema[0]) == pytest.approx(0.1)
+    st = C.update_on_jump(st, (0,), jnp.int32(C.ACCEPT), jnp.float32(0.5),
+                          ccfg, groups)
+    assert float(st.gain_ema[0]) == pytest.approx(0.18)
+    assert float(st.gain_ema[1]) == 0.0
+
+
+def test_effective_s_rounds_and_clamps():
+    groups, _ = _groups()
+    ccfg = DMDControllerConfig(enabled=True, s_min=2.0)
+    st = C.init_state(groups)._replace(
+        s_eff=jnp.asarray([7.6, 0.3], jnp.float32))
+    sv = C.effective_s(st, groups, ccfg)
+    np.testing.assert_array_equal(np.asarray(sv), [8, 2])
+    assert sv.dtype == jnp.int32
+    # host-side audit agrees with the trace
+    np.testing.assert_array_equal(
+        sched.effective_s_array(groups, st.s_eff, s_floor=ccfg.s_min),
+        np.asarray(sv))
+
+
+def test_resolve_groups_energy_gating():
+    """Energy targets resolve ONLY in controller mode (off -> 0.0 = tol
+    mask, the bit-exact legacy path), with per-rule overrides."""
+    off, _ = _groups()
+    assert all(g.energy == 0.0 for g in off)
+    cfg = DMDConfig(m=6, s=20, controller=DMDControllerConfig(
+        enabled=True, energy=0.99),
+        groups=(DMDGroupRule(name="small", max_ndim=1, energy=0.9),))
+    on = sched.resolve_groups(cfg)
+    assert on[0].energy == pytest.approx(0.99)
+    assert on[1].energy == pytest.approx(0.9)
+    # controller ON with a zero DEFAULT energy: a per-rule override must
+    # still apply (regression: the gate used to key off energy_default > 0)
+    mixed = sched.resolve_groups(DMDConfig(
+        m=6, s=20, controller=DMDControllerConfig(enabled=True, energy=0.0),
+        groups=(DMDGroupRule(name="small", max_ndim=1, energy=0.9),)))
+    assert mixed[0].energy == 0.0
+    assert mixed[1].energy == pytest.approx(0.9)
+    with pytest.raises(ValueError, match="energy"):
+        sched.resolve_groups(DMDConfig(
+            m=6, controller=DMDControllerConfig(enabled=True, energy=1.5)))
+
+
+def test_accelerator_controller_integration():
+    cfg = DMDConfig(m=6, s=20, warmup_steps=0, cooldown_steps=0)
+    acc = DMDAccelerator(cfg)
+    assert not acc.controller_on and acc.init_controller() is None
+
+    cfg_on = DMDConfig(m=6, s=20, warmup_steps=0, cooldown_steps=0,
+                       controller=DMDControllerConfig(enabled=True))
+    acc_on = DMDAccelerator(cfg_on)
+    assert acc_on.controller_on
+    st = acc_on.init_controller()
+    assert isinstance(st, C.ControllerState)
+    assert st.s_eff.shape == (acc_on.n_groups,)
+
+    # plan_table exposes the per-group horizon and energy columns
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    table_on = acc_on.plan_table(params)
+    assert " s " in table_on.splitlines()[0] or "s" in \
+        table_on.splitlines()[0].split()
+    assert "0.995" in table_on                  # controller energy target
+    table_off = DMDAccelerator(cfg).plan_table(params)
+    assert "0.995" not in table_off             # tol mask rules when off
+
+
+def test_summary_renders():
+    groups, _ = _groups()
+    st = C.init_state(groups)
+    out = C.summary(st, groups)
+    assert "default" in out and "small" in out and "s_eff" in out

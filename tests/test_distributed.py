@@ -69,6 +69,29 @@ def test_elastic_restart_different_mesh(tmp_path):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("variant,saved_step", [("jump", 6), ("mid", 8)])
+def test_controller_preempt_restore_on_remapped_mesh(tmp_path, variant,
+                                                     saved_step):
+    """ISSUE 4 satellite: SIGTERM lands on the exact jump step ("jump" —
+    the checkpoint carries that jump's fresh gate outcome) or mid-window
+    ("mid") with the loss-gated controller on, on a (2,2) mesh; restore on
+    the REMAPPED (4,2) mesh must resume controller counters, effective s_g,
+    relax/gain EMAs, and the cooldown/window phase BIT-EXACTLY (the workers
+    print a canonical CTRL line; save and restore must emit it verbatim),
+    then finish the run with the remaining gated jumps firing."""
+    ckpt = str(tmp_path / f"ckpt_{variant}")
+    out_save = run_worker("ctrl_save", ckpt, variant)
+    assert f"SAVED {saved_step}" in out_save
+    out_restore = run_worker("ctrl_restore", ckpt, str(saved_step))
+    assert "CTRL_OK" in out_restore
+    line_save = next(l for l in out_save.splitlines()
+                     if l.startswith("CTRL "))
+    line_restore = next(l for l in out_restore.splitlines()
+                        if l.startswith("CTRL "))
+    assert line_save == line_restore
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("variant", ["keep", "zero", "hetero"])
 def test_gram_restore_on_remapped_mesh(tmp_path, variant):
     """A streaming-era checkpoint (grams carried), a zeroed-gram /

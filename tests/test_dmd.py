@@ -301,6 +301,172 @@ def test_multidim_leaf_combine():
                                np.asarray(c) @ flat, rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Diagnostics property tests (ISSUE 4 satellite): randomized snapshot
+# matrices across mode x anchor, via the hypothesis shim.
+# ---------------------------------------------------------------------------
+
+def _random_gram(seed, m=8, n=40, anchor="none"):
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:                       # random walk (noisy drift)
+        S = np.cumsum(rng.normal(size=(m, n)), axis=0)
+    elif kind == 1:                     # low-rank linear dynamics
+        S, _ = make_linear_traj(n=n, m=m, rank=4, seed=seed)
+    else:                               # pure noise
+        S = rng.normal(size=(m, n))
+    S = S.astype(np.float32)
+    return S, gram_matrix(jnp.asarray(S), anchor=anchor)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       mode=st.sampled_from(["matpow", "eig"]),
+       anchor=st.sampled_from(["none", "first", "mean"]))
+def test_rank_monotone_nonincreasing_in_tol(seed, mode, anchor):
+    """Reported rank never grows as the singular-value filter tightens."""
+    _, g = _random_gram(seed, anchor=anchor)
+    ranks = []
+    for tol in (1e-8, 1e-5, 1e-3, 1e-1, 0.5):
+        _, info = dmd_coefficients(g, s=9, tol=tol, mode=mode, anchor=anchor)
+        ranks.append(int(info["rank"]))
+    assert ranks == sorted(ranks, reverse=True), ranks
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       mode=st.sampled_from(["matpow", "eig"]),
+       anchor=st.sampled_from(["none", "first", "mean"]))
+def test_jump_scale_finite_on_finite_gram(seed, mode, anchor):
+    """jump_scale (and the new jump_norm/step_rms telemetry) is finite
+    whenever the Gram is finite — trust region on AND off."""
+    _, g = _random_gram(seed, anchor=anchor)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    for tr in (0.0, 1.5):
+        _, info = dmd_coefficients(g, s=25, tol=1e-4, mode=mode,
+                                   anchor=anchor, trust_region=tr)
+        for key in ("jump_scale", "jump_norm", "step_rms"):
+            assert bool(jnp.isfinite(info[key])), (key, tr)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), s=st.integers(1, 60),
+       anchor=st.sampled_from(["none", "first", "mean"]),
+       mode=st.sampled_from(["matpow", "eig"]))
+def test_trust_region_cap_exact_invariant(seed, s, anchor, mode):
+    """||w_new - w_last|| <= tr * s * rms_step + eps for EVERY randomized
+    snapshot matrix: the cap is an invariant of the returned coefficients,
+    not a statistical tendency. rms_step is computed exactly the way the
+    guard computes it (from the Gram's diagonal band)."""
+    tr = 1.5
+    S, g = _random_gram(seed, anchor=anchor)
+    c, info = dmd_coefficients(g, s=int(s), tol=1e-4, mode=mode,
+                               anchor=anchor, trust_region=tr)
+    w = np.asarray(c, np.float64) @ np.asarray(S, np.float64)
+    jump = np.linalg.norm(w - S[-1])
+    gd = np.asarray(g, np.float64)
+    diag, sup = np.diag(gd), np.diag(gd, 1)
+    rms_step = np.sqrt(max(np.mean(diag[1:] + diag[:-1] - 2 * sup), 0.0))
+    radius = tr * s * rms_step
+    assert jump <= radius * (1 + 1e-3) + 1e-4 * max(np.abs(S).max(), 1.0), \
+        (jump, radius, seed, anchor, mode)
+
+
+def test_energy_rank_monotone_and_bounded():
+    """Controller-mode truncation: rank grows with the energy target and is
+    always >= 1; energy=0 falls back to the tol mask bit-exactly."""
+    _, g = _random_gram(3, anchor="first")
+    ranks = []
+    for e in (0.5, 0.9, 0.99, 0.9999):
+        _, info = dmd_coefficients(g, s=9, tol=1e-4, anchor="first",
+                                   energy=e)
+        ranks.append(int(info["rank"]))
+    assert ranks == sorted(ranks) and ranks[0] >= 1, ranks
+    c0, i0 = dmd_coefficients(g, s=9, tol=1e-4, anchor="first")
+    c1, i1 = dmd_coefficients(g, s=9, tol=1e-4, anchor="first", energy=0.0)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    assert int(i0["rank"]) == int(i1["rank"])
+
+
+@pytest.mark.parametrize("mode", ["matpow", "eig"])
+def test_dynamic_horizon_matches_static(mode):
+    """Controller-mode traced s (s_dyn + static s_max) reproduces the
+    static-s coefficients for every horizon in range."""
+    _, g = _random_gram(5, anchor="first")
+    for sv in (1, 3, 7, 12):
+        cs, _ = dmd_coefficients(g, s=sv, tol=1e-4, anchor="first",
+                                 mode=mode, affine=True, trust_region=2.0)
+        cd, _ = dmd_coefficients(g, s=12, s_max=12,
+                                 s_dyn=jnp.asarray(sv, jnp.int32),
+                                 tol=1e-4, anchor="first", mode=mode,
+                                 affine=True, trust_region=2.0)
+        np.testing.assert_allclose(np.asarray(cs), np.asarray(cd),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_eig_clamp_on_defective_jordan_matches_matpow():
+    """Regression (ISSUE 4 satellite): an unanchored drift trajectory
+    produces a DEFECTIVE reduced operator (Jordan block, eigenvalue 1,
+    multiplicity 2). The docstring always claimed matpow handles it; the
+    eig/clamp branch used to return finite garbage — the noise-split pair
+    1 +- delta carries huge opposing amplitudes, the near-singular
+    eigenvector solve amplifies them, and clamping the upper eigenvalue
+    broke their cancellation (measured ~0.5 absolute error at s=5, growing
+    with s). Now the clamp skips the near-1 band and the self-validation
+    guard falls back to matpow whenever the eigenbasis cannot reproduce the
+    unclamped power: eig-vs-matpow agreement is pinned, and both match the
+    exact drift extrapolation."""
+    rng = np.random.default_rng(0)
+    w0, v = rng.normal(size=32), rng.normal(size=32) * 0.1
+    S = np.stack([w0 + t * v for t in range(8)]).astype(np.float32)
+    for s in (5, 20, 60):
+        truth = S[-1] + s * v
+        scale = max(np.abs(truth).max(), 1.0)
+        w_mp, _ = dmd_extrapolate(jnp.asarray(S), s=s, tol=1e-4,
+                                  mode="matpow")
+        w_eig, _ = dmd_extrapolate(jnp.asarray(S), s=s, tol=1e-4,
+                                   mode="eig", clamp_eigs=True)
+        assert np.abs(np.asarray(w_mp) - truth).max() / scale < 1e-3, s
+        assert np.abs(np.asarray(w_eig) - truth).max() / scale < 5e-3, s
+        assert np.abs(np.asarray(w_eig) - np.asarray(w_mp)).max() / scale \
+            < 5e-3, s
+
+
+def test_eig_clamp_still_stabilizes_genuine_growth():
+    """The defective guard must NOT neuter the clamp where it is the whole
+    point: a genuine |lambda| = 1.1 growth mode explodes unclamped and
+    stays bounded clamped."""
+    S, _ = make_linear_traj(rank=3, spectrum=np.array([1.1, 0.9, 0.8]),
+                            m=10)
+    w_c, _ = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=20, tol=1e-5,
+                             mode="eig", clamp_eigs=True)
+    w_u, _ = dmd_extrapolate(jnp.asarray(S, jnp.float32), s=20, tol=1e-5,
+                             mode="eig", clamp_eigs=False)
+    assert np.linalg.norm(np.asarray(w_u)) > 3 * np.linalg.norm(
+        np.asarray(w_c))
+
+
+def test_eig_clamp_survives_fp32_overflow_of_unclamped_power():
+    """Guard-of-the-guard regression: with an operator explosive enough
+    that the UNCLAMPED power overflows fp32 (|lambda|^s past 3e38 — the
+    exact regime clamp_eigs exists for), the self-validation fallback must
+    not evict the finite CLAMPED reconstruction in favor of the non-finite
+    matpow power. The clamped jump stays finite and bounded."""
+    S, _ = make_linear_traj(rank=2, spectrum=np.array([7.0, 0.5]), m=10,
+                            seed=4)
+    scale = np.abs(S).max()                 # keep snapshots in fp32 range
+    Sj = jnp.asarray(S / scale, jnp.float32)
+    w_c, _ = dmd_extrapolate(Sj, s=60, tol=1e-5, mode="eig",
+                             clamp_eigs=True)     # 7^60 >> fp32 max
+    assert bool(jnp.all(jnp.isfinite(w_c)))
+    # the clamp really acted: |lambda| <- 1 keeps the jump at trajectory
+    # scale instead of the overflowed unclamped power
+    assert np.linalg.norm(np.asarray(w_c)) < 10 * np.linalg.norm(
+        np.asarray(Sj[-1]))
+    # and it is not the keep-w_last collapse: the mode still evolves
+    assert np.linalg.norm(np.asarray(w_c) - np.asarray(Sj[-1])) > 0
+
+
 def test_batched_stack_matches_per_layer_loop():
     """Per-layer DMD over a stacked (m, L, d) buffer == looping layers."""
     from repro.core.dmd import gram_matrix

@@ -15,7 +15,8 @@ from repro.train import Trainer
 
 
 def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0,
-                groups=()):
+                groups=(), controller=None):
+    from repro.configs.base import DMDControllerConfig
     acfg = get_config("tinyllama-1.1b")
     mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
                  n_heads=2, n_kv_heads=1, head_dim=16)
@@ -23,7 +24,8 @@ def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0,
         acfg,
         model=mc,
         dmd=DMDConfig(enabled=dmd, m=4, s=10, tol=1e-4, warmup_steps=4,
-                      cooldown_steps=2, groups=groups),
+                      cooldown_steps=2, groups=groups,
+                      controller=controller or DMDControllerConfig()),
         optimizer=OptimizerConfig(name="adam", lr=3e-3, schedule="constant"),
         parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
                                      remat="none"),
@@ -238,6 +240,116 @@ def test_default_config_fused_path_matches_pre_refactor_oracle():
     for a, b in zip(jax.tree_util.tree_leaves(state_f.dmd_gram),
                     jax.tree_util.tree_leaves(state.dmd_gram)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Loss-gated jump controller (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def _ctrl_cfg(**kw):
+    from repro.configs.base import DMDControllerConfig
+    return DMDControllerConfig(enabled=True, **kw)
+
+
+def _eval_batch_for(trainer):
+    """A step-independent held-out batch (deterministic across resumes)."""
+    from repro.data.tokens import batch_for_step
+    return batch_for_step(0, 10 ** 6, 4, 16, trainer.model.cfg.vocab_size)
+
+
+def test_controller_rollback_oracle():
+    """ISSUE 4 satellite: force every jump to REJECT (adversarial gate — an
+    accept threshold no positive eval loss can meet) and pin the rollback:
+    the final TrainState must be assert_array_equal-IDENTICAL to a run that
+    never jumped at all — params, optimizer moments, snapshot buffers, and
+    Gram slots. The oracle run drives trainer.train_step directly and never
+    dispatches a dmd_step, on the same batch stream."""
+    ctrl = _ctrl_cfg(accept_tol=-1.0)          # loss_post <= 0: impossible
+    trainer, batches = _tiny_setup(dmd=True, controller=ctrl)
+    eval_batch = _eval_batch_for(trainer)
+    outcomes = []
+
+    def on_m(s, m):
+        if "ctrl_outcome" in m:
+            outcomes.append(int(m["ctrl_outcome"]))
+    state = trainer.fit(batches, steps=16, on_metrics=on_m,
+                        eval_batch=eval_batch)
+    assert outcomes and all(o == 0 for o in outcomes)     # all rejected
+    assert int(state.controller.rejects.sum()) == len(outcomes)
+
+    # oracle: identical trainer, train_step only — "a run that never jumped"
+    oracle, _ = _tiny_setup(dmd=True, controller=ctrl)
+    o_state = oracle.init_state()
+    batches2 = synthetic_lm_batches(0, 4, 16, oracle.model.cfg.vocab_size)
+    for t in range(16):
+        o_state, _ = oracle.train_step(o_state, next(batches2),
+                                       jnp.asarray(t, jnp.int32))
+
+    for name, a_tree, b_tree in (
+            ("params", state.params, o_state.params),
+            ("opt_state", state.opt_state, o_state.opt_state),
+            ("dmd_buffers", state.dmd_buffers, o_state.dmd_buffers),
+            ("dmd_gram", state.dmd_gram, o_state.dmd_gram)):
+        for a, b in zip(jax.tree_util.tree_leaves(a_tree),
+                        jax.tree_util.tree_leaves(b_tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+def test_controller_accepts_and_adapts():
+    """End to end with the gate on: outcomes are recorded, the counters add
+    up, rejected jumps shrink s_eff below the cap, and params stay finite."""
+    trainer, batches = _tiny_setup(dmd=True, controller=_ctrl_cfg())
+    outcomes = []
+
+    def on_m(s, m):
+        if "ctrl_outcome" in m:
+            outcomes.append(int(m["ctrl_outcome"]))
+    state = trainer.fit(batches, steps=28, on_metrics=on_m,
+                        eval_batch=_eval_batch_for(trainer))
+    ctrl = state.controller
+    assert len(outcomes) == 4                  # jumps at 9, 15, 21, 27
+    assert int(ctrl.accepts.sum() + ctrl.scaled.sum()
+               + ctrl.rejects.sum()) == len(outcomes)
+    assert outcomes.count(2) == int(ctrl.accepts.sum())
+    assert outcomes.count(0) == int(ctrl.rejects.sum())
+    cap = trainer.acc.groups[0].s
+    if int(ctrl.rejects.sum()):
+        assert float(ctrl.s_eff[0]) < cap
+    else:
+        assert float(ctrl.s_eff[0]) <= cap
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_controller_off_is_default_and_state_free():
+    """controller.enabled=False keeps the PR-3 surface exactly: no
+    controller state in TrainState, the 3-arg dmd_step signature, and the
+    same trajectory as ever (the fused-step oracle above pins bit-exactness
+    of that path)."""
+    trainer, batches = _tiny_setup(dmd=True)
+    assert not trainer.controller_on
+    state = trainer.fit(batches, steps=12)
+    assert state.controller is None
+
+
+def test_controller_two_group_staggered_gates_each_jump():
+    """Controller + two staggered groups: each group's jump step gets its
+    own gate decision; only the jumped group's counters move."""
+    trainer, batches = _tiny_setup(dmd=True, groups=_two_groups(),
+                                   controller=_ctrl_cfg())
+    state = trainer.fit(batches, steps=26,
+                        eval_batch=_eval_batch_for(trainer))
+    ctrl = state.controller
+    total = int(ctrl.accepts.sum() + ctrl.scaled.sum()
+                + ctrl.rejects.sum())
+    n_jump_steps = sum(len(trainer.acc.apply_groups(t)) for t in range(26))
+    assert total == n_jump_steps
+    per_group = np.asarray(ctrl.accepts + ctrl.scaled + ctrl.rejects)
+    for g in range(trainer.acc.n_groups):
+        expect = sum(1 for t in range(26)
+                     if g in trainer.acc.apply_groups(t))
+        assert per_group[g] == expect, (g, per_group, expect)
 
 
 def test_restore_rebuilds_grams_from_pre_streaming_checkpoint(tmp_path):
