@@ -24,7 +24,7 @@ def lower_cell(acfg, shape, mesh):
     from repro.launch.dryrun import build_step, parse_collectives
     from repro.distributed.sharding import mesh_context
     with mesh_context(mesh):
-        fn, args, sh, model, don = build_step(acfg, shape, mesh)
+        fn, args, sh, model, don, _ = build_step(acfg, shape, mesh)
         co = jax.jit(fn, in_shardings=sh, donate_argnums=don
                      ).lower(*args).compile()
     tot, cnt = parse_collectives(co.as_text())

@@ -15,6 +15,10 @@
                      counts, loss-vs-wall trajectory at equal step count,
                      zero unrecovered rejects, and the gate's wall overhead
                      on the jump step — DESIGN.md §5
+  arena_bench        packed leaf arenas vs the per-leaf route: kernel
+                     launches per recorded step, traced-program size, and
+                     record/jump walls on a deep MLP + reduced tinyllama —
+                     DESIGN.md §7
 """
 from __future__ import annotations
 
@@ -108,6 +112,119 @@ def fig4_curves(steps=600) -> List[str]:
     return rows
 
 
+def arena_bench(n_mlp_layers=24, width=192, reps=10) -> List[str]:
+    """ISSUE 5 tentpole evidence: packed leaf arenas vs the per-leaf route
+    (core/arena.py, DESIGN.md §7) on two multi-leaf configs:
+
+      * a deep unstacked MLP (2 leaves per layer — the dispatch-bound
+        regime: hundreds of tiny per-leaf launches), and
+      * reduced tinyllama (scan-stacked transformer leaves + embeddings).
+
+    Rows record, per route: the kernel-launch proxy (data-pass primitives
+    per recorded step — dot_general / pallas_call / scatter / row-write),
+    the traced-program size (total jaxpr primitives: the per-leaf unroll
+    is what made traces long), and measured record+update / jump walls.
+    Acceptance: >= 5x fewer launches per recorded step on the arena route
+    and lower step wall on the transformer config; the jaxpr pins in
+    tests/test_trace_size.py guard the trace-size half of this from
+    regressing.
+
+    CPU-wall caveat: the arena record pays one extra params-sized gather
+    copy (pack -> row write) that the per-leaf route does not; on CPU —
+    where op dispatch is nearly free and memcpy is the cost — the deep-MLP
+    bucket can show that copy as a record-wall REGRESSION while still
+    cutting launches ~50x. The launch/trace counts are the
+    dispatch-bound-TPU story the arenas exist for; the tinyllama row is
+    the like-for-like wall evidence.
+    """
+    from repro.configs import get_config, reduced
+    from repro.models.mlp_net import init_mlp
+    from repro.models.transformer import init_params, param_stack_dims
+    from repro.trace import count_eqns, count_launch_ops
+
+    rows = ["arena,config,route,launches_per_recorded_step,jaxpr_eqns,"
+            "record_update_ms,jump_ms,n_leaves,n_buckets"]
+
+    def bench_one(name, params, stack_dims, m=8):
+        cfg = DMDConfig(m=m, s=10, tol=1e-4, anchor="first", warmup_steps=0,
+                        cooldown_steps=0)
+        out = {}
+        for route, arena_on in (("arena", True), ("per_leaf", False)):
+            c = dataclasses.replace(cfg, arena=arena_on)
+            acc = DMDAccelerator(c, stack_dims=stack_dims)
+            bufs = acc.init(params)
+            grams = acc.init_grams(bufs)
+            n_buckets = len(acc.arena_for(params))
+
+            def rec(b, g, p, slot):
+                return acc.record(b, p, slot, g)
+
+            slot1 = jnp.asarray(1, jnp.int32)
+            jx = jax.make_jaxpr(rec)(bufs, grams, params, slot1)
+            launches = count_launch_ops(jx.jaxpr)
+            eqns = count_eqns(jx.jaxpr)
+            rec_jit = jax.jit(rec, donate_argnums=(0, 1))
+
+            # warm the window so the jump solves on real data
+            p = params
+            for t in range(m):
+                p = jax.tree_util.tree_map(
+                    lambda x: x + 0.01 * jnp.ones_like(x), p)
+                bufs, grams = rec_jit(bufs, grams, p,
+                                      jnp.asarray(t, jnp.int32))
+
+            # donated buffers: rethread the returned state each rep (the
+            # deployment idiom — see the donation audit); median wall
+            bufs, grams = rec_jit(bufs, grams, p, slot1)       # compile
+            jax.block_until_ready(jax.tree_util.tree_leaves(bufs))
+            walls = []
+            for _ in range(reps):
+                t0 = time.time()
+                bufs, grams = rec_jit(bufs, grams, p, slot1)
+                jax.block_until_ready(jax.tree_util.tree_leaves(bufs))
+                walls.append(time.time() - t0)
+            t_rec = float(np.median(walls))
+            # apply donates params: pre-clone outside the timed region
+            clones = [jax.tree_util.tree_map(jnp.copy, p)
+                      for _ in range(reps + 1)]
+            jax.block_until_ready(acc.apply(clones.pop(), bufs, grams=grams,
+                                            step=m - 1)[0])    # compile
+            walls = []
+            for cp in clones:
+                t0 = time.time()
+                jax.block_until_ready(
+                    acc.apply(cp, bufs, grams=grams, step=m - 1)[0])
+                walls.append(time.time() - t0)
+            t_jump = float(np.median(walls))
+            n_leaves = len(leafplan.plan_entries(acc.plans_for(params)))
+            rows.append(
+                f"arena,{name},{route},{launches},{eqns},"
+                f"{t_rec * 1e3:.2f},{t_jump * 1e3:.2f},{n_leaves},"
+                f"{n_buckets}")
+            out[route] = (launches, eqns, t_rec, t_jump)
+        la, ea, ra, ja = out["arena"]
+        lp, ep, rp, jp = out["per_leaf"]
+        rows.append(f"arena,{name},launch_ratio,{lp / max(la, 1):.1f}x,"
+                    f"eqn_ratio,{ep / max(ea, 1):.1f}x,"
+                    f"record_speedup,{rp / max(ra, 1e-9):.2f}x,"
+                    f"jump_speedup,{jp / max(ja, 1e-9):.2f}x")
+        return out
+
+    # deep unstacked MLP: the dispatch-bound many-leaf regime
+    sizes = [width] * (n_mlp_layers + 1)
+    mlp_params = init_mlp(jax.random.PRNGKey(0), sizes)
+    bench_one(f"mlp{n_mlp_layers}x{width}", mlp_params, None)
+
+    # reduced tinyllama: scan-stacked transformer leaves
+    mc = reduced(get_config("tinyllama-1.1b").model, n_layers=4, d_model=64,
+                 d_ff=128, vocab_size=256, n_heads=4, n_kv_heads=2,
+                 head_dim=16)
+    tl_params = init_params(mc, key=jax.random.PRNGKey(0))
+    bench_one("tinyllama_reduced", tl_params,
+              param_stack_dims(mc, tl_params))
+    return rows
+
+
 def _timeit(fn, *args, reps=10):
     out = fn(*args)
     jax.block_until_ready(out)
@@ -133,8 +250,12 @@ def streaming_gram(m=14, n=4_000_000, reps=10) -> List[str]:
     """
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    # arena=False: this suite measures the PER-LEAF streaming engine
+    # against the seed recompute with direct snapshots.* calls (one big
+    # leaf, so there is nothing to bucket anyway — the arena story has its
+    # own suite, arena_bench)
     cfg = DMDConfig(m=m, s=55, tol=1e-4, anchor="first", warmup_steps=0,
-                    cooldown_steps=0, streaming_gram=True)
+                    cooldown_steps=0, streaming_gram=True, arena=False)
     acc_s = DMDAccelerator(cfg)
     acc_r = DMDAccelerator(dataclasses.replace(cfg, streaming_gram=False))
     bufs = acc_s.init(params)
@@ -527,7 +648,13 @@ def controller(steps=450, sizes=(6, 40, 100, 400), m=14, s=55,
         if after and after[0] > pre * 1.10:
             unrecovered += 1
 
-    # gate overhead: jitted gated vs ungated jump on identical cloned state
+    # gate overhead: jitted gated vs ungated jump on identical cloned state.
+    # DONATED like the Trainer's deployment (donate_argnums=(0,)) — the old
+    # un-donated jit here silently dropped the donation the controller path
+    # relies on, so the measured "gate overhead" included params/buffer
+    # copies the real training loop never pays. Donation invalidates the
+    # input state, so each rep RETHREADS the returned state instead of
+    # re-passing the same clone (jump steps are state -> state).
     from repro.train.step import make_dmd_step
     jump_step = next(t for t in range(steps)
                      if tr_ctl.acc.apply_groups(t))
@@ -539,16 +666,17 @@ def controller(steps=450, sizes=(6, 40, 100, 400), m=14, s=55,
 
     gated = jax.jit(make_dmd_step(acfg_for(True), acc=tr_ctl.acc,
                                   model=_MLPModel(sizes)),
-                    static_argnames=("groups",))
+                    donate_argnums=(0,), static_argnames=("groups",))
     plain = jax.jit(make_dmd_step(acfg_for(False), acc=tr_fix.acc),
-                    static_argnames=("groups",))
+                    donate_argnums=(0,), static_argnames=("groups",))
 
-    def walls(fn, *args, reps=7):
-        fn(*args)                                     # compile
+    def walls(fn, st, reps=7):
+        st = fn(st)[0]                                # compile
         ts = []
         for _ in range(reps):
             t0 = time.time()
-            jax.block_until_ready(fn(*args)[0].params)
+            st, _ = fn(st)
+            jax.block_until_ready(st.params)
             ts.append(time.time() - t0)
         return float(np.median(ts)) * 1e3
 

@@ -87,7 +87,7 @@ def measure(acfg, shape, mesh, ga_one: bool = True) -> dict:
     with mesh_context(mesh):
         # scan_layers=False: unrolled layer stacks so cost_analysis sees every
         # layer (scan bodies are counted once regardless of trip count).
-        fn, args, shardings, model, donate = build_step(acfg, shape, mesh,
+        fn, args, shardings, model, donate, _ = build_step(acfg, shape, mesh,
                                                         scan_layers=False)
         compiled = jax.jit(fn, in_shardings=shardings,
                            donate_argnums=donate).lower(*args).compile()
@@ -156,7 +156,6 @@ def measure_dmd(acfg, mesh) -> dict:
     from repro.models.transformer import LanguageModel
     from repro.train.step import make_dmd_step
     from repro.train.state import TrainState
-    from repro.core import snapshots as snap
     from repro.optim import make_optimizer
     from repro.distributed.sharding import mesh_context
     from repro.launch import inputs as inputs_mod
@@ -168,7 +167,10 @@ def measure_dmd(acfg, mesh) -> dict:
     opt_state = jax.eval_shape(opt.init, params)
     acc = DMDAccelerator(acfg.dmd, mesh=mesh,
                          stack_dims=model.param_stack_dims())
-    bufs = snap.init_buffers(params, acfg.dmd, acc.plans_for(params))
+    # acc.init: the DEPLOYED snapshot layout — packed arenas + per-leaf
+    # remainder (DESIGN.md §7) — so the roofline prices the same program
+    # the trainer runs, not the per-leaf A/B oracle
+    bufs = acc.init(params)
     state = TrainState(params, opt_state, jax.ShapeDtypeStruct((), jnp.int32),
                        bufs)
     step = make_dmd_step(acfg, mesh=mesh, acc=acc)
@@ -176,7 +178,8 @@ def measure_dmd(acfg, mesh) -> dict:
     per_group = []
     with mesh_context(mesh):
         st_specs = inputs_mod.state_specs(state, mesh,
-                                          plans=acc.plans_for(params))
+                                          plans=acc.plans_for(params),
+                                          arena=acc.arena_for(params))
         for g in acc.groups:
             # groups positional + static: pjit rejects kwargs when
             # in_shardings is given

@@ -8,6 +8,15 @@ checkpoint. keep=k prunes old steps.
 Elastic restore: leaves are loaded as host numpy then device_put against the
 CURRENT mesh's shardings — a checkpoint written on one topology restores onto
 any other (tested across different host-device counts).
+
+Packed-arena states (DESIGN.md §7) are saved/restored LEAF-WISE: the Trainer
+unpacks the per-bucket (m, N) ring buffers into per-leaf buffers/Grams
+(``DMDAccelerator.state_leafwise``) before calling save_checkpoint here, and
+re-packs after restore — so the manifest paths and on-disk format are
+identical whether ``dmd.arena`` is on or off, pre-arena checkpoints load
+unchanged, and the elastic re-placement above keeps operating on the audited
+per-leaf PartitionSpecs. Nothing in this module needs to know about arenas;
+the format contract is the point.
 """
 from __future__ import annotations
 

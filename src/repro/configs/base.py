@@ -169,6 +169,20 @@ class DMDConfig:
                                     # at every apply), kept as the A/B
                                     # baseline and correctness oracle.
                                     # Requires anchor in {none, first}.
+    arena: bool = True              # pack compatible leaves (same schedule
+                                    # group / dtype / sharding class) into
+                                    # contiguous per-bucket arenas: ONE
+                                    # segmented kernel launch and ONE batched
+                                    # coefficient solve per group instead of
+                                    # one per leaf (core/arena.py,
+                                    # DESIGN.md §7). False = the per-leaf
+                                    # route everywhere — the bit-exact A/B
+                                    # oracle.
+    arena_block_n: int = 512        # arena segment quantum / kernel n-tile
+                                    # cap (rounded to 128-lane multiples and
+                                    # clamped to the bucket's widest member);
+                                    # every segment is padded to a multiple
+                                    # so kernel blocks never straddle leaves
     kernel_route: str = "auto"      # auto | pallas_flat | pallas_shard_map |
                                     # dot_general: force the per-leaf kernel
                                     # route in core/leafplan.py. "auto" picks

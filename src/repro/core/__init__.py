@@ -3,13 +3,15 @@ from repro.core.dmd import (
     combine_snapshots, dmd_extrapolate, dmd_eigenvalues,
 )
 from repro.core.accelerator import DMDAccelerator
+from repro.core.arena import ArenaBucket, ArenaSegment, build_arenas
 from repro.core.controller import ControllerState
 from repro.core.leafplan import LeafPlan, build_plans, plan_table
-from repro.core import controller, leafplan, snapshots
+from repro.core import arena, controller, leafplan, snapshots
 
 __all__ = [
     "gram_matrix", "gram_row_matrix", "set_gram_row", "dmd_coefficients",
     "combine_snapshots", "dmd_extrapolate", "dmd_eigenvalues",
-    "DMDAccelerator", "ControllerState", "LeafPlan", "build_plans",
-    "plan_table", "controller", "leafplan", "snapshots",
+    "DMDAccelerator", "ArenaBucket", "ArenaSegment", "build_arenas",
+    "ControllerState", "LeafPlan", "build_plans",
+    "plan_table", "arena", "controller", "leafplan", "snapshots",
 ]

@@ -39,13 +39,25 @@ and `plan_table()` renders the audited dispatch table with the schedule
 columns (group / m / phase):
 
     print(acc.plan_table(params))
-    # path            route            group    m   s  phase energy stack ...
-    # /seg0/attn/wqkv pallas_shard_map default  14  55 0     -      1
-    # /final_norm/... pallas_flat      norms    6   24 7     0.995  0
+    # path            route            group    m   s  phase energy stack arena        off ...
+    # /seg0/attn/wqkv pallas_shard_map default  14  55 0     -      1     g0-bfloat16  0
+    # /final_norm/... pallas_flat      norms    6   24 7     0.995  0     g1-bfloat16  4096
 
 (`s` is the group's configured horizon — the static cap the controller's
 adapted horizon lives under; `energy` shows the controller-mode
-cumulative-energy rank target, "-" while the tol mask rules.)
+cumulative-energy rank target, "-" while the tol mask rules; `arena` /
+`off` show each leaf's packed-bucket assignment and lane offset —
+core/arena.py, DESIGN.md §7 — "-" for leaves kept on the per-leaf route.)
+
+Packed arenas (core/arena.py, DESIGN.md §7): with cfg.arena (default on)
+all compatible leaves of a schedule group are packed into contiguous
+per-bucket (m, N) ring buffers at init — the snapshot/Gram/combine data
+passes then cost ONE segmented kernel launch per bucket per step
+(kernels/arena.py) and the jump ONE batched coefficient solve per group,
+instead of one launch + one eigensolve per leaf. `arena_for(params)`
+exposes the bucket table; `init`/`record`/`apply` transparently carry the
+``{"__arena__": ..., "leaf": ...}`` two-route state. cfg.arena=False is
+the per-leaf A/B oracle (bit-exact with the pre-arena route).
 
 Streaming Gram (DESIGN.md §2): with cfg.streaming_gram the (stack..., m, m)
 Gram is maintained incrementally — each record adds one O(m*n) row pass —
@@ -70,6 +82,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import arena as arena_mod
 from repro.core import dmd, leafplan, schedule as sched_mod
 from repro.core import snapshots as snap
 
@@ -133,7 +146,7 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax,
 
 def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
               grams: PyTree, relax, groups: Optional[Sequence[int]] = None,
-              s_vec=None) -> Tuple[PyTree, jnp.ndarray]:
+              s_vec=None, arena=None) -> Tuple[PyTree, jnp.ndarray]:
     """Whole-pytree DMD jump keyed by the plan table: returns (new_params,
     mean_rank). Excluded leaves (plan None) pass through untouched.
 
@@ -144,9 +157,35 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
     group. `relax` is a scalar or a per-group (n_groups,) vector indexed by
     ``plan.group`` (each group anneals on its own round counter). `s_vec`
     (controller mode) is a traced per-group (n_groups,) int vector of
-    adapted horizons — None keeps each group's static configured s."""
+    adapted horizons — None keeps each group's static configured s.
+
+    `arena` (the accelerator's bucket table, core/arena.py) serves every
+    arena'd leaf through the packed route: one batched coefficient solve
+    per jumping group plus one segmented combine launch per bucket; the
+    per-leaf tree_map below then only sees the leaves the arena could not
+    take (their buffer entries in the ``leaf`` subtree are None for arena'd
+    paths, so the two routes partition the tree cleanly)."""
     gset = None if groups is None else frozenset(int(g) for g in groups)
     per_group = getattr(relax, "ndim", 0) == 1
+
+    arena_updates: dict = {}
+    ranks: list = []
+    if arena_mod.is_arena_state(buffers):
+        if not arena:
+            # Refuse loudly: with `arena or {}` the packed leaves would
+            # silently pass through UNJUMPED (their `leaf` entries are
+            # None, so neither route would touch them).
+            raise ValueError(
+                "buffers are arena-packed but no bucket table was given — "
+                "pass arena=acc.arena_for(params) (the accelerator that "
+                "built these buffers)")
+        arenas, buffers = arena_mod.split_state(buffers)
+        agrams, grams = (arena_mod.split_state(grams)
+                         if arena_mod.is_arena_state(grams) else (None, grams))
+        arena_updates, ranks = arena_mod.jump(
+            cfg, arena, params, arenas, agrams, relax, groups=gset,
+            s_vec=s_vec)
+        ranks = list(ranks)
 
     def one(plan, p, buf, g):
         if plan is None or buf is None:
@@ -164,8 +203,15 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
     new_params = jax.tree_util.tree_map(
         lambda o: o.params if isinstance(o, LeafJump) else o, out,
         is_leaf=is_jump)
-    ranks = [o.rank for o in jax.tree_util.tree_leaves(out, is_leaf=is_jump)
-             if isinstance(o, LeafJump)]
+    if arena_updates:
+        from repro.distributed.sharding import normalize_path
+
+        def overlay(kp, p):
+            return arena_updates.get(
+                normalize_path(jax.tree_util.keystr(kp)), p)
+        new_params = jax.tree_util.tree_map_with_path(overlay, new_params)
+    ranks += [o.rank for o in jax.tree_util.tree_leaves(out, is_leaf=is_jump)
+              if isinstance(o, LeafJump)]
     mean_rank = (jnp.mean(jnp.stack([r.astype(jnp.float32) for r in ranks]))
                  if ranks else jnp.zeros((), jnp.float32))
     return new_params, mean_rank
@@ -192,6 +238,7 @@ class DMDAccelerator:
         self.n_groups = len(self.groups)
         self._plans = None
         self._plans_key = None
+        self._arena = None
         self._apply_jit = None
 
     @property
@@ -233,17 +280,46 @@ class DMDAccelerator:
             self._plans = leafplan.build_plans(params, self.cfg, self.mesh,
                                                self.stack_dims)
             self._plans_key = key
+            self._arena = None
         return self._plans
 
-    def plan_table(self, params: Optional[PyTree] = None) -> str:
-        """Audited dispatch-table dump (path / route / stack / shape / spec
-        per selected leaf). Needs the plans built — pass `params` on first
-        use."""
-        if params is not None:
-            self.plans_for(params)
+    @property
+    def arena_on(self) -> bool:
+        """Packed-arena route active? (core/arena.py, DESIGN.md §7).
+        Off (``dmd.arena=False``) = the per-leaf route everywhere — the
+        bit-exact A/B oracle."""
+        return bool(self.cfg.enabled and getattr(self.cfg, "arena", True))
+
+    def arena_for(self, params: PyTree):
+        """The bucket table ({key: ArenaBucket}) for `params` — built once
+        per plan table (same cache key), empty when arenas are off or no
+        leaf is eligible. Static metadata only, so trace-safe like
+        plans_for."""
+        self.plans_for(params)
+        return self._arena_table()
+
+    def _arena_table(self):
+        """Bucket table from the CURRENT plan cache (the one builder —
+        arena_for and plan_table both route here, so the audited dump and
+        the running kernels can never see different bucketings)."""
         if self._plans is None:
             raise ValueError("no plans built yet — pass params")
-        return leafplan.plan_table(self._plans)
+        if self._arena is None:
+            self._arena = (arena_mod.build_arenas(self._plans, self.cfg,
+                                                  self.mesh)
+                           if self.arena_on else {})
+        return self._arena
+
+    def plan_table(self, params: Optional[PyTree] = None) -> str:
+        """Audited dispatch-table dump per selected leaf: kernel route,
+        schedule group / m / s / phase / energy, stack dims, shapes, the
+        packed-arena assignment (`arena` = bucket key, `off` = the leaf's
+        lane offset in the bucket — "-" for per-leaf-route leaves), and the
+        PartitionSpec / psum axes. Needs the plans built — pass `params`
+        on first use."""
+        if params is not None:
+            self.plans_for(params)
+        return leafplan.plan_table(self._plans, self._arena_table())
 
     # ---- schedule ---------------------------------------------------------
     # Per-group cycle after warmup+phase: [cooldown unrecorded steps]
@@ -300,17 +376,43 @@ class DMDAccelerator:
 
     # ---- state ------------------------------------------------------------
     def init(self, params: PyTree) -> PyTree:
+        """Snapshot state for `params`. With arenas on (DESIGN.md §7) this
+        is the two-route wrapper ``{"__arena__": {bucket: (m, N) ring
+        buffer}, "leaf": per-leaf pytree}`` — arena'd leaves live packed,
+        the rest (dot_general oracle / sharded stack axes) keep their
+        per-leaf (m, *shape) buffers; otherwise the plain per-leaf pytree.
+        Abstract-aware either way (ShapeDtypeStruct in -> out)."""
         if not self.cfg.enabled:
             return None
-        return snap.init_buffers(params, self.cfg, self.plans_for(params))
+        plans = self.plans_for(params)
+        table = self.arena_for(params)
+        skip = arena_mod.arena_paths(table) if table else None
+        leaf = snap.init_buffers(params, self.cfg, plans, skip_paths=skip)
+        if not table:
+            return leaf
+        abstract = any(isinstance(l, jax.ShapeDtypeStruct)
+                       for l in jax.tree_util.tree_leaves(params))
+        return arena_mod.make_state(
+            arena_mod.init_arena_buffers(table, self.cfg, abstract=abstract),
+            leaf)
 
     def init_grams(self, buffers: PyTree) -> Optional[PyTree]:
-        """Running-Gram pytree mirroring `buffers` (None when not streaming)."""
+        """Running-Gram state mirroring `buffers` (None when not streaming):
+        per-bucket (n_sys, m, m) stacks for the arenas, per-leaf
+        (stack..., m, m) leaves for the rest."""
         if buffers is None or not self.streaming:
             return None
         if self._plans is None:
             raise ValueError("init_grams before init: no LeafPlan table yet")
-        return snap.init_grams(buffers, self.cfg, self._plans)
+        if not arena_mod.is_arena_state(buffers):
+            return snap.init_grams(buffers, self.cfg, self._plans)
+        arenas, leaf = arena_mod.split_state(buffers)
+        abstract = any(isinstance(l, jax.ShapeDtypeStruct)
+                       for l in jax.tree_util.tree_leaves(buffers))
+        return arena_mod.make_state(
+            arena_mod.init_arena_grams(self._arena_table(),
+                                       abstract=abstract),
+            snap.init_grams(leaf, self.cfg, self._plans))
 
     def record(self, buffers: PyTree, params: PyTree, slot,
                grams: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
@@ -327,19 +429,99 @@ class DMDAccelerator:
                 f"{self.n_groups} schedule groups need the per-group slot "
                 "vector — pass acc.slots(step), not a scalar slot")
         plans = self.plans_for(params)
-        new_bufs = snap.record(buffers, params, slot, plans)
+        if not arena_mod.is_arena_state(buffers):
+            new_bufs = snap.record(buffers, params, slot, plans)
+            if grams is None:
+                return new_bufs, None
+            return new_bufs, snap.update_grams(grams, new_bufs, params, slot,
+                                               self.cfg, plans)
+        table = self.arena_for(params)
+        arenas, leaf = arena_mod.split_state(buffers)
+        arenas = arena_mod.record(arenas, params, slot, table, self.cfg)
+        leaf = snap.record(leaf, params, slot, plans)
+        new_bufs = arena_mod.make_state(arenas, leaf)
         if grams is None:
             return new_bufs, None
-        new_grams = snap.update_grams(grams, new_bufs, params, slot,
-                                      self.cfg, plans)
+        agrams, lgrams = arena_mod.split_state(grams)
+        new_grams = arena_mod.make_state(
+            arena_mod.update_grams(agrams, arenas, slot, self.cfg, table),
+            snap.update_grams(lgrams, leaf, params, slot, self.cfg, plans))
         return new_bufs, new_grams
+
+    # ---- checkpoint format (leaf-wise arena views) ------------------------
+    def state_leafwise(self, state):
+        """TrainState -> the same state with arenas unpacked into the
+        per-leaf buffer/Gram pytrees (the ``dmd.arena=False`` layout).
+        Checkpoints are ALWAYS written in this form, so they are
+        byte-compatible across arena on/off, pre-arena checkpoints restore
+        unchanged, and elastic remapped-mesh restore keeps using the
+        audited per-leaf PartitionSpecs. No-op when nothing is packed."""
+        if state is None or not arena_mod.is_arena_state(state.dmd_buffers):
+            return state
+        from repro.distributed.sharding import normalize_path
+        table = self.arena_for(state.params)
+        arenas, leaf = arena_mod.split_state(state.dmd_buffers)
+        by_path = arena_mod.buffers_leafwise(table, arenas)
+
+        def fill(from_paths):
+            def one(kp, x):
+                return from_paths.get(
+                    normalize_path(jax.tree_util.keystr(kp)), x)
+            return one
+
+        bufs = jax.tree_util.tree_map_with_path(
+            fill(by_path), leaf, is_leaf=lambda x: x is None)
+        grams = state.dmd_gram
+        if arena_mod.is_arena_state(grams):
+            agrams, lgrams = arena_mod.split_state(grams)
+            g_by_path = arena_mod.grams_leafwise(table, agrams)
+            grams = jax.tree_util.tree_map_with_path(
+                fill(g_by_path), lgrams, is_leaf=lambda x: x is None)
+        return state._replace(dmd_buffers=bufs, dmd_gram=grams)
+
+    def state_arenaize(self, state):
+        """Inverse of state_leafwise: re-pack a restored per-leaf state
+        into the arena layout this accelerator runs with (no-op when
+        arenas are off / empty / already packed)."""
+        if state is None or state.dmd_buffers is None \
+                or arena_mod.is_arena_state(state.dmd_buffers) \
+                or not self.arena_on:
+            return state
+        table = self.arena_for(state.params)
+        if not table:
+            return state
+        from repro.distributed.sharding import normalize_path
+        paths = arena_mod.arena_paths(table)
+
+        def by_path_of(tree):
+            flat = jax.tree_util.tree_flatten_with_path(
+                tree, is_leaf=lambda x: x is None)[0]
+            return {normalize_path(jax.tree_util.keystr(kp)): leaf
+                    for kp, leaf in flat}
+
+        def strip(tree):
+            return jax.tree_util.tree_map_with_path(
+                lambda kp, x: None
+                if normalize_path(jax.tree_util.keystr(kp)) in paths else x,
+                tree, is_leaf=lambda x: x is None)
+
+        bufs = arena_mod.make_state(
+            arena_mod.buffers_from_leafwise(table, by_path_of(
+                state.dmd_buffers), self.cfg), strip(state.dmd_buffers))
+        grams = state.dmd_gram
+        if grams is not None and self.streaming:
+            grams = arena_mod.make_state(
+                arena_mod.grams_from_leafwise(table, by_path_of(grams)),
+                strip(grams))
+        return state._replace(dmd_buffers=bufs, dmd_gram=grams)
 
     # ---- the DMD jump -----------------------------------------------------
     def _apply_impl(self, params: PyTree, buffers: PyTree, grams: PyTree,
                     relax: jnp.ndarray, groups=None) -> Tuple[PyTree, dict]:
         plans = self.plans_for(params)
         new_params, mean_rank = jump_tree(self.cfg, plans, params, buffers,
-                                          grams, relax, groups=groups)
+                                          grams, relax, groups=groups,
+                                          arena=self.arena_for(params))
         return new_params, {"mean_rank": mean_rank}
 
     def apply(self, params: PyTree, buffers: PyTree,

@@ -1,0 +1,565 @@
+"""Packed leaf arenas: one buffer, one launch, one solve per bucket (§7).
+
+The paper's speedup argument is operation-count reduction, but the realized
+wall-clock of the per-leaf pipeline is dominated by *dispatch*: every
+DMD-managed leaf pays its own ``record`` / ``gram_row`` / ``combine``
+kernel launch via tree_map and its own tiny (m, m) eigensolve, so a
+transformer config with hundreds of leaves pays hundreds of launches per
+recorded step and a long unrolled jitted trace. The Koopman-mode view
+(Manojlović et al.) and Turjeman et al.'s correlated-dynamics observation
+both treat the whole weight state as one dynamical system — which is also
+exactly the layout that runs fastest on hardware: one contiguous buffer,
+one kernel, one batched solve.
+
+This module buckets all compatible leaves at accelerator init —
+
+    bucket key = (schedule group, param dtype, lane-sharding axes)
+
+— into one contiguous flat arena per bucket, with an offset/length table
+(``ArenaSegment``) carried on the ``ArenaBucket`` alongside the LeafPlan
+pytree. Per-system segments (a "system" = one independent DMD trajectory:
+an unstacked leaf, or one layer of a scan-stacked leaf) are padded to a
+multiple of the bucket's ``block_n`` (itself a 128-lane multiple), so the
+segmented kernels in kernels/arena.py can walk the whole arena in ONE
+launch with no block ever straddling systems; tail lanes are zero and
+contribute zero to every inner product (padding is exact).
+
+State layout (TrainState.dmd_buffers / dmd_gram when arenas are active):
+
+    {"__arena__": {bucket_key: (m, N_bucket) ring buffer}, "leaf": pytree}
+    {"__arena__": {bucket_key: (n_sys, m, m) fp32 Grams},  "leaf": pytree}
+
+The ``leaf`` subtree keeps the per-leaf layout for leaves an arena cannot
+take (route forced to ``dot_general``, sharded stack axes) — the two
+routes coexist leaf-by-leaf. ``dmd.arena=False`` disables bucketing
+entirely and keeps the bit-exact per-leaf A/B oracle.
+
+Jump solve: instead of one ``eigh``/``_host_eig`` call per leaf,
+``jump`` concatenates every bucket's Grams of a jumping group into one
+(n_sys_total, m, m) batch and makes ONE ``dmd_coefficients`` call per
+group (``m`` is uniform within a group by construction — the group's
+schedule sizes every member's window), then splits the coefficient rows
+back per bucket for the single segmented combine launch.
+
+Checkpoint compatibility: arenas are serialized LEAF-WISE
+(``buffers_leafwise`` / ``grams_leafwise`` and their inverses) — the
+Trainer unpacks arenas into the per-leaf pytree before ``save_checkpoint``
+and re-packs after restore, so checkpoints are byte-identical between
+arena on/off, pre-arena checkpoints load unchanged, and elastic restore
+onto a remapped mesh keeps using the audited per-leaf PartitionSpecs.
+Pack/unpack is lossless (pad lanes are zero on both sides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import dmd as dmd_math
+from repro.core.leafplan import LeafPlan, plan_entries
+from repro.core.schedule import GroupSchedule
+from repro.core.snapshots import _static_int
+
+PyTree = Any
+
+ARENA_KEY = "__arena__"
+
+
+@dataclass(frozen=True)
+class ArenaSegment:
+    """One leaf's slice of a bucket's lane axis (the offset/length table).
+
+    A leaf with k stack dims contributes ``n_sys = prod(stack_shape)``
+    consecutive systems, each occupying ``seg_lanes`` lanes (``flat_local``
+    real + zero tail). ``*_local`` fields are shard-local for sharded
+    buckets (every device holds the same layout over its own shards)."""
+    path: str
+    sys_start: int                 # first system index within the bucket
+    lane_start: int                # first (shard-local) lane offset
+    n_sys: int                     # independent DMD systems in this leaf
+    flat_local: int                # real lanes per system (unpadded)
+    seg_lanes: int                 # padded lanes per system (block multiple)
+    shape: Tuple[int, ...]         # full global leaf shape
+    local_shape: Tuple[int, ...]   # shard-local leaf shape
+    stack_dims: int
+    param_dtype: str
+    param_spec: P
+    snapshot_spec: P
+
+    @property
+    def lanes(self) -> int:
+        return self.n_sys * self.seg_lanes
+
+
+@dataclass(frozen=True)
+class ArenaBucket:
+    """One packed arena: all leaves of one (group, dtype, sharding) class."""
+    key: str
+    group: int
+    sched: GroupSchedule
+    block_n: int                   # segment quantum / kernel tile (128-mult)
+    segments: Tuple[ArenaSegment, ...]
+    lane_axes: Tuple[str, ...]     # mesh axes sharding the lane dim (== the
+                                   # Gram psum axes; () = unsharded bucket)
+    shard_factor: int              # prod of lane_axes' mesh sizes
+    mesh: Optional[Mesh] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def m(self) -> int:
+        return self.sched.m
+
+    @property
+    def n_sys(self) -> int:
+        return sum(s.n_sys for s in self.segments)
+
+    @property
+    def n_lanes_local(self) -> int:
+        return sum(s.lanes for s in self.segments)
+
+    @property
+    def n_lanes(self) -> int:
+        """Global lane count of the carried (m, N) array."""
+        return self.n_lanes_local * self.shard_factor
+
+    def block_sys(self) -> np.ndarray:
+        """Static (shard-local) block -> system-index table for the
+        segmented kernels; blocks of one system are consecutive."""
+        parts = [np.repeat(
+            np.arange(s.sys_start, s.sys_start + s.n_sys, dtype=np.int32),
+            s.seg_lanes // self.block_n) for s in self.segments]
+        return np.concatenate(parts) if parts else np.zeros(0, np.int32)
+
+    def lane_spec(self) -> P:
+        from repro.kernels.arena import lane_spec
+        return lane_spec(self.lane_axes)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing
+# ---------------------------------------------------------------------------
+
+def _axes_of(entries, mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    """Mesh axes (size > 1) appearing in a run of PartitionSpec entries."""
+    if mesh is None:
+        return ()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out: List[str] = []
+    for e in entries:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None and sizes.get(a, 1) > 1 and a not in out:
+                out.append(a)
+    return tuple(sorted(out))
+
+
+def _local_shape(plan: LeafPlan, mesh: Optional[Mesh]) -> Tuple[int, ...]:
+    if mesh is None:
+        return plan.shape
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ent = tuple(plan.param_spec) + (None,) * len(plan.shape)
+    out = []
+    for d, e in zip(plan.shape, ent):
+        f = 1
+        if e is not None:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None:
+                    f *= sizes.get(a, 1)
+        out.append(d // f)
+    return tuple(out)
+
+
+def arena_eligible(plan: LeafPlan, cfg, mesh: Optional[Mesh]) -> bool:
+    """A leaf joins an arena unless it must keep its per-leaf route:
+    the forced ``dot_general`` oracle, anchors without a fused kernel
+    (``mean`` re-anchors every row), or stack axes sharded across devices
+    (systems would straddle shards — the per-leaf shard_map route handles
+    those)."""
+    if not getattr(cfg, "arena", True):
+        return False
+    if plan.route == "dot_general":
+        return False
+    if cfg.anchor not in ("none", "first"):
+        return False
+    ent = tuple(plan.param_spec) + (None,) * plan.stack_dims
+    if _axes_of(ent[:plan.stack_dims], mesh):
+        return False                       # sharded stack axes
+    return True
+
+
+def build_arenas(plans: PyTree, cfg, mesh: Optional[Mesh] = None
+                 ) -> Dict[str, ArenaBucket]:
+    """LeafPlan pytree -> {bucket_key: ArenaBucket}, leaves in pytree order.
+
+    Bucket key = (schedule group, param dtype, lane-sharding axes): one
+    slot schedule (group fixes m/phase), one cast-back dtype, one psum
+    pattern per bucket. ``block_n`` is the bucket-wide segment quantum:
+    ``lane_block(cfg.arena_block_n, widest member)`` so tiny-leaf buckets
+    collapse to one 128-lane tile while big buckets keep wide tiles."""
+    from repro.kernels.ops import lane_block
+
+    grouped: Dict[str, List[Tuple[LeafPlan, Tuple[str, ...]]]] = {}
+    for plan in plan_entries(plans):
+        if not arena_eligible(plan, cfg, mesh):
+            continue
+        ent = tuple(plan.param_spec) + (None,) * len(plan.shape)
+        lane_axes = _axes_of(ent[plan.stack_dims:], mesh)
+        key = f"g{plan.group}-{plan.dtype}"
+        if lane_axes:
+            key += "-" + "+".join(lane_axes)
+        grouped.setdefault(key, []).append((plan, lane_axes))
+
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else {})
+    out: Dict[str, ArenaBucket] = {}
+    for key in sorted(grouped):
+        members = grouped[key]
+        locals_ = [_local_shape(p, mesh) for p, _ in members]
+        flats = [int(np.prod(ls[p.stack_dims:], dtype=np.int64) or 1)
+                 for (p, _), ls in zip(members, locals_)]
+        block_n = lane_block(int(getattr(cfg, "arena_block_n", 512)),
+                             max(flats))
+        segs: List[ArenaSegment] = []
+        sys_i = lane_i = 0
+        for (plan, lane_axes), lshape, flat in zip(members, locals_, flats):
+            n_sys = int(np.prod(plan.stack_shape, dtype=np.int64)) \
+                if plan.stack_dims else 1
+            seg_lanes = -(-flat // block_n) * block_n
+            segs.append(ArenaSegment(
+                path=plan.path, sys_start=sys_i, lane_start=lane_i,
+                n_sys=n_sys, flat_local=flat, seg_lanes=seg_lanes,
+                shape=plan.shape, local_shape=lshape,
+                stack_dims=plan.stack_dims, param_dtype=plan.dtype,
+                param_spec=plan.param_spec,
+                snapshot_spec=plan.snapshot_spec))
+            sys_i += n_sys
+            lane_i += n_sys * seg_lanes
+        lane_axes = members[0][1]
+        factor = 1
+        for a in lane_axes:
+            factor *= sizes.get(a, 1)
+        out[key] = ArenaBucket(
+            key=key, group=members[0][0].group, sched=members[0][0].sched,
+            block_n=block_n, segments=tuple(segs), lane_axes=lane_axes,
+            shard_factor=factor, mesh=mesh)
+    return out
+
+
+def arena_paths(table: Dict[str, ArenaBucket]) -> frozenset:
+    return frozenset(s.path for b in table.values() for s in b.segments)
+
+
+# ---------------------------------------------------------------------------
+# State: the {"__arena__": ..., "leaf": ...} wrapper
+# ---------------------------------------------------------------------------
+
+def is_arena_state(x) -> bool:
+    return isinstance(x, dict) and ARENA_KEY in x
+
+
+def make_state(arenas: Dict[str, jnp.ndarray], leaf: PyTree) -> PyTree:
+    return {ARENA_KEY: arenas, "leaf": leaf}
+
+
+def split_state(x) -> Tuple[Dict[str, jnp.ndarray], PyTree]:
+    return x[ARENA_KEY], x["leaf"]
+
+
+def init_arena_buffers(table: Dict[str, ArenaBucket], cfg,
+                       abstract: bool = False) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.snapshot_dtype)
+    out = {}
+    for key, b in table.items():
+        shape = (b.m, b.n_lanes)
+        out[key] = (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                    else jnp.zeros(shape, dtype))
+    return out
+
+
+def init_arena_grams(table: Dict[str, ArenaBucket], abstract: bool = False
+                     ) -> Dict[str, Any]:
+    out = {}
+    for key, b in table.items():
+        shape = (b.n_sys, b.m, b.m)
+        out[key] = (jax.ShapeDtypeStruct(shape, jnp.float32) if abstract
+                    else jnp.zeros(shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack (the gather/scatter copies; shard-local for sharded buckets)
+# ---------------------------------------------------------------------------
+
+def _pack_leaf_local(x: jnp.ndarray, seg: ArenaSegment, dtype,
+                     lead: int = 0) -> jnp.ndarray:
+    """(lead..., stack..., rest_local...) -> (lead..., n_sys * seg_lanes)."""
+    head = x.shape[:lead]
+    x = x.astype(dtype).reshape(head + (seg.n_sys, seg.flat_local))
+    if seg.seg_lanes != seg.flat_local:
+        pad = [(0, 0)] * lead + [(0, 0), (0, seg.seg_lanes - seg.flat_local)]
+        x = jnp.pad(x, pad)
+    return x.reshape(head + (seg.n_sys * seg.seg_lanes,))
+
+
+def _unpack_leaf_local(row: jnp.ndarray, seg: ArenaSegment,
+                       lead: int = 0) -> jnp.ndarray:
+    """(lead..., N_local) -> (lead..., *local_shape) (caller casts)."""
+    head = row.shape[:lead]
+    x = jax.lax.slice_in_dim(row, seg.lane_start,
+                             seg.lane_start + seg.lanes, axis=lead)
+    x = x.reshape(head + (seg.n_sys, seg.seg_lanes))
+    x = jax.lax.slice_in_dim(x, 0, seg.flat_local, axis=lead + 1)
+    return x.reshape(head + seg.local_shape)
+
+
+def _shard_wrap(bucket: ArenaBucket, fn, in_specs, out_specs):
+    """One shard_map contract for pack/unpack AND the kernels: delegate to
+    kernels/arena.py's shard_wrap so the two paths can never diverge."""
+    from repro.kernels.arena import shard_wrap
+    return shard_wrap(bucket.mesh, bucket.lane_axes, fn, in_specs,
+                      out_specs)
+
+
+def _params_by_path(params: PyTree) -> Dict[str, Any]:
+    from repro.distributed.sharding import normalize_path
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return {normalize_path(jax.tree_util.keystr(kp)): leaf
+            for kp, leaf in flat}
+
+
+def pack_row(bucket: ArenaBucket, params_by_path: Dict[str, Any],
+             dtype) -> jnp.ndarray:
+    """Current params -> one (N,) arena row (the `record` gather)."""
+    leaves = [params_by_path[s.path] for s in bucket.segments]
+
+    def local(*ls):
+        return jnp.concatenate(
+            [_pack_leaf_local(x, s, dtype)
+             for x, s in zip(ls, bucket.segments)])
+
+    in_specs = tuple(s.param_spec for s in bucket.segments)
+    return _shard_wrap(bucket, local, in_specs, bucket.lane_spec())(*leaves)
+
+
+def _unpack_row(bucket: ArenaBucket, row: jnp.ndarray, lead: int = 0
+                ) -> List[jnp.ndarray]:
+    """One (lead..., N) arena slab -> per-leaf local arrays (uncast)."""
+
+    def local(r):
+        return tuple(_unpack_leaf_local(r, s, lead) for s in bucket.segments)
+
+    spec = P(*((None,) * lead + tuple(bucket.lane_spec())))
+    if lead:
+        out_specs = tuple(P(*((None,) * lead + tuple(s.param_spec)))
+                          for s in bucket.segments)
+    else:
+        out_specs = tuple(s.param_spec for s in bucket.segments)
+    return list(_shard_wrap(bucket, local, (spec,), out_specs)(row))
+
+
+# ---------------------------------------------------------------------------
+# record / streaming-Gram update (one launch per bucket)
+# ---------------------------------------------------------------------------
+
+def _bucket_slot(bucket: ArenaBucket, slot):
+    return slot[bucket.group] if getattr(slot, "ndim", 0) == 1 else slot
+
+
+def record(arenas: Dict[str, jnp.ndarray], params: PyTree, slot,
+           table: Dict[str, ArenaBucket], cfg,
+           group: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Write current params into each bucket's row `slot` — ONE packed
+    gather + ONE dynamic row update per bucket, replacing the per-leaf
+    dynamic-update fan-out. Slot semantics match snapshots.record."""
+    by_path = _params_by_path(params)
+    dtype = jnp.dtype(cfg.snapshot_dtype)
+    out = dict(arenas)
+    for key, buf in arenas.items():
+        b = table[key]
+        if group is not None and b.group != group:
+            continue
+        s = _bucket_slot(b, slot)
+        si = _static_int(s)
+        if si is not None:
+            if si < 0:
+                continue
+            s = si
+        else:
+            s = jnp.maximum(s, 0)
+        row = pack_row(b, by_path, dtype)
+        out[key] = jax.lax.dynamic_update_index_in_dim(buf, row, s, axis=0)
+    return out
+
+
+def update_grams(agrams: Dict[str, jnp.ndarray],
+                 arenas: Dict[str, jnp.ndarray], slot, cfg,
+                 table: Dict[str, ArenaBucket],
+                 group: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Streaming-Gram maintenance over whole buckets: ONE segmented
+    gram_row launch per bucket emits every system's row, then one masked
+    row+column write per bucket (set_gram_row batches over systems). The
+    just-written arena row doubles as the rhs, so no second pack pass."""
+    from repro.kernels import arena as ka
+
+    out = dict(agrams)
+    for key, g in agrams.items():
+        b = table[key]
+        if group is not None and b.group != group:
+            continue
+        s = _bucket_slot(b, slot)
+        si = _static_int(s)
+        if si is not None and si < 0:
+            continue
+        sv = si if si is not None else jnp.maximum(s, 0)
+        buf = arenas[key]
+        q = jax.lax.dynamic_index_in_dim(buf, sv, 0, keepdims=False)
+        row = ka.gram_row(buf, q, b.block_sys(), b.n_sys,
+                          anchor_first=cfg.anchor == "first",
+                          block_n=b.block_n,
+                          mesh=b.mesh, lane_axes=b.lane_axes)
+        out[key] = dmd_math.set_gram_row(g, row, sv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The jump: one batched solve per group, one combine launch per bucket
+# ---------------------------------------------------------------------------
+
+def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
+         arenas: Dict[str, jnp.ndarray],
+         agrams: Optional[Dict[str, jnp.ndarray]], relax,
+         groups: Optional[frozenset] = None, s_vec=None
+         ) -> Tuple[Dict[str, jnp.ndarray], List[jnp.ndarray]]:
+    """DMD jump over every arena'd leaf of the jumping groups.
+
+    Returns ({path: new_leaf (param dtype)}, [per-leaf mean rank ...]).
+    Per group: concatenate the buckets' (n_sys, m, m) Grams, ONE
+    dmd_coefficients call (the batched eigh/host-eig solve — m is uniform
+    within a group), split the coefficient rows back per bucket, ONE
+    segmented combine launch per bucket, then scatter the flat result into
+    per-leaf arrays. Missing/None ``agrams`` entries trigger the one-launch
+    full Gram recompute (the streaming_gram=False A/B path)."""
+    from repro.kernels import arena as ka
+
+    by_path = _params_by_path(params)
+    per_group = getattr(relax, "ndim", 0) == 1
+    updates: Dict[str, jnp.ndarray] = {}
+    ranks: List[jnp.ndarray] = []
+    by_gi: Dict[int, List[ArenaBucket]] = {}
+    for key in sorted(table):
+        by_gi.setdefault(table[key].group, []).append(table[key])
+    # every bucket must have its arena: a missing key would otherwise leave
+    # that bucket's leaves silently unjumped (their `leaf` entries are
+    # None); the indexing below fails loudly instead
+
+    for gi in sorted(by_gi):
+        if groups is not None and gi not in groups:
+            continue
+        buckets = by_gi[gi]
+        grams = []
+        for b in buckets:
+            g = agrams.get(b.key) if agrams is not None else None
+            if g is None:
+                g = ka.gram(arenas[b.key], b.block_sys(), b.n_sys,
+                            anchor_first=cfg.anchor == "first",
+                            block_n=b.block_n,
+                            mesh=b.mesh, lane_axes=b.lane_axes)
+            grams.append(g)
+        gcat = grams[0] if len(grams) == 1 else jnp.concatenate(grams)
+        sched = buckets[0].sched
+        r = relax[gi] if per_group else relax
+        sd = None if s_vec is None else s_vec[gi]
+        c, info = dmd_math.dmd_coefficients(
+            gcat, s=sched.s, tol=cfg.tol, mode=cfg.mode,
+            clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor, affine=cfg.affine,
+            trust_region=cfg.trust_region, relax=r, energy=sched.energy,
+            s_dyn=sd)
+        ofs = 0
+        for b in buckets:
+            cb = jax.lax.slice_in_dim(c, ofs, ofs + b.n_sys, axis=0)
+            rb = jax.lax.slice_in_dim(info["rank"], ofs, ofs + b.n_sys,
+                                      axis=0)
+            ofs += b.n_sys
+            buf = arenas[b.key]
+            flat = ka.combine(buf, cb, b.block_sys(), block_n=b.block_n,
+                              mesh=b.mesh, lane_axes=b.lane_axes)
+            # Same last line of defense as the per-leaf route: a non-finite
+            # BUFFER poisons the combine even under c = e_last (0*inf=NaN);
+            # never leave params less finite than the last snapshot.
+            flat = jnp.where(jnp.isfinite(flat), flat,
+                             buf[-1].astype(flat.dtype))
+            for seg, leaf in zip(b.segments, _unpack_row(b, flat)):
+                p = by_path[seg.path]
+                updates[seg.path] = leaf.astype(p.dtype)
+                ranks.append(jnp.mean(jax.lax.slice_in_dim(
+                    rb, seg.sys_start, seg.sys_start + seg.n_sys, axis=0
+                ).astype(jnp.float32)))
+    return updates, ranks
+
+
+# ---------------------------------------------------------------------------
+# Leaf-wise views (checkpoint format compatibility)
+# ---------------------------------------------------------------------------
+
+def buffers_leafwise(table: Dict[str, ArenaBucket],
+                     arenas: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
+    """{path: (m, *shape) buffer} — the per-leaf layout a non-arena run
+    would carry, sliced out of the arenas (checkpoint save path)."""
+    out = {}
+    for key, buf in arenas.items():
+        b = table[key]
+        for seg, arr in zip(b.segments, _unpack_row(b, buf, lead=1)):
+            out[seg.path] = arr
+    return out
+
+
+def grams_leafwise(table: Dict[str, ArenaBucket],
+                   agrams: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
+    """{path: (stack..., m, m) Gram} per arena'd leaf (checkpoint save)."""
+    out = {}
+    for key, g in agrams.items():
+        b = table[key]
+        for seg in b.segments:
+            sub = jax.lax.slice_in_dim(g, seg.sys_start,
+                                       seg.sys_start + seg.n_sys, axis=0)
+            stack = seg.shape[:seg.stack_dims]
+            out[seg.path] = sub.reshape(stack + (b.m, b.m))
+    return out
+
+
+def buffers_from_leafwise(table: Dict[str, ArenaBucket],
+                          by_path: Dict[str, Any], cfg
+                          ) -> Dict[str, jnp.ndarray]:
+    """Inverse of buffers_leafwise: re-pack restored per-leaf buffers into
+    arenas (checkpoint restore path; pad lanes re-zeroed)."""
+    dtype = jnp.dtype(cfg.snapshot_dtype)
+    out = {}
+    for key, b in table.items():
+        leaves = [by_path[s.path] for s in b.segments]
+
+        def local(*ls, b=b):
+            return jnp.concatenate(
+                [_pack_leaf_local(x, s, dtype, lead=1)
+                 for x, s in zip(ls, b.segments)], axis=1)
+
+        in_specs = tuple(s.snapshot_spec for s in b.segments)
+        out_spec = P(None, *tuple(b.lane_spec()))
+        out[key] = _shard_wrap(b, local, in_specs, out_spec)(*leaves)
+    return out
+
+
+def grams_from_leafwise(table: Dict[str, ArenaBucket],
+                        by_path: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for key, b in table.items():
+        parts = [jnp.asarray(by_path[s.path], jnp.float32
+                             ).reshape(s.n_sys, b.m, b.m)
+                 for s in b.segments]
+        out[key] = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return out

@@ -264,15 +264,25 @@ def plan_summary(plans: PyTree) -> Dict[str, Tuple[str, int]]:
     return {p.path: (p.route, p.stack_dims) for p in plan_entries(plans)}
 
 
-def plan_table(plans: PyTree) -> str:
+def plan_table(plans: PyTree, arena: Optional[dict] = None) -> str:
     """Human-readable audit dump of the whole dispatch table (kernel route
     + schedule group / window / horizon / phase per selected leaf; the
     `energy` column is the group's controller-mode cumulative-energy rank
-    target — "-" while the controller is off, i.e. the tol mask rules)."""
+    target — "-" while the controller is off, i.e. the tol mask rules).
+
+    With the accelerator's arena bucket table (core/arena.py) the `arena`
+    and `off` columns show which packed bucket serves each leaf and the
+    leaf's lane offset inside it ("-" = per-leaf route: dot_general oracle,
+    sharded stack axes, or arenas disabled)."""
+    seg_of = {}
+    for b in (arena or {}).values():
+        for s in b.segments:
+            seg_of[s.path] = (b.key, s.lane_start)
     rows = [("path", "route", "group", "m", "s", "phase", "energy", "stack",
-             "shape", "flat_n", "block_n", "spec", "psum")]
+             "shape", "flat_n", "block_n", "arena", "off", "spec", "psum")]
     for p in plan_entries(plans):
         sched = p.sched
+        akey, aoff = seg_of.get(p.path, ("-", "-"))
         rows.append((p.path, p.route,
                      sched.name if sched is not None else str(p.group),
                      str(p.m if sched is not None else "?"),
@@ -282,7 +292,7 @@ def plan_table(plans: PyTree) -> str:
                       if sched is not None and sched.energy > 0 else "-"),
                      str(p.stack_dims),
                      "x".join(map(str, p.shape)), str(p.flat_size),
-                     str(p.block_n), str(p.param_spec),
+                     str(p.block_n), akey, str(aoff), str(p.param_spec),
                      ",".join(p.psum_axes()) or "-"))
     widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
     lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()

@@ -76,23 +76,27 @@ def selected_paths(params: PyTree, cfg) -> Dict[str, bool]:
     return {path: pred(path, leaf) for path, leaf in _iter_paths(params)}
 
 
-def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None
-                 ) -> PyTree:
+def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None,
+                 skip_paths=None) -> PyTree:
     """Zeros buffer (m_leaf, *shape) per selected leaf; None for excluded
     leaves. The window length is PER LEAF (plan.m — the leaf's schedule
     group), so mixed-m configs size each buffer to its own group.
 
     Selection comes from `plans` when given (the accelerator path), else
     from plans built on the spot (standalone callers with flat pytrees).
-    Abstract-aware: ShapeDtypeStruct params produce ShapeDtypeStruct buffers
-    (the dry-run path must never materialize m x params of zeros).
+    `skip_paths` (a set of normalized paths) excludes leaves served by a
+    packed arena instead (core/arena.py) — those live in the bucket's
+    (m, N) ring buffer, not here. Abstract-aware: ShapeDtypeStruct params
+    produce ShapeDtypeStruct buffers (the dry-run path must never
+    materialize m x params of zeros).
     """
     if plans is None:
         plans = build_plans(params, cfg)
     dtype = jnp.dtype(cfg.snapshot_dtype)
+    skip_paths = skip_paths or frozenset()
 
     def make(plan, leaf):
-        if plan is None:
+        if plan is None or plan.path in skip_paths:
             return None
         shape = (plan.m,) + tuple(leaf.shape)
         if isinstance(leaf, jax.ShapeDtypeStruct):

@@ -1,0 +1,363 @@
+"""Segmented DMD data passes over packed leaf arenas (DESIGN.md §7).
+
+The per-leaf kernels (gram.py / gram_row.py / combine.py, plus their
+shard_map wrappers in sharded.py) pay one launch PER LEAF per pass — a
+transformer config with hundreds of DMD-managed leaves pays hundreds of tiny
+dispatches per recorded step. An arena (core/arena.py) packs every
+compatible leaf of a schedule group into ONE contiguous (m, N) buffer whose
+lane axis is split into per-system segments, each padded to a multiple of
+the bucket's ``block_n`` so no kernel block ever straddles two systems.
+The kernels here then walk the whole arena in a single launch:
+
+  * ``gram_row``  (m, N), (N,)        -> (n_sys, m)    streaming rows
+  * ``gram``      (m, N)              -> (n_sys, m, m) full recompute
+  * ``combine``   (m, N), (n_sys, m)  -> (N,)          the jump blend
+
+Segmentation is driven by a static ``block_sys`` table mapping each
+``block_n``-lane block to its system index (a "system" = one independent
+DMD trajectory: an unstacked leaf, or one stacked layer of a scan-stacked
+leaf). On TPU the table rides in scalar-prefetch memory
+(``PrefetchScalarGridSpec``) and indexes the OUTPUT BlockSpec: consecutive
+blocks of the same system revisit the same (1, m)/(1, m, m) output tile, so
+the per-system reduction accumulates in-place in VMEM with zero extra
+bandwidth — the classic ragged/segmented grid pattern. The CPU/GPU
+reference route computes per-block partials with one batched ``einsum`` and
+reduces them with one ``segment_sum`` — still a single fused XLA op chain,
+which is the whole point: O(buckets) dispatches instead of O(leaves).
+
+Padding is exact everywhere for the same reason as the flat kernels: tail
+lanes of every segment are zero in the arena (core/arena.py packs them so),
+zero lanes contribute zero to every inner product, and the anchor row's
+padding is itself zero. The anchor subtraction stays fused: arena row 0 IS
+the concatenation of every system's anchor slice, because all systems in a
+bucket share one slot schedule (same group).
+
+Sharded buckets (every leaf sharded over the SAME mesh axes on contracted
+dims) reuse sharded.py's pattern: the same local kernels run per shard
+under ``shard_map`` on the locally-packed arena (the lane axis is sharded
+so each device holds its own segments), followed by one O(n_sys·m²)/O(n_sys·m)
+psum for the Gram passes; ``combine`` needs no collective at all.
+
+Backend dispatch matches kernels/ops.py: compiled Pallas on TPU, the
+reference route on CPU/GPU, explicit ``interpret=`` for the
+kernel-vs-oracle contract tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+
+
+def _m_pad(m: int) -> int:
+    return max(-(-m // 8) * 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# Reference route (CPU/GPU oracle): one einsum + one segment_sum per pass
+# ---------------------------------------------------------------------------
+
+def _blocked(x: jnp.ndarray, block_n: int) -> jnp.ndarray:
+    """(m, N) -> (m, nb, block_n) upcast to fp32."""
+    m, n = x.shape
+    return x.astype(jnp.float32).reshape(m, n // block_n, block_n)
+
+
+def gram_row_ref(x: jnp.ndarray, q: jnp.ndarray, block_sys, n_sys: int, *,
+                 anchor_first: bool = False, block_n: int) -> jnp.ndarray:
+    """(m, N), (N,) -> (n_sys, m) of <d_q, d_j> per system.
+
+    Always contracts in fp32, exactly like the per-leaf kernel oracles
+    (kernels/ref.py) and the per-tile upcast in the Pallas bodies — the
+    blocked form never materializes an HBM-sized fp32 copy, so there is
+    no reason to degrade bf16 storage further (cfg.gram_upcast only
+    shapes the dot_general fallback route, which arenas never take).
+
+    Per-block partials via a fused multiply-reduce rather than a batched
+    dot_general: XLA requires batch dims to LEAD a batched contraction, so
+    the einsum form transposes the whole (m, N) buffer (measured 2x record
+    wall on a deep MLP); the broadcast-multiply + lane-axis reduce fuses
+    into one read of the buffer with no transpose."""
+    xf = x.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    if anchor_first:
+        qf = qf - xf[0]
+        xf = xf - xf[:1]
+    m, n = xf.shape
+    xb = xf.reshape(m, n // block_n, block_n)
+    qb = qf.reshape(n // block_n, block_n)
+    part = jnp.sum(xb * qb[None], axis=-1)                    # (m, nb)
+    return jax.ops.segment_sum(part.T, jnp.asarray(block_sys),
+                               num_segments=n_sys, indices_are_sorted=True)
+
+
+def gram_ref(x: jnp.ndarray, block_sys, n_sys: int, *,
+             anchor_first: bool = False, block_n: int) -> jnp.ndarray:
+    """(m, N) -> (n_sys, m, m) full Grams, one per system (fp32
+    contraction regardless of storage dtype — see gram_row_ref)."""
+    xf = x.astype(jnp.float32)
+    if anchor_first:
+        xf = xf - xf[:1]
+    m, n = xf.shape
+    xb = xf.reshape(m, n // block_n, block_n)
+    part = jnp.einsum("mnb,knb->nmk", xb, xb,
+                      preferred_element_type=jnp.float32)     # (nb, m, m)
+    return jax.ops.segment_sum(part, jnp.asarray(block_sys),
+                               num_segments=n_sys, indices_are_sorted=True)
+
+
+def combine_ref(x: jnp.ndarray, c: jnp.ndarray, block_sys, *,
+                block_n: int) -> jnp.ndarray:
+    """(m, N), (n_sys, m) -> (N,) = S^T c_sys per lane's own system.
+
+    Always fp32, like the per-leaf ref.combine_ref — downcasting the
+    coefficients to bf16 storage dtype would silently break the
+    arena-vs-per-leaf oracle contract on gram_upcast=False configs
+    (the per-leaf kernel route never does).
+
+    Deliberately a batched dot_general (NOT the multiply-reduce trick
+    gram_row_ref uses): contracting the snapshot axis through a dot keeps
+    the same m-reduction order as the per-leaf tensordot, so the two
+    routes stay BIT-identical whenever the coefficient solves agree
+    (pinned by the integer-trajectory test). The transpose this forces is
+    paid once per window — the combine is the jump's pass, not the
+    every-step pass."""
+    xb = _blocked(x, block_n)
+    cb = c.astype(jnp.float32)[jnp.asarray(block_sys)]        # (nb, m)
+    out = jnp.einsum("nm,mnb->nb", cb, xb,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU kernels: one launch per arena, output tile indexed by the
+# prefetched block->system table, in-place accumulation across revisits
+# ---------------------------------------------------------------------------
+
+def _row_kernel(seg_ref, x_ref, q_ref, out_ref, *, anchor_first: bool):
+    i = pl.program_id(0)
+    first = jnp.logical_or(i == 0,
+                           seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
+    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    q = q_ref[...].astype(jnp.float32)            # (1, block_n)
+    if anchor_first:
+        q = q - x[0:1, :]
+        x = x - x[0:1, :]
+    part = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (1, m_pad)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("n_sys", "anchor_first",
+                                             "block_n", "interpret"))
+def gram_row_pallas(x: jnp.ndarray, q: jnp.ndarray, block_sys, n_sys: int, *,
+                    anchor_first: bool = False, block_n: int,
+                    interpret: bool = True) -> jnp.ndarray:
+    m, n = x.shape
+    mp = _m_pad(m)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_row_kernel, anchor_first=anchor_first),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((mp, block_n), lambda i, s: (0, i)),
+                      pl.BlockSpec((1, block_n), lambda i, s: (0, i))],
+            out_specs=pl.BlockSpec((1, mp), lambda i, s: (s[i], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_sys, mp), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_sys, jnp.int32), x, q.reshape(1, n))
+    return out[:, :m]
+
+
+def _gram_kernel(seg_ref, x_ref, out_ref, *, anchor_first: bool):
+    i = pl.program_id(0)
+    first = jnp.logical_or(i == 0,
+                           seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
+    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    if anchor_first:
+        x = x - x[0:1, :]
+    part = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]  # (1, m_pad, m_pad)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("n_sys", "anchor_first",
+                                             "block_n", "interpret"))
+def gram_pallas(x: jnp.ndarray, block_sys, n_sys: int, *,
+                anchor_first: bool = False, block_n: int,
+                interpret: bool = True) -> jnp.ndarray:
+    m, n = x.shape
+    mp = _m_pad(m)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, anchor_first=anchor_first),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((mp, block_n), lambda i, s: (0, i))],
+            out_specs=pl.BlockSpec((1, mp, mp), lambda i, s: (s[i], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_sys, mp, mp), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_sys, jnp.int32), x)
+    return out[:, :m, :m]
+
+
+def _combine_kernel(seg_ref, c_ref, x_ref, out_ref):
+    del seg_ref                                   # consumed by the index maps
+    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    c = c_ref[...].astype(jnp.float32)            # (1, m_pad)
+    out_ref[...] = jax.lax.dot_general(
+        c, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (1, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def combine_pallas(x: jnp.ndarray, c: jnp.ndarray, block_sys, *,
+                   block_n: int, interpret: bool = True) -> jnp.ndarray:
+    m, n = x.shape
+    mp = _m_pad(m)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+        c = jnp.pad(c.astype(jnp.float32), ((0, 0), (0, mp - m)))
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, mp), lambda i, s: (s[i], 0)),
+                      pl.BlockSpec((mp, block_n), lambda i, s: (0, i))],
+            out_specs=pl.BlockSpec((1, block_n), lambda i, s: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_sys, jnp.int32), c.astype(jnp.float32), x)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch (kernels/ops.py contract) + shard_map wrappers for sharded buckets
+# ---------------------------------------------------------------------------
+
+def _local_gram_row(x, q, block_sys, n_sys, anchor_first, block_n,
+                    interpret):
+    if ops._route(interpret) == "ref":
+        return gram_row_ref(x, q, block_sys, n_sys,
+                            anchor_first=anchor_first, block_n=block_n)
+    return gram_row_pallas(x, q, block_sys, n_sys, anchor_first=anchor_first,
+                           block_n=block_n, interpret=ops._interp(interpret))
+
+
+def _local_gram(x, block_sys, n_sys, anchor_first, block_n, interpret):
+    if ops._route(interpret) == "ref":
+        return gram_ref(x, block_sys, n_sys, anchor_first=anchor_first,
+                        block_n=block_n)
+    return gram_pallas(x, block_sys, n_sys, anchor_first=anchor_first,
+                       block_n=block_n, interpret=ops._interp(interpret))
+
+
+def _local_combine(x, c, block_sys, block_n, interpret):
+    if ops._route(interpret) == "ref":
+        return combine_ref(x, c, block_sys, block_n=block_n)
+    return combine_pallas(x, c, block_sys, block_n=block_n,
+                          interpret=ops._interp(interpret))
+
+
+def shard_wrap(mesh, lane_axes: Tuple[str, ...], fn, in_specs, out_specs):
+    """sharded.py's shard_map pattern: no mesh / no sharded lanes -> the
+    local computation IS the global one; otherwise run per shard. The ONE
+    home of the arena shard_map contract — core/arena.py's pack/unpack
+    wraps through this too, so the kernel path and the data-layout path
+    can never diverge."""
+    if mesh is None or not lane_axes:
+        return fn
+    from repro.distributed.sharding import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def lane_spec(lane_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec of an arena's 1-D lane axis (shared with
+    core/arena.py's ArenaBucket.lane_spec)."""
+    return P(lane_axes if len(lane_axes) > 1 else
+             (lane_axes[0] if lane_axes else None))
+
+
+def gram_row(buf: jnp.ndarray, q: jnp.ndarray, block_sys, n_sys: int, *,
+             anchor_first: bool = False, block_n: int,
+             mesh=None, lane_axes: Tuple[str, ...] = (),
+             interpret=None) -> jnp.ndarray:
+    """One streaming Gram row per system, ONE launch for the whole arena.
+    ``block_sys`` is the (shard-local) block->system table. Sharded buckets
+    (``lane_axes`` non-empty) run per shard + one O(n_sys·m) psum."""
+
+    def local(x, qq):
+        r = _local_gram_row(x, qq, block_sys, n_sys, anchor_first, block_n,
+                            interpret)
+        return jax.lax.psum(r, lane_axes) if lane_axes else r
+
+    ls = lane_spec(lane_axes)
+    return shard_wrap(mesh, lane_axes, local,
+                 (P(None, *tuple(ls)), ls), P(None, None))(buf, q)
+
+
+def gram(buf: jnp.ndarray, block_sys, n_sys: int, *,
+         anchor_first: bool = False, block_n: int,
+         mesh=None, lane_axes: Tuple[str, ...] = (),
+         interpret=None) -> jnp.ndarray:
+    """Full (n_sys, m, m) Gram recompute, ONE launch + one O(n_sys·m²) psum
+    (the non-streaming A/B path and the restore-staleness rebuild)."""
+
+    def local(x):
+        g = _local_gram(x, block_sys, n_sys, anchor_first, block_n,
+                        interpret)
+        return jax.lax.psum(g, lane_axes) if lane_axes else g
+
+    ls = lane_spec(lane_axes)
+    return shard_wrap(mesh, lane_axes, local,
+                 (P(None, *tuple(ls)),), P(None, None, None))(buf)
+
+
+def combine(buf: jnp.ndarray, c: jnp.ndarray, block_sys, *,
+            block_n: int, mesh=None,
+            lane_axes: Tuple[str, ...] = (), interpret=None) -> jnp.ndarray:
+    """(N,) fp32 jump blend, ONE launch, zero collectives: c is replicated
+    and every lane contracts only its own system's replicated snapshot
+    axis, so the output inherits the arena's lane sharding."""
+
+    def local(x, cc):
+        return _local_combine(x, cc, block_sys, block_n, interpret)
+
+    ls = lane_spec(lane_axes)
+    return shard_wrap(mesh, lane_axes, local,
+                 (P(None, *tuple(ls)), P(None, None)), ls)(buf, c)

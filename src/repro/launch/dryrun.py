@@ -80,7 +80,11 @@ def scan_trip_counts(model: LanguageModel):
 
 
 def build_step(acfg, shape, mesh, scan_layers: bool = True):
-    """Returns (fn, example_args, in_shardings, model, donate) for one cell."""
+    """Returns (fn, example_args, in_shardings, model, donate, info) for
+    one cell; ``info`` is a dict of cell metadata (currently the train
+    cell's packed-arena bucket count, DESIGN.md §7 — None for serving
+    cells)."""
+    info = {"arena_buckets": None}
     mc = acfg.model
     model = LanguageModel(mc, chunk_k=min(1024, shape.seq_len),
                           remat=acfg.parallel.remat, scan_layers=scan_layers,
@@ -103,17 +107,21 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
         state = TrainState(params, opt_state,
                            jax.ShapeDtypeStruct((), jnp.int32), bufs, grams,
                            ctrl)
+        # arena=: bucket-table specs for the packed (m, N) ring buffers
+        # (abstract like everything else here — DESIGN.md §7)
         st_specs = inputs_mod.state_specs(state, mesh,
-                                          plans=acc.plans_for(params))
+                                          plans=acc.plans_for(params),
+                                          arena=acc.arena_for(params))
         step = make_train_step(model, acfg, mesh=mesh,
                                global_batch=shape.global_batch, acc=acc)
+        info["arena_buckets"] = len(acc.arena_for(params))
         # third arg = the step index (the per-group DMD slot vector is
         # derived from it in-trace — train/step.py)
         args = (state, batch, jax.ShapeDtypeStruct((), jnp.int32))
         shardings = (inputs_mod.shardings_of(st_specs, mesh),
                      inputs_mod.shardings_of(batch_specs, mesh),
                      NamedSharding(mesh, P()))
-        return step, args, shardings, model, (0,)    # donate TrainState
+        return step, args, shardings, model, (0,), info  # donate TrainState
 
     # serving cells
     params = model.init(abstract=True)
@@ -130,7 +138,7 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
         shardings = (inputs_mod.shardings_of(p_specs, mesh),
                      inputs_mod.shardings_of(batch_specs, mesh),
                      inputs_mod.shardings_of(c_specs, mesh))
-        return prefill_step, args, shardings, model, (2,)   # donate caches
+        return prefill_step, args, shardings, model, (2,), info  # donate caches
 
     # decode: one new token against a cache of seq_len
     caches = model.init_cache(shape.global_batch, shape.seq_len,
@@ -146,7 +154,7 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
     shardings = (inputs_mod.shardings_of(p_specs, mesh),
                  inputs_mod.shardings_of(batch_specs, mesh),
                  inputs_mod.shardings_of(c_specs, mesh))
-    return serve_step, args, shardings, model, (2,)        # donate caches
+    return serve_step, args, shardings, model, (2,), info   # donate caches
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
@@ -173,7 +181,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     t0 = time.time()
     try:
         with mesh_context(mesh):
-            fn, args, shardings, model, donate = build_step(acfg, shape, mesh)
+            fn, args, shardings, model, donate, info = build_step(
+                acfg, shape, mesh)
             lowered = jax.jit(fn, in_shardings=shardings,
                               donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
@@ -215,6 +224,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
                 "grad_accum": resolve_grad_accum(acfg, mesh,
                                                  shape.global_batch)
                 if shape.kind == "train" else None,
+                # packed-arena audit (DESIGN.md §7): how many bucket
+                # launches the DMD data passes cost per recorded step
+                "dmd_arena_buckets": info["arena_buckets"],
             })
             print(f"[ok] {arch} {shape_name} {mesh_kind}: "
                   f"lower {t_lower:.0f}s compile {t_compile:.0f}s "

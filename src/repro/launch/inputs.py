@@ -117,7 +117,8 @@ def cache_partition_specs(caches: PyTree, mesh: Mesh) -> PyTree:
 
 
 def state_specs(state_tree: PyTree, mesh: Mesh,
-                plans: Optional[PyTree] = None) -> PyTree:
+                plans: Optional[PyTree] = None,
+                arena: Optional[dict] = None) -> PyTree:
     """Specs for a TrainState: params/opt/dmd follow param rules; step = ().
 
     When the accelerator's LeafPlan pytree is given, DMD buffer and Gram
@@ -127,12 +128,52 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
     Specs are shape-agnostic, so heterogeneous per-group windows (a mixed-m
     schedule sizes each leaf's buffer (m_leaf, ...) — DESIGN.md §4) need no
     special casing: the snapshot axis is replicated whatever its length.
+
+    Arena states (DESIGN.md §7) carry per-bucket leaves under
+    ``/dmd_buffers/__arena__/<key>`` — their (m, N) ring buffers are
+    sharded on the lane axis by the bucket's lane_axes (replicated for
+    unsharded buckets), the (n_sys, m, m) Gram stacks are replicated (the
+    psum'd reduction), and the per-leaf remainder lives under ``/leaf``
+    with the plan-derived specs. `arena` is the accelerator's bucket table
+    (``acc.arena_for(params)``).
     """
+    from repro.core.arena import ARENA_KEY, is_arena_state
     from repro.core.leafplan import plan_entries
     from repro.distributed.sharding import resolve_rule, rule_for_path
 
     plan_by_path = ({pl.path: pl for pl in plan_entries(plans)}
                     if plans is not None else {})
+    arena = arena or {}
+    # Only an arena-layout state has the {"__arena__", "leaf"} wrapper; a
+    # per-leaf state whose PARAM pytree happens to contain a key literally
+    # named "leaf" must NOT have that path segment stripped.
+    arena_layout = is_arena_state(getattr(state_tree, "dmd_buffers", None))
+
+    def _bucket_spec(sub: str, grams: bool) -> Optional[P]:
+        """Spec for an ``/__arena__/<key>`` leaf, None for non-arena paths."""
+        if not arena_layout or not sub.startswith(f"/{ARENA_KEY}/"):
+            return None
+        if grams:
+            return P()                    # (n_sys, m, m): psum'd, replicated
+        key = sub[len(ARENA_KEY) + 2:]
+        if key not in arena:
+            # Failing loudly beats a silent replication cliff: marking a
+            # lane-sharded (m, N) ring buffer replicated would device_put
+            # the full multi-GiB arena onto EVERY device with no error.
+            raise ValueError(
+                f"arena-layout state has bucket {key!r} but no matching "
+                "entry in the bucket table — pass arena="
+                "acc.arena_for(params) to state_specs (and rebuild it "
+                "after any plan-table change)")
+        b = arena[key]
+        if not b.lane_axes:
+            return P(None, None)          # unsharded bucket: replicated
+        return P(None, *tuple(b.lane_spec()))
+
+    def _strip_leaf(sub: str) -> str:
+        if arena_layout and sub.startswith("/leaf/"):
+            return sub[len("/leaf"):]
+        return sub
 
     def one(path, leaf):
         p = normalize_path(jax.tree_util.keystr(path))
@@ -141,12 +182,20 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
             return P()
         if p.startswith("/dmd_buffers"):
             sub = p.split("/dmd_buffers", 1)[1]
+            spec = _bucket_spec(sub, grams=False)
+            if spec is not None:
+                return spec
+            sub = _strip_leaf(sub)
             pl = plan_by_path.get(sub)
             if pl is not None:
                 return pl.snapshot_spec
             return _param_spec_of(sub, leaf, mesh, lead=1)
         if p.startswith("/dmd_gram"):
-            pl = plan_by_path.get(p.split("/dmd_gram", 1)[1])
+            sub = p.split("/dmd_gram", 1)[1]
+            spec = _bucket_spec(sub, grams=True)
+            if spec is not None:
+                return spec
+            pl = plan_by_path.get(_strip_leaf(sub))
             if pl is not None:
                 return pl.gram_spec
             return P()          # (stack..., m, m) running Grams: O(m^2) bytes,

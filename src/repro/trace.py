@@ -1,0 +1,40 @@
+"""Jaxpr accounting helpers: ONE sub-jaxpr walker for every trace-size /
+launch-count consumer (the BENCH_arena suite and the CI trace-size guard
+pin the SAME numbers, so they must count with the same recursion — a
+walker fixed in one copy but not another would let the pinned counts and
+the reported bench counts silently disagree)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+# Data-pass primitives that dispatch at least one kernel on TPU: matmuls /
+# Pallas calls / scatters (segment_sum lowers to scatter-add) / buffer row
+# writes. The per-leaf DMD route pays O(leaves) of these per recorded
+# step, the packed-arena route O(buckets) — DESIGN.md §7.
+LAUNCH_PRIMS = ("dot_general", "pallas_call", "scatter-add", "scatter_add",
+                "dynamic_update_slice", "conv_general_dilated")
+
+
+def count_eqns(jaxpr, pred: Optional[Callable] = None) -> int:
+    """Number of primitive equations in `jaxpr`, recursing into pjit /
+    cond / scan / closed-call sub-jaxprs. `pred(eqn) -> bool` restricts
+    the count (None counts everything); recursion always descends."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if pred is None or pred(eqn):
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):                    # ClosedJaxpr
+                n += count_eqns(v.jaxpr, pred)
+            elif isinstance(v, (list, tuple)):
+                for vv in v:
+                    if hasattr(vv, "jaxpr"):
+                        n += count_eqns(vv.jaxpr, pred)
+    return n
+
+
+def count_launch_ops(jaxpr) -> int:
+    """Kernel-launch proxy: equations whose primitive is a data-pass op
+    (see LAUNCH_PRIMS)."""
+    return count_eqns(
+        jaxpr, lambda e: any(p in str(e.primitive) for p in LAUNCH_PRIMS))

@@ -82,11 +82,15 @@ class Trainer:
 
     # -- checkpointing --------------------------------------------------------
     def save(self, state: TrainState, step: int):
+        """Checkpoints are always written in the LEAF-WISE layout (arenas
+        unpacked into per-leaf buffers/Grams — DESIGN.md §7): on-disk
+        format is identical across dmd.arena on/off, so old checkpoints
+        load into arena runs and vice versa."""
         if not self.checkpoint_dir:
             return
         from repro.checkpoint import save_checkpoint
-        save_checkpoint(self.checkpoint_dir, state, step,
-                        keep=self.acfg.train.keep_checkpoints)
+        save_checkpoint(self.checkpoint_dir, self.acc.state_leafwise(state),
+                        step, keep=self.acfg.train.keep_checkpoints)
 
     def restore(self, state_like: Optional[TrainState] = None
                 ) -> Optional[TrainState]:
@@ -94,10 +98,31 @@ class Trainer:
             return None
         from repro.checkpoint import restore_checkpoint
         template = state_like if state_like is not None else self.init_state()
+        # Leaf-wise on disk (see save): unpack the template's arenas so the
+        # manifest paths line up, restore, then re-pack at the end.
+        template = self.acc.state_leafwise(template)
         state = restore_checkpoint(self.checkpoint_dir, template,
                                    mesh=self.mesh)
-        if state is not None and self.acc.streaming \
-                and state.dmd_gram is not None:
+        if state is None:
+            return None
+        if self.mesh is not None:
+            # Elastic restore: re-place every restored leaf against the
+            # CURRENT mesh's shardings BEFORE any computation touches the
+            # state — a checkpoint written on one topology restores onto
+            # any other, and the arena-unpacked template can leave buffer
+            # leaves committed to the mesh while Gram leaves are
+            # single-device (shard_map outputs vs plain slices), which
+            # would poison the first jit below with mixed placements. DMD
+            # buffer/Gram specs come from the plan table.
+            from repro.launch.inputs import shardings_of, state_specs
+            sh = shardings_of(
+                state_specs(state, self.mesh,
+                            plans=self.acc.plans_for(state.params)),
+                self.mesh)
+            state = jax.tree_util.tree_map(
+                lambda x, s: None if x is None else jax.device_put(x, s),
+                state, sh, is_leaf=lambda x: x is None)
+        if self.acc.streaming and state.dmd_gram is not None:
             # Pre-streaming checkpoints restore the template's all-zero
             # Grams; rebuild those from the restored buffers so a mid-window
             # resume never applies DMD on a Gram with zeroed rows. Template
@@ -109,20 +134,7 @@ class Trainer:
             state = state._replace(dmd_gram=snap.recompute_grams(
                 state.dmd_gram, state.dmd_buffers, self.acfg.dmd,
                 self.acc.plans_for(state.params)))
-        if state is None or self.mesh is None:
-            return state
-        # Elastic restore: the template's leaves are single-device (init runs
-        # before any mesh placement), so re-place every restored leaf against
-        # the CURRENT mesh's shardings — a checkpoint written on one topology
-        # restores onto any other. DMD buffer/Gram specs come from the plan
-        # table.
-        from repro.launch.inputs import shardings_of, state_specs
-        sh = shardings_of(state_specs(state, self.mesh,
-                                      plans=self.acc.plans_for(state.params)),
-                          self.mesh)
-        return jax.tree_util.tree_map(
-            lambda x, s: None if x is None else jax.device_put(x, s),
-            state, sh, is_leaf=lambda x: x is None)
+        return self.acc.state_arenaize(state)
 
     def _install_preempt_handler(self):
         def handler(signum, frame):

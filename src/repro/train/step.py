@@ -25,6 +25,17 @@ streaming Gram carried in TrainState it is pure O(m^3) coefficient algebra
 cfg.streaming_gram=False A/B baseline) it recomputes the full O(m^2*n)
 Gram. Both steps share the same accelerator instance (hence the same plan
 table) — pass `acc=` to avoid rebuilding it.
+
+Donation contract (audited: tests/test_donation.py inspects the compiled
+HLO's input_output_alias table): under the Trainer's
+``jax.jit(..., donate_argnums=(0,))`` every snapshot buffer and Gram leaf
+— per-leaf AND packed-arena — aliases input to output with ZERO
+buffer-sized copies, in the fused train step and in BOTH dmd_step
+variants. The gated (controller) step additionally aliases the whole
+TrainState: the rollback branch passes the donated pre-jump params and
+moments straight through. Callers that re-use a state after the call must
+clone it or rethread the returned state (see the controller bench's
+gate-overhead fix in benchmarks/paper_benches.py).
 """
 from __future__ import annotations
 
@@ -34,6 +45,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import arena as arena_mod
 from repro.core import leafplan, schedule as sched_mod
 from repro.core import snapshots as snap
 from repro.core.accelerator import DMDAccelerator, _none_like, jump_tree
@@ -128,16 +140,36 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
         if dmd_on and buffers is not None:
             streaming = streaming_on and grams is not None
             plans = acc.plans_for(params)       # trace-time, cached
+            table = acc.arena_for(params)       # {} when arenas are off
             slots = sched_mod.slots_for_step(acc.groups, step)
 
             # One cond per schedule group: group gi's leaves are written
             # only while gi records (its slot >= 0); other groups' leaves
             # are compile-time pass-throughs inside the branch, so XLA
             # sees the same single-cond program as before for one group.
+            # Arena'd leaves ride the packed route (one gather + one row
+            # update + one segmented Gram launch per bucket); the per-leaf
+            # code below only sees the leaves the arena could not take.
             for gi in range(len(acc.groups)):
                 def write(args, gi=gi):
                     bufs, g = args
                     slot = jnp.maximum(slots[gi], 0)
+                    if arena_mod.is_arena_state(bufs):
+                        arenas, leaf = arena_mod.split_state(bufs)
+                        arenas = arena_mod.record(arenas, params, slot,
+                                                  table, acfg.dmd, group=gi)
+                        leaf = snap.record(leaf, params, slot, plans,
+                                           group=gi)
+                        bufs = arena_mod.make_state(arenas, leaf)
+                        if streaming:
+                            ag, lg = arena_mod.split_state(g)
+                            g = arena_mod.make_state(
+                                arena_mod.update_grams(ag, arenas, slot,
+                                                       acfg.dmd, table,
+                                                       group=gi),
+                                snap.update_grams(lg, leaf, params, slot,
+                                                  acfg.dmd, plans, group=gi))
+                        return bufs, g
                     bufs = snap.record(bufs, params, slot, plans, group=gi)
                     if streaming:
                         g = snap.update_grams(g, bufs, params, slot,
@@ -230,7 +262,8 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
             plans = acc.plans_for(state.params)
             params, mean_rank = jump_tree(cfg, plans, state.params,
                                           state.dmd_buffers, grams, relax,
-                                          groups=groups)
+                                          groups=groups,
+                                          arena=acc.arena_for(state.params))
             opt_state = state.opt_state
             # the jump teleports the jumped groups' weights; reset those
             # groups' moments — unless the group opts out (sched.reset_opt)
@@ -279,7 +312,8 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
             (acc.n_groups,)) * ctrl.relax_eff
         p_jump, mean_rank = jump_tree(cfg, plans, state.params,
                                       state.dmd_buffers, grams, relax_vec,
-                                      groups=groups, s_vec=s_vec)
+                                      groups=groups, s_vec=s_vec,
+                                      arena=acc.arena_for(state.params))
 
         loss_pre = _loss(state.params, eval_batch)
         loss_post = _loss(p_jump, eval_batch)

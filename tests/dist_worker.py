@@ -101,6 +101,29 @@ def run_train(mesh_shape, axis_names, steps=6):
         return losses, checksum(state.params)
 
 
+def max_allgather_bytes(hlo: str) -> int:
+    """Largest all-gather operand in an HLO text, in bytes — the shared
+    audit primitive for both shard_map workers (one copy: a dtype added to
+    the byte map lands in every audit at once)."""
+    import re
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "pred": 1}
+    max_ag = 0
+    for line in hlo.splitlines():
+        mt = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = (.*?) all-gather"
+                      r"(?:-start)?\(", line)
+        if not mt:
+            continue
+        for ms in re.finditer(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]",
+                              mt.group(1)):
+            n = 1
+            for d in ms.group(2).split(","):
+                if d:
+                    n *= int(d)
+            max_ag = max(max_ag, n * dtype_bytes.get(ms.group(1), 4))
+    return max_ag
+
+
 def run_sharded_kernels():
     """pallas_shard_map route == dot_general oracle on an 8-device mesh.
 
@@ -112,7 +135,6 @@ def run_sharded_kernels():
     update_grams HLO: the whole point of the route is that NO buffer-sized
     all-gather appears (DESIGN.md §3.4).
     """
-    import re
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import dmd as dmd_mod, leafplan
     from repro.core import snapshots as snap
@@ -239,22 +261,7 @@ def run_sharded_kernels():
             # the lowered update_grams (the psum'd row pass is all-reduce
             # O(stack*m), never a gather of the O(m*n) buffer)
             hlo = upd_jit.lower(grams, bufs, params, 2).compile().as_text()
-            dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                           "s8": 1, "u8": 1, "pred": 1}
-            max_ag = 0
-            for line in hlo.splitlines():
-                mt = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = (.*?) all-gather"
-                              r"(?:-start)?\(", line)
-                if not mt:
-                    continue
-                for ms in re.finditer(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]",
-                                      mt.group(1)):
-                    n = 1
-                    for d in ms.group(2).split(","):
-                        if d:
-                            n *= int(d)
-                    max_ag = max(max_ag,
-                                 n * dtype_bytes.get(ms.group(1), 4))
+            max_ag = max_allgather_bytes(hlo)
             smallest_buf = min(
                 4 * b.size for b in jax.tree_util.tree_leaves(bufs))
             assert max_ag < smallest_buf, (max_ag, smallest_buf)
@@ -262,6 +269,120 @@ def run_sharded_kernels():
     finally:
         ops.set_backend(None)
     print("SHARDED_KERNELS_OK")
+
+
+def run_arena_sharded():
+    """Sharded arena buckets (core/arena.py, DESIGN.md §7) on an 8-device
+    mesh: leaves sharded over the SAME contracted-dim axes bucket together,
+    the bucket's (m, N) ring buffer is lane-sharded, the segmented kernels
+    run per shard under shard_map with one O(n_sys*m)/O(n_sys*m^2) psum,
+    and the whole route matches the per-leaf (arena=False) oracle. Also
+    audits the lowered record+update HLO for buffer-sized all-gathers
+    (there must be none — lane sharding keeps every pass local)."""
+    import dataclasses as _dc
+    from jax.sharding import NamedSharding
+    from repro.core import DMDAccelerator, arena as arena_mod, leafplan
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    m = 5
+    cfg = DMDConfig(m=m, s=8, tol=1e-3, anchor="first", warmup_steps=0,
+                    cooldown_steps=0)
+    rng = np.random.default_rng(0)
+
+    def mk(shape, dtype=jnp.float32):
+        return jnp.asarray(rng.normal(size=shape), dtype)
+
+    params = {
+        "wqkv": mk((64, 32)),                    # ("data", "model"): fsdp+tp
+        "A_log": mk((32,)),                      # ("model",): tp vector
+        "w_gate": mk((64, 32)),                  # same axes as wqkv
+        "seg0": {"attn": {"wqkv": mk((6, 64, 32))}},   # stacked, sharded
+        "bias": mk((40,)),                       # replicated -> local bucket
+    }
+    stack_dims = {"wqkv": 0, "A_log": 0, "w_gate": 0, "bias": 0,
+                  "seg0": {"attn": {"wqkv": 1}}}
+
+    with set_mesh(mesh):
+        acc = DMDAccelerator(cfg, mesh=mesh, stack_dims=stack_dims)
+        plans = acc.plans_for(params)
+        table = acc.arena_for(params)
+        keys = sorted(table)
+        # fsdp+tp leaves share one lane-sharded bucket; the tp vector and
+        # the replicated vector land in their own sharding classes
+        lane_axes = {k: table[k].lane_axes for k in keys}
+        assert ("data", "model") in lane_axes.values(), lane_axes
+        assert ("model",) in lane_axes.values(), lane_axes
+        assert () in lane_axes.values(), lane_axes
+        dm_key = next(k for k, v in lane_axes.items() if v == ("data",
+                                                               "model"))
+        assert {s.path for s in table[dm_key].segments} >= {
+            "/wqkv", "/w_gate", "/seg0/attn/wqkv"}, table[dm_key].segments
+
+        place = lambda t, specs: jax.tree_util.tree_map(
+            lambda l, s: jax.device_put(l, NamedSharding(mesh, s)), t, specs)
+        params = place(params, jax.tree_util.tree_map(
+            lambda pl: pl.param_spec, plans, is_leaf=leafplan.is_plan_leaf))
+
+        def run(acc_):
+            bufs = acc_.init(params)
+            grams = acc_.init_grams(bufs)
+            rec = jax.jit(lambda b, g, p, t: acc_.record(b, p, t, g))
+            p = params
+            rr = np.random.default_rng(1)
+            for t in range(m):
+                p = jax.tree_util.tree_map(
+                    lambda x: x + (0.03 * jnp.asarray(
+                        rr.normal(size=x.shape), jnp.float32)
+                    ).astype(x.dtype), p)
+                bufs, grams = rec(bufs, grams, p,
+                                  jnp.asarray(acc_.slots(t)))
+            newp, _ = acc_.apply(p, bufs, grams=grams, step=m - 1)
+            return bufs, grams, newp, rec
+
+        bufs, grams, newp, rec = run(acc)
+        assert arena_mod.is_arena_state(bufs)
+        acc_o = DMDAccelerator(_dc.replace(cfg, arena=False), mesh=mesh,
+                               stack_dims=stack_dims)
+        bufs_o, grams_o, newp_o, _ = run(acc_o)
+
+        from repro.train.state import TrainState
+        lw = acc.state_leafwise(TrainState(
+            params, None, jnp.zeros((), jnp.int32), bufs, grams))
+        err_b = err_g = err_p = 0.0
+        flat_lw = jax.tree_util.tree_flatten_with_path(
+            lw.dmd_buffers, is_leaf=lambda x: x is None)[0]
+        flat_o = {jax.tree_util.keystr(kp): l
+                  for kp, l in jax.tree_util.tree_flatten_with_path(
+                      bufs_o, is_leaf=lambda x: x is None)[0]}
+        for kp, l in flat_lw:
+            o = flat_o[jax.tree_util.keystr(kp)]
+            err_b = max(err_b, float(jnp.max(jnp.abs(l - o))))
+        for x, y in zip(jax.tree_util.tree_leaves(lw.dmd_gram),
+                        jax.tree_util.tree_leaves(grams_o)):
+            err_g = max(err_g, float(jnp.max(jnp.abs(x - y)))
+                        / max(float(jnp.max(jnp.abs(y))), 1.0))
+        for x, y in zip(jax.tree_util.tree_leaves(newp),
+                        jax.tree_util.tree_leaves(newp_o)):
+            err_p = max(err_p, float(jnp.max(jnp.abs(x - y)))
+                        / max(float(jnp.max(jnp.abs(y))), 1.0))
+        print("ARENA_BUF_ERR", f"{err_b:.2e}")
+        print("ARENA_GRAM_ERR", f"{err_g:.2e}")
+        print("ARENA_JUMP_ERR", f"{err_p:.2e}")
+        assert err_b == 0.0                     # recording is a pure copy
+        assert err_g < 1e-5
+        assert err_p < 1e-3                     # eigensolve noise floor
+
+        # HLO audit: the packed record+update emits no buffer-sized
+        # all-gather (lane sharding keeps the data passes local)
+        hlo = jax.jit(lambda b, g, p, t: acc.record(b, p, t, g)).lower(
+            bufs, grams, params,
+            jnp.asarray(acc.slots(2))).compile().as_text()
+        max_ag = max_allgather_bytes(hlo)
+        smallest = min(4 * b.size
+                       for b in jax.tree_util.tree_leaves(bufs["__arena__"]))
+        assert max_ag < smallest, (max_ag, smallest)
+        print("ARENA_AG_MAX_BYTES", max_ag, "SMALLEST_BUF", smallest)
+    print("ARENA_SHARDED_OK")
 
 
 def _ctrl_line(state, acc):
@@ -433,6 +554,9 @@ def main():
             state = trainer.restore()
             assert state is not None
             assert int(state.step) == (14 if hetero else 6)
+            # the run carries packed arenas (DESIGN.md §7); audit the
+            # equivalent per-leaf view
+            state = trainer.acc.state_leafwise(state)
             plans = trainer.acc.plans_for(state.params)
             n_checked = 0
             n_small = 0
@@ -461,6 +585,8 @@ def main():
         run_controller_preempt(mode, sys.argv[2:])
     elif mode == "sharded_kernels":
         run_sharded_kernels()
+    elif mode == "arena_sharded":
+        run_arena_sharded()
     elif mode == "elastic_restore":
         ckpt = sys.argv[2]
         acfg = small_acfg()

@@ -1,0 +1,422 @@
+"""Packed leaf arenas (core/arena.py + kernels/arena.py, DESIGN.md §7).
+
+Covers the ISSUE 5 satellite edge cases: leaf sizes that are not 128
+multiples, a single-leaf bucket, an excluded-group-only config (empty
+arena), a bf16 bucket under gram_upcast=False, and arena-vs-per-leaf
+bit-exactness across full jump cycles (assert_array_equal on
+integer-valued trajectories, where every fp32 sum is exact and any
+segmentation/offset/masking slip would change bits).
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import DMDConfig
+from repro.core import DMDAccelerator
+from repro.core import arena as arena_mod
+from repro.core import dmd as dmd_math
+from repro.core.schedule import DMDGroupRule
+from repro.kernels import arena as ka
+from repro.kernels import ops
+
+
+def _cfg(**kw):
+    kw.setdefault("m", 4)
+    kw.setdefault("s", 5)
+    kw.setdefault("warmup_steps", 0)
+    kw.setdefault("cooldown_steps", 0)
+    kw.setdefault("tol", 1e-6)
+    return DMDConfig(**kw)
+
+
+def _int_params(rng, sizes):
+    """Integer-valued fp32 leaves (exact in any summation order)."""
+    return {k: jnp.asarray(rng.integers(-8, 9, size=s), jnp.float32)
+            for k, s in sizes.items()}
+
+
+# ---------------------------------------------------------------------------
+# Bucketing / layout
+# ---------------------------------------------------------------------------
+
+def test_bucket_layout_alignment_and_offsets():
+    """Every segment starts on a block_n boundary, segments are disjoint
+    and in pytree order, and the block->system table walks them in order."""
+    rng = np.random.default_rng(0)
+    params = _int_params(rng, {"a": (7,), "b": (10, 13), "c": (333,),
+                               "d": (128,)})
+    acc = DMDAccelerator(_cfg())
+    table = acc.arena_for(params)
+    assert len(table) == 1
+    b = next(iter(table.values()))
+    assert b.block_n % 128 == 0
+    lane = 0
+    for seg in b.segments:
+        assert seg.lane_start == lane
+        assert seg.lane_start % b.block_n == 0
+        assert seg.seg_lanes % b.block_n == 0
+        assert seg.seg_lanes >= seg.flat_local
+        lane += seg.lanes
+    assert b.n_lanes == lane
+    bs = b.block_sys()
+    assert bs.shape == (b.n_lanes // b.block_n,)
+    assert (np.diff(bs) >= 0).all()          # sorted: systems consecutive
+    assert bs[-1] == b.n_sys - 1
+
+
+def test_single_leaf_bucket():
+    params = {"w": jnp.arange(200, dtype=jnp.float32).reshape(8, 25)}
+    acc = DMDAccelerator(_cfg())
+    table = acc.arena_for(params)
+    assert len(table) == 1
+    (b,) = table.values()
+    assert b.n_sys == 1 and len(b.segments) == 1
+    bufs = acc.init(params)
+    assert arena_mod.is_arena_state(bufs)
+    assert all(l is None for l in jax.tree_util.tree_leaves(
+        bufs["leaf"], is_leaf=lambda x: x is None))
+
+
+def test_excluded_only_config_has_empty_arena():
+    """Every leaf excluded by a group rule -> no buckets, no buffers; the
+    state is NOT the arena wrapper (nothing to pack)."""
+    cfg = _cfg(groups=(DMDGroupRule(name="none", path_regex=".",
+                                    exclude=True),))
+    params = {"w": jnp.ones((16, 16)), "b": jnp.ones((16,))}
+    acc = DMDAccelerator(cfg)
+    assert acc.arena_for(params) == {}
+    bufs = acc.init(params)
+    assert not arena_mod.is_arena_state(bufs)
+    assert all(l is None for l in jax.tree_util.tree_leaves(
+        bufs, is_leaf=lambda x: x is None))
+
+
+def test_dot_general_route_keeps_per_leaf():
+    cfg = _cfg(kernel_route="dot_general")
+    params = {"w": jnp.ones((16, 16))}
+    acc = DMDAccelerator(cfg)
+    assert acc.arena_for(params) == {}
+    assert not arena_mod.is_arena_state(acc.init(params))
+
+
+def test_two_groups_two_buckets():
+    cfg = _cfg(groups=(DMDGroupRule(name="vecs", max_ndim=1, m=3,
+                                    phase=1),))
+    params = {"w": jnp.ones((16, 16)), "b": jnp.ones((48,))}
+    acc = DMDAccelerator(cfg)
+    table = acc.arena_for(params)
+    assert len(table) == 2
+    ms = sorted(b.m for b in table.values())
+    assert ms == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# Kernel contract: segmented Pallas (interpret) vs reference vs per-leaf
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("anchor_first", [False, True])
+def test_segmented_kernels_match_reference(anchor_first):
+    rng = np.random.default_rng(1)
+    m, block_n = 5, 128
+    sizes = [7, 130, 333, 128]                 # none except 128 lane-aligned
+    segs = [-(-s // block_n) * block_n for s in sizes]
+    n = sum(segs)
+    x = np.zeros((m, n), np.float32)
+    q = np.zeros((n,), np.float32)
+    lane = 0
+    block_sys = []
+    for i, (s, p) in enumerate(zip(sizes, segs)):
+        x[:, lane:lane + s] = rng.normal(size=(m, s))
+        q[lane:lane + s] = rng.normal(size=s)
+        block_sys += [i] * (p // block_n)
+        lane += p
+    x, q = jnp.asarray(x), jnp.asarray(q)
+    bs = np.asarray(block_sys, np.int32)
+
+    ref_row = ka.gram_row_ref(x, q, bs, 4, anchor_first=anchor_first,
+                              block_n=block_n)
+    pal_row = ka.gram_row_pallas(x, q, bs, 4, anchor_first=anchor_first,
+                                 block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal_row), np.asarray(ref_row),
+                               rtol=1e-6, atol=1e-5)
+
+    ref_g = ka.gram_ref(x, bs, 4, anchor_first=anchor_first, block_n=block_n)
+    pal_g = ka.gram_pallas(x, bs, 4, anchor_first=anchor_first,
+                           block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal_g), np.asarray(ref_g),
+                               rtol=1e-6, atol=1e-5)
+
+    c = jnp.asarray(rng.normal(size=(4, m)), jnp.float32)
+    ref_c = ka.combine_ref(x, c, bs, block_n=block_n)
+    pal_c = ka.combine_pallas(x, c, bs, block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal_c), np.asarray(ref_c),
+                               rtol=1e-6, atol=1e-5)
+
+    # per-leaf oracle: each segment's row/gram/combine equals the flat
+    # kernels applied to that segment alone
+    lane = 0
+    for i, (s, p) in enumerate(zip(sizes, segs)):
+        xs = x[:, lane:lane + s]
+        qs = q[lane:lane + s]
+        np.testing.assert_allclose(
+            np.asarray(ref_row[i]),
+            np.asarray(ops.gram_row(xs, qs, anchor_first=anchor_first,
+                                    interpret=None)), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(ref_c[lane:lane + s]),
+            np.asarray(ops.combine(xs, c[i], interpret=None)),
+            rtol=1e-5, atol=1e-4)
+        lane += p
+
+
+# ---------------------------------------------------------------------------
+# Arena vs per-leaf: bit-exact full jump cycles on integer trajectories
+# ---------------------------------------------------------------------------
+
+def _run_cycles(cfg, params, deltas, steps):
+    """record/update/jump `steps` steps through the accelerator API;
+    returns (params_after, buffers, grams)."""
+    acc = DMDAccelerator(cfg)
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    p = params
+    for t in range(steps):
+        p = jax.tree_util.tree_map(lambda x, d: x + d, p, deltas)
+        bufs, grams = acc.record(bufs, p, acc.slots(t), grams)
+        if acc.should_apply(t):
+            p, _ = acc.apply(p, bufs, grams=grams, step=t)
+    return acc, p, bufs, grams
+
+
+def test_arena_vs_perleaf_bitexact_full_cycles():
+    """Two full jump cycles (window wrap + second jump) on integer-valued
+    drifts: Grams are exact in any summation order, so the two routes must
+    agree BIT-EXACTLY on every leaf — any offset/masking/segmentation slip
+    changes bits. Covers sizes off the 128-lane grid and a stacked leaf."""
+    rng = np.random.default_rng(7)
+    sizes = {"a": (7,), "b": (10, 13), "c": (333,), "d": (2, 5, 6)}
+    params = _int_params(rng, sizes)
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg()
+    acc_a, p_arena, bufs_a, grams_a = _run_cycles(cfg, params, deltas, 9)
+    cfg_o = dataclasses.replace(cfg, arena=False)
+    acc_o, p_leaf, bufs_o, grams_o = _run_cycles(cfg_o, params, deltas, 9)
+
+    for k in sizes:
+        np.testing.assert_array_equal(np.asarray(p_arena[k]),
+                                      np.asarray(p_leaf[k]), err_msg=k)
+
+    # buffers and Grams agree bit-exactly through the leaf-wise view
+    from repro.train.state import TrainState
+    st = TrainState(p_arena, None, jnp.zeros((), jnp.int32), bufs_a, grams_a)
+    lw = acc_a.state_leafwise(st)
+    flat_o = {k: v for k, v in zip(sizes, jax.tree_util.tree_leaves(bufs_o))}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(lw.dmd_buffers)[0]:
+        k = jax.tree_util.keystr(kp).strip("[']").split("'")[0]
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(flat_o[k]), err_msg=k)
+    flat_g = {k: v for k, v in zip(sizes, jax.tree_util.tree_leaves(grams_o))}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(lw.dmd_gram)[0]:
+        k = jax.tree_util.keystr(kp).strip("[']").split("'")[0]
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(flat_g[k]), err_msg=k)
+
+
+def test_arena_vs_perleaf_close_on_float_trajectories():
+    """Real-valued trajectories: the DATA passes (buffers bit-exact, Grams
+    at fp32 summation-order noise) must agree tightly. The post-jump params
+    only get a loose bound: with the fp32 noise floor unmasked (tol below
+    it) the eigensolve legitimately amplifies last-ulp Gram differences on
+    a near-rank-deficient window — the integer-trajectory test above is
+    the exact-equality guarantee; this one pins the passes feeding it."""
+    rng = np.random.default_rng(3)
+    sizes = {"a": (40,), "b": (10, 13), "c": (333,)}
+    params = {k: jnp.asarray(rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    deltas = {k: jnp.asarray(0.01 * rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg(tol=1e-3)                      # mask the fp32 noise tail
+    acc_a, p_arena, bufs_a, grams_a = _run_cycles(cfg, params, deltas, 4)
+    acc_o, p_leaf, bufs_o, grams_o = _run_cycles(
+        dataclasses.replace(cfg, arena=False), params, deltas, 4)
+
+    from repro.train.state import TrainState
+    lw = acc_a.state_leafwise(TrainState(
+        p_arena, None, jnp.zeros((), jnp.int32), bufs_a, grams_a))
+    order = sorted(sizes)
+    for k, b_a, b_o, g_a, g_o in zip(
+            order, jax.tree_util.tree_leaves(lw.dmd_buffers),
+            jax.tree_util.tree_leaves(bufs_o),
+            jax.tree_util.tree_leaves(lw.dmd_gram),
+            jax.tree_util.tree_leaves(grams_o)):
+        np.testing.assert_array_equal(np.asarray(b_a), np.asarray(b_o),
+                                      err_msg=k)
+        np.testing.assert_allclose(np.asarray(g_a), np.asarray(g_o),
+                                   rtol=1e-5, atol=1e-4, err_msg=k)
+    for k in sizes:
+        np.testing.assert_allclose(np.asarray(p_arena[k]),
+                                   np.asarray(p_leaf[k]),
+                                   rtol=0.05, atol=0.05, err_msg=k)
+
+
+def test_bf16_bucket_gram_upcast_false():
+    """bf16 snapshot storage + gram_upcast=False: the bucket stores bf16,
+    Grams still come out fp32, and — the route contract — the arena agrees
+    with the per-leaf route AT THE SAME CONFIG (both kernel routes upcast
+    per block/tile in fp32; regression: an early arena ref downcast the
+    combine coefficients to bf16, a 1.8% divergence this same-config
+    oracle catches and the fp32-route comparison below never would).
+    tol=1e-3 masks the fp32-ordering noise tail of the eigensolve."""
+    rng = np.random.default_rng(5)
+    sizes = {"w": (24, 9), "v": (130,)}
+    params = {k: jnp.asarray(rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    deltas = {k: jnp.asarray(0.05 * rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg(snapshot_dtype="bfloat16", gram_upcast=False, anchor="first",
+               tol=1e-3)
+    acc, p_b, bufs, grams = _run_cycles(cfg, params, deltas, 4)
+    for key, buf in bufs["__arena__"].items():
+        assert buf.dtype == jnp.bfloat16, key
+    for key, g in grams["__arena__"].items():
+        assert g.dtype == jnp.float32, key
+    # same-config per-leaf oracle: buffers bit-exact, params at fp32 noise
+    acc_o, p_o, bufs_o, grams_o = _run_cycles(
+        dataclasses.replace(cfg, arena=False), params, deltas, 4)
+    from repro.train.state import TrainState
+    lw = acc.state_leafwise(TrainState(
+        p_b, None, jnp.zeros((), jnp.int32), bufs, grams))
+    for k, b_o in zip(sorted(sizes), jax.tree_util.tree_leaves(bufs_o)):
+        np.testing.assert_array_equal(
+            np.asarray(lw.dmd_buffers[k].astype(jnp.float32)),
+            np.asarray(b_o.astype(jnp.float32)), err_msg=k)
+    for k in sizes:
+        np.testing.assert_allclose(np.asarray(p_b[k]), np.asarray(p_o[k]),
+                                   rtol=2e-3, atol=2e-3, err_msg=k)
+    # and the bf16 storage stays close to the fp32-storage route
+    _, p_f, _, _ = _run_cycles(
+        dataclasses.replace(cfg, snapshot_dtype="float32", gram_upcast=True),
+        params, deltas, 4)
+    for k in sizes:
+        np.testing.assert_allclose(np.asarray(p_b[k]), np.asarray(p_f[k]),
+                                   rtol=0.15, atol=0.05, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Streaming vs recompute + leaf-wise checkpoint interop
+# ---------------------------------------------------------------------------
+
+def test_arena_streaming_gram_equals_recompute():
+    """The per-bucket streaming rows reproduce the one-launch full Gram
+    recompute at the window-complete point (the §2 invariant, arena'd)."""
+    rng = np.random.default_rng(11)
+    sizes = {"a": (40,), "b": (10, 13)}
+    params = {k: jnp.asarray(rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg(anchor="first")
+    acc = DMDAccelerator(cfg)
+    bufs = acc.init(params)
+    grams = acc.init_grams(bufs)
+    p = params
+    for t in range(4):
+        p = jax.tree_util.tree_map(
+            lambda x: x + 0.01 * jnp.ones_like(x) * (t + 1), p)
+        bufs, grams = acc.record(bufs, p, acc.slots(t), grams)
+    table = acc.arena_for(params)
+    for key, b in table.items():
+        full = ka.gram(bufs["__arena__"][key], b.block_sys(), b.n_sys,
+                       anchor_first=True, block_n=b.block_n)
+        np.testing.assert_allclose(np.asarray(grams["__arena__"][key]),
+                                   np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_checkpoint_interop_arena_and_perleaf(tmp_path):
+    """A checkpoint written by an arena run restores bit-exactly into a
+    per-leaf run and vice versa: the on-disk format is the leaf-wise
+    layout either way."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.train.state import TrainState
+
+    rng = np.random.default_rng(13)
+    sizes = {"a": (40,), "b": (10, 13), "c": (333,)}
+    params = _int_params(rng, sizes)
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg()
+    acc_a, p_a, bufs_a, grams_a = _run_cycles(cfg, params, deltas, 6)
+    st_a = TrainState(p_a, None, jnp.asarray(6, jnp.int32), bufs_a, grams_a)
+    save_checkpoint(tmp_path / "arena", acc_a.state_leafwise(st_a), 6)
+
+    # restore into a per-leaf run: template = per-leaf layout
+    cfg_o = dataclasses.replace(cfg, arena=False)
+    acc_o = DMDAccelerator(cfg_o)
+    bufs_t = acc_o.init(params)
+    st_t = TrainState(params, None, jnp.asarray(0, jnp.int32), bufs_t,
+                      acc_o.init_grams(bufs_t))
+    back = restore_checkpoint(tmp_path / "arena", st_t)
+    oracle = acc_a.state_leafwise(st_a)
+    for x, y in zip(jax.tree_util.tree_leaves(back.dmd_buffers),
+                    jax.tree_util.tree_leaves(oracle.dmd_buffers)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    # and back the other way: per-leaf checkpoint -> arena run
+    save_checkpoint(tmp_path / "leaf", back, 6)
+    acc_b = DMDAccelerator(cfg)
+    bufs_b = acc_b.init(params)
+    st_b = TrainState(params, None, jnp.asarray(0, jnp.int32), bufs_b,
+                      acc_b.init_grams(bufs_b))
+    restored = restore_checkpoint(tmp_path / "leaf",
+                                  acc_b.state_leafwise(st_b))
+    packed = acc_b.state_arenaize(restored)
+    assert arena_mod.is_arena_state(packed.dmd_buffers)
+    for key in bufs_a["__arena__"]:
+        np.testing.assert_array_equal(
+            np.asarray(packed.dmd_buffers["__arena__"][key]),
+            np.asarray(bufs_a["__arena__"][key]), err_msg=key)
+        np.testing.assert_array_equal(
+            np.asarray(packed.dmd_gram["__arena__"][key]),
+            np.asarray(grams_a["__arena__"][key]), err_msg=key)
+
+
+def test_jump_tree_requires_bucket_table_for_packed_buffers():
+    """jump_tree on arena-packed buffers without the bucket table must
+    raise, not silently leave every packed leaf unjumped."""
+    from repro.core.accelerator import _none_like, jump_tree
+    params = {"w": jnp.ones((16, 16))}
+    acc = DMDAccelerator(_cfg())
+    bufs = acc.init(params)
+    plans = acc.plans_for(params)
+    with pytest.raises(ValueError, match="bucket table"):
+        jump_tree(acc.cfg, plans, params, bufs, _none_like(bufs), 1.0)
+
+
+def test_state_specs_requires_bucket_table_for_packed_state():
+    """Passing an arena-layout state to state_specs without the bucket
+    table must raise, not silently mark lane-sharded ring buffers
+    replicated (a multi-GiB-per-device cliff on real meshes)."""
+    from repro.launch.inputs import state_specs
+    from repro.train.state import TrainState
+    params = {"w": jnp.ones((16, 16))}
+    acc = DMDAccelerator(_cfg())
+    bufs = acc.init(params)
+    st = TrainState(params, None, jnp.zeros((), jnp.int32), bufs,
+                    acc.init_grams(bufs))
+    with pytest.raises(ValueError, match="bucket table"):
+        state_specs(st, None)
+    specs = state_specs(st, None, plans=acc.plans_for(params),
+                        arena=acc.arena_for(params))
+    assert jax.tree_util.tree_leaves(specs)
+
+
+def test_plan_table_shows_arena_columns():
+    params = {"w": jnp.ones((16, 16)), "b": jnp.ones((48,))}
+    acc = DMDAccelerator(_cfg())
+    table = acc.plan_table(params)
+    assert "arena" in table and "g0-float32" in table
+    acc2 = DMDAccelerator(_cfg(arena=False))
+    table2 = acc2.plan_table(params)
+    assert "g0-float32" not in table2

@@ -1,0 +1,112 @@
+"""Donation audit (ISSUE 5 satellite): ``donate_argnums=(0,)`` must
+actually donate the snapshot buffers and Grams — per-leaf and packed-arena
+— in the fused train step and BOTH dmd_step variants. Verified against the
+compiled HLO: every buffer/Gram leaf appears in the module's
+``input_output_alias`` table, and no copy op of a buffer/Gram shape
+survives (a silently-dropped donation shows up as exactly such a copy).
+
+The plain (ungated) jump reads only the buffers — the param VALUES are
+dead, XLA prunes those inputs, and only the pass-through leaves can alias;
+the gated (controller) jump reads params for the loss gate, so there the
+WHOLE TrainState must alias through (the rollback branch passes the
+donated pre-jump params and moments straight through untouched).
+"""
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (DMDConfig, DMDControllerConfig,
+                                OptimizerConfig, TrainConfig)
+from repro.data.tokens import synthetic_lm_batches
+from repro.models.transformer import LanguageModel
+from repro.train import Trainer
+
+
+def _setup(controller=None, arena=True):
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
+                 n_heads=2, n_kv_heads=1, head_dim=16)
+    acfg = dataclasses.replace(
+        acfg, model=mc,
+        dmd=DMDConfig(enabled=True, m=4, s=10, tol=1e-4, warmup_steps=4,
+                      cooldown_steps=2, arena=arena,
+                      controller=controller or DMDControllerConfig()),
+        optimizer=OptimizerConfig(name="adam", lr=3e-3, schedule="constant"),
+        parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
+                                     remat="none"),
+        train=TrainConfig(global_batch=4, seq_len=16))
+    model = LanguageModel(mc, head_tp=False, chunk_k=16)
+    return Trainer(model, acfg), synthetic_lm_batches(0, 4, 16, mc.vocab_size)
+
+
+def _alias_count(hlo: str) -> int:
+    line = next(l for l in hlo.splitlines() if "input_output_alias" in l)
+    return len(re.findall(r"\{\d+\}: \(\d+", line))
+
+
+def _shape_str(leaf) -> str:
+    d = {"float32": "f32", "bfloat16": "bf16"}.get(str(leaf.dtype),
+                                                   str(leaf.dtype))
+    return d + "[" + ",".join(map(str, leaf.shape)) + "]"
+
+
+def _dmd_shapes(state):
+    out = set()
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        k = jax.tree_util.keystr(kp)
+        if leaf is not None and ("dmd_buffers" in k or "dmd_gram" in k):
+            out.add(_shape_str(leaf))
+    return out
+
+
+def _buffer_copies(hlo: str, shapes) -> list:
+    copies = re.findall(r"= (\S+?)\{[^}]*\} copy\(", hlo)
+    copies += re.findall(r"= (\S+?) copy\(", hlo)
+    return [c for c in copies if any(c.startswith(s) for s in shapes)]
+
+
+@pytest.mark.parametrize("arena", [True, False])
+def test_train_step_donates_everything(arena):
+    trainer, batches = _setup(arena=arena)
+    state = trainer.init_state()
+    hlo = trainer.train_step.lower(
+        state, next(batches), jnp.asarray(5, jnp.int32)).compile().as_text()
+    n_leaves = len(jax.tree_util.tree_leaves(state))
+    assert _alias_count(hlo) == n_leaves
+    assert _buffer_copies(hlo, _dmd_shapes(state)) == []
+
+
+@pytest.mark.parametrize("arena", [True, False])
+def test_plain_dmd_step_donates_buffers_and_grams(arena):
+    trainer, _ = _setup(arena=arena)
+    state = trainer.init_state()
+    relax = jnp.ones((trainer.acc.n_groups,), jnp.float32)
+    hlo = trainer.dmd_step.lower(state, relax,
+                                 groups=(0,)).compile().as_text()
+    shapes = _dmd_shapes(state)
+    n_dmd = sum(1 for kp, l in jax.tree_util.tree_flatten_with_path(state)[0]
+                if l is not None
+                and ("dmd_buffers" in jax.tree_util.keystr(kp)
+                     or "dmd_gram" in jax.tree_util.keystr(kp)))
+    # buffers+grams (and the step scalar) pass through -> must all alias
+    assert _alias_count(hlo) >= n_dmd
+    assert _buffer_copies(hlo, shapes) == []
+
+
+@pytest.mark.parametrize("arena", [True, False])
+def test_gated_dmd_step_donates_whole_state(arena):
+    """The controller path: accept/scale/reject all thread the donated
+    state — every TrainState leaf must alias input to output."""
+    trainer, batches = _setup(
+        controller=DMDControllerConfig(enabled=True, eval_rows=4),
+        arena=arena)
+    state = trainer.init_state()
+    relax = jnp.ones((trainer.acc.n_groups,), jnp.float32)
+    hlo = trainer.dmd_step.lower(state, relax, next(batches),
+                                 groups=(0,)).compile().as_text()
+    assert _alias_count(hlo) == len(jax.tree_util.tree_leaves(state))
+    assert _buffer_copies(hlo, _dmd_shapes(state)) == []

@@ -205,8 +205,20 @@ def test_plans_carry_group_and_heterogeneous_buffers():
     assert plans["b"].sched.phase == 3
     bufs = acc.init(params)
     grams = acc.init_grams(bufs)
-    assert bufs["w"].shape == (8, 16, 8) and bufs["b"].shape == (4, 8)
-    assert grams["w"].shape == (8, 8) and grams["b"].shape == (4, 4)
+    # default route packs each group into its own arena bucket (m differs
+    # per group -> different bucket); the leaf-wise view keeps the
+    # heterogeneous per-leaf shapes
+    from repro.core import arena as arena_mod
+    from repro.train.state import TrainState
+    assert arena_mod.is_arena_state(bufs)
+    assert sorted(b.m for b in acc.arena_for(params).values()) == [4, 8]
+    lw = acc.state_leafwise(TrainState(params, None,
+                                       jnp.zeros((), jnp.int32), bufs,
+                                       grams))
+    assert lw.dmd_buffers["w"].shape == (8, 16, 8)
+    assert lw.dmd_buffers["b"].shape == (4, 8)
+    assert lw.dmd_gram["w"].shape == (8, 8)
+    assert lw.dmd_gram["b"].shape == (4, 4)
     # plan_table shows the schedule columns
     table = acc.plan_table()
     assert "group" in table and "phase" in table
@@ -244,10 +256,17 @@ def test_staggered_streaming_grams_match_oracle_at_window_close():
                                              jnp.float32), params)
         if acc.should_record(t):
             bufs, grams = acc.record(bufs, params, acc.slots(t), grams)
-        for g in acc.apply_groups(t):
+        closing = acc.apply_groups(t)
+        if closing:
+            # audit through the leaf-wise view (the run carries arenas)
+            from repro.train.state import TrainState
+            lw = acc.state_leafwise(TrainState(
+                params, None, jnp.zeros((), jnp.int32), bufs, grams))
+        for g in closing:
             key = "w" if g == 0 else "b"
-            oracle = dmd_mod.gram_matrix(bufs[key], anchor=cfg.anchor)
-            np.testing.assert_allclose(np.asarray(grams[key]),
+            oracle = dmd_mod.gram_matrix(lw.dmd_buffers[key],
+                                         anchor=cfg.anchor)
+            np.testing.assert_allclose(np.asarray(lw.dmd_gram[key]),
                                        np.asarray(oracle), rtol=1e-5,
                                        atol=1e-5)
             checked += 1

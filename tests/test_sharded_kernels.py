@@ -27,6 +27,22 @@ def run_worker(*args, ndev="8", timeout=600):
     return out.stdout
 
 
+def test_sharded_arena_buckets_match_perleaf_oracle():
+    """Packed arenas for SHARDED buckets (DESIGN.md §7): leaves sharded
+    over the same contracted-dim axes pack into one lane-sharded (m, N)
+    ring buffer; buffers/Grams/jump match the per-leaf route and the
+    record+update HLO contains no buffer-sized all-gather."""
+    out = run_worker("arena_sharded")
+    assert "ARENA_SHARDED_OK" in out
+    assert float(next(l.split()[1] for l in out.splitlines()
+                      if l.startswith("ARENA_BUF_ERR"))) == 0.0
+    assert float(next(l.split()[1] for l in out.splitlines()
+                      if l.startswith("ARENA_GRAM_ERR"))) < 1e-5
+    ag = next(l.split() for l in out.splitlines()
+              if l.startswith("ARENA_AG_MAX_BYTES"))
+    assert int(ag[1]) < int(ag[3])
+
+
 def test_shard_map_kernels_match_oracle_and_no_allgather():
     out = run_worker("sharded_kernels")
     assert "SHARDED_KERNELS_OK" in out

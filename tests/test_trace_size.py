@@ -1,0 +1,104 @@
+"""Trace-size guard (ISSUE 5 satellite): pin the jitted train step's jaxpr
+equation count for a pollutant-MLP-style config and a reduced transformer
+config, so per-leaf unrolling can never silently regress the trace again.
+
+The packed-arena route (DESIGN.md §7) replaced the O(leaves) per-leaf
+record/gram fan-out with O(buckets) segmented passes; these ceilings sit
+between the measured arena-route counts (with ~25% slack for innocuous
+refactors) and the per-leaf route's counts — e.g. the 24-layer-MLP fused
+step traces 2906 equations per-leaf vs 1731 packed (the remainder is the
+model's own forward+backward+adam, which the arena cannot shrink), and
+the reduced tinyllama step 1137 vs 870. If a change
+pushes the count past the pin, either the change reintroduced a per-leaf
+unroll (fix it) or it legitimately grew the program (re-measure and bump
+the pin in the SAME commit, with the reason)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (DMDConfig, OptimizerConfig, TrainConfig)
+from repro.models.mlp_net import init_mlp, mse_loss
+from repro.models.transformer import LanguageModel
+from repro.trace import count_eqns as _count_eqns
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+
+
+class _MLP:
+    def __init__(self, sizes):
+        self.sizes = sizes
+
+    def init(self, key):
+        return init_mlp(key, self.sizes)
+
+    def loss(self, params, batch):
+        return mse_loss(params, batch["x"], batch["y"]), None
+
+
+def test_deep_mlp_train_step_trace_pinned():
+    """24-layer MLP (48 DMD leaves, one bucket): the fused train step's
+    trace must stay bucket-sized, not leaf-sized."""
+    sizes = [32] * 25
+    model = _MLP(sizes)
+    acfg = get_config("pollutant-mlp")
+    acfg = dataclasses.replace(
+        acfg,
+        dmd=DMDConfig(m=6, s=10, warmup_steps=2, cooldown_steps=1),
+        optimizer=OptimizerConfig(name="adam", lr=1e-3),
+        train=TrainConfig(global_batch=8, seq_len=1))
+    step = make_train_step(model, acfg, loss_fn=lambda p, b: model.loss(
+        p, b)[0])
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core.accelerator import DMDAccelerator
+    acc = DMDAccelerator(acfg.dmd)
+    bufs = acc.init(params)
+    state = TrainState(params, jax.eval_shape(
+        lambda p: p, params), jnp.zeros((), jnp.int32), bufs,
+        acc.init_grams(bufs))
+    batch = {"x": jnp.zeros((8, 32)), "y": jnp.zeros((8, 32))}
+    # opt_state shaped like adam's: build the real one
+    from repro.optim import make_optimizer
+    opt = make_optimizer(acfg.optimizer)
+    state = state._replace(opt_state=opt.init(params))
+    jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
+    n = _count_eqns(jx.jaxpr)
+    # measured 1731 on the arena route vs 2906 per-leaf (the fixed cost is
+    # the 24-layer forward+backward+adam); pin below the per-leaf count
+    # with ~25% slack over the arena measurement
+    assert n < 2200, f"fused-step trace grew to {n} equations " \
+        "(per-leaf unroll regression? see tests/test_trace_size.py)"
+
+
+def test_transformer_train_step_trace_pinned():
+    """Reduced tinyllama: scan-stacked leaves + embeddings, two dtypes."""
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
+                 n_heads=2, n_kv_heads=1, head_dim=16)
+    acfg = dataclasses.replace(
+        acfg, model=mc,
+        dmd=DMDConfig(m=4, s=10, warmup_steps=4, cooldown_steps=2),
+        optimizer=OptimizerConfig(name="adam", lr=3e-3),
+        parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
+                                     remat="none"),
+        train=TrainConfig(global_batch=4, seq_len=16))
+    model = LanguageModel(mc, head_tp=False, chunk_k=16)
+    from repro.core.accelerator import DMDAccelerator
+    acc = DMDAccelerator(acfg.dmd, stack_dims=model.param_stack_dims())
+    step = make_train_step(model, acfg, acc=acc)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.optim import make_optimizer
+    opt = make_optimizer(acfg.optimizer)
+    bufs = acc.init(params)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32),
+                       bufs, acc.init_grams(bufs))
+    batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
+             "labels": jnp.zeros((4, 16), jnp.int32)}
+    jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
+    n = _count_eqns(jx.jaxpr)
+    # measured 870 on the arena route vs 1137 per-leaf; the pin sits below
+    # the per-leaf count so a route regression fails before any slack is
+    # eaten by legitimate model-side growth
+    assert n < 1100, f"fused-step trace grew to {n} equations " \
+        "(per-leaf unroll regression? see tests/test_trace_size.py)"

@@ -15,7 +15,7 @@ from repro.train import Trainer
 
 
 def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0,
-                groups=(), controller=None):
+                groups=(), controller=None, arena=True):
     from repro.configs.base import DMDControllerConfig
     acfg = get_config("tinyllama-1.1b")
     mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
@@ -24,7 +24,7 @@ def _tiny_setup(tmpdir=None, dmd=False, fail_at=None, ckpt_every=0,
         acfg,
         model=mc,
         dmd=DMDConfig(enabled=dmd, m=4, s=10, tol=1e-4, warmup_steps=4,
-                      cooldown_steps=2, groups=groups,
+                      cooldown_steps=2, groups=groups, arena=arena,
                       controller=controller or DMDControllerConfig()),
         optimizer=OptimizerConfig(name="adam", lr=3e-3, schedule="constant"),
         parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
@@ -163,13 +163,18 @@ def test_default_config_fused_path_matches_pre_refactor_oracle():
     step — one scalar dmd_slot argument, one lax.cond, scalar relax, full
     opt reset — reimplemented verbatim here, driven by the legacy scalar
     schedule, must produce the BIT-IDENTICAL trajectory to the new
-    step-index-driven Trainer path."""
+    step-index-driven Trainer path.
+
+    Pinned to dmd.arena=False: the per-leaf route IS the oracle the packed
+    arenas are A/B'd against (tests/test_arena.py pins arena-vs-per-leaf
+    agreement separately), and this test's hand-rolled legacy step is
+    per-leaf by construction."""
     from repro.core import snapshots as snap
     from repro.core.accelerator import jump_tree
     from repro.optim import apply_updates, make_optimizer
     from repro.train.state import TrainState
 
-    trainer, batches = _tiny_setup(dmd=True)
+    trainer, batches = _tiny_setup(dmd=True, arena=False)
     acfg, model, acc = trainer.acfg, trainer.model, trainer.acc
     cfg = acfg.dmd
     steps = 16
@@ -363,12 +368,17 @@ def test_restore_rebuilds_grams_from_pre_streaming_checkpoint(tmp_path):
     # run past warmup+cooldown so the buffers hold real snapshots mid-window
     state = trainer.fit(batches, steps=9)
     assert state.dmd_gram is not None
-    # simulate the old format: drop the gram subtree before saving
-    save_checkpoint(str(tmp_path), state._replace(dmd_gram=None), 9)
+    # simulate the old format: leaf-wise on disk (checkpoints are ALWAYS
+    # written leaf-wise — arenas unpacked), gram subtree dropped
+    save_checkpoint(str(tmp_path),
+                    trainer.acc.state_leafwise(state)._replace(dmd_gram=None),
+                    9)
 
     trainer2, _ = _tiny_setup(tmp_path, dmd=True)
     restored = trainer2.restore()
     assert restored is not None and int(restored.step) == 9
+    # verify against the leaf-wise view (the run itself carries arenas)
+    restored = trainer2.acc.state_leafwise(restored)
     plans = trainer2.acc.plans_for(restored.params)
 
     def chk(plan, buf, g):
