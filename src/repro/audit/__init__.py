@@ -1,0 +1,46 @@
+"""repro.audit — compile-time invariant auditor (DESIGN.md §8).
+
+The DMD speedup survives at scale only because of fragile compile-time
+invariants: donated buffers (no hidden copies of the O(m·n) snapshot
+state), all-gather-free sharded Grams (the psum'd partials are O(n_sys·m²),
+never a gather of the buffer), O(buckets) traces (the packed-arena route,
+DESIGN.md §7), fp32 Grams with no silent casts, no host round-trips inside
+the jitted hot loop, 128-lane-aligned arena segments, and a
+collision-free group schedule. PRs 1–5 each re-guarded a slice of these
+with one-off regexes over compiled HLO; this package is the ONE reusable
+static-analysis layer: a registry of passes that run over (a) lowered
+jaxprs + compiled HLO of the fused train step, both dmd_step variants and
+the record/update path, and (b) the static LeafPlan / GroupSchedule /
+ArenaBucket tables — for any config, before paying for a benchmark run.
+
+    PYTHONPATH=src python -m repro.audit --arch tinyllama-1.1b --reduced
+    PYTHONPATH=src python -m repro.audit.lint src/
+
+The CLI emits a text report plus ``AUDIT_<arch>.json`` and exits nonzero
+on violation. The CI ``audit`` lane runs it over the pinned configs, and
+``--mutate <name>`` seeds known violations (dropped donation, forced
+all-gather, misaligned arena offset, overlapping group rules) to prove
+every pass bites. tests/test_donation.py, tests/test_trace_size.py and
+tests/test_sharded_kernels.py route through the same passes — no
+standalone HLO-regex logic anywhere else.
+"""
+from repro.audit.registry import (AuditReport, PassResult, Violation,
+                                  get_pass, list_passes, register_pass)
+
+__all__ = ["AuditReport", "PassResult", "Violation", "get_pass",
+           "list_passes", "register_pass", "run_audit"]
+
+
+def run_audit(arch: str, *, reduced: bool = False, mesh_shape=None,
+              mutate=None, passes=None) -> AuditReport:
+    """Build the audit targets for ``arch`` and run every registered pass
+    (or the named subset). Convenience wrapper over
+    ``targets.build_context`` + ``registry.run_passes`` — the CLI in
+    ``__main__`` adds the report file / exit-code handling."""
+    from repro.audit import passes as _passes  # noqa: F401  (registers)
+    from repro.audit.registry import run_passes
+    from repro.audit.targets import build_context
+
+    ctx = build_context(arch, reduced=reduced, mesh_shape=mesh_shape,
+                        mutate=mutate)
+    return run_passes(ctx, only=passes)

@@ -1,0 +1,88 @@
+"""CLI: ``PYTHONPATH=src python -m repro.audit --arch <name> [--reduced]``.
+
+Prints the text report, writes ``AUDIT_<config_key>.json`` (report + the
+static plan/schedule/arena tables) under ``--out``, and exits nonzero iff
+any pass records an error-severity violation. ``--mutate`` seeds a named
+violation (repro.audit.mutations) — CI uses it to prove the lane bites:
+
+    python -m repro.audit --arch tinyllama-1.1b --reduced            # clean
+    python -m repro.audit --arch tinyllama-1.1b --reduced \\
+        --mutate drop-donation                                       # rc=1
+
+``--mesh DxM`` audits the sharded build: it must be parsed BEFORE jax is
+imported so the host-platform device count can be forced (same idiom as
+launch/dryrun.py) — hence the lazy imports below.
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def _parse_mesh(s):
+    try:
+        dims = tuple(int(x) for x in s.lower().split("x"))
+        assert dims and all(d >= 1 for d in dims)
+        return dims
+    except Exception:
+        raise argparse.ArgumentTypeError(
+            f"--mesh wants DxM (e.g. 2x4), got {s!r}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.audit",
+        description="static invariant auditor (DESIGN.md §8)")
+    ap.add_argument("--arch", required=True,
+                    help="arch config name (repro.configs)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the model to the tier-1 audit size")
+    ap.add_argument("--mesh", type=_parse_mesh, default=None,
+                    help="audit the sharded build on a DxM host mesh "
+                         "(forces that many CPU devices)")
+    ap.add_argument("--mutate", default=None,
+                    help="seed a named violation (see repro.audit."
+                         "mutations; CI mutation check)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of passes to run")
+    ap.add_argument("--out", default=".",
+                    help="directory for AUDIT_<config_key>.json "
+                         "(default .)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the JSON artifact")
+    args = ap.parse_args(argv)
+
+    if args.mesh:
+        n = 1
+        for d in args.mesh:
+            n *= d
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro.audit import passes as _passes  # noqa: F401  (registers)
+    from repro.audit.registry import run_passes
+    from repro.audit.targets import build_context
+
+    only = args.passes.split(",") if args.passes else None
+    ctx = build_context(args.arch, reduced=args.reduced,
+                        mesh_shape=args.mesh, mutate=args.mutate)
+    report = run_passes(ctx, only=only)
+
+    print(report.render())
+    if not args.no_json:
+        payload = report.to_dict()
+        payload["meta"] = ctx.meta()
+        payload["tables"] = ctx.tables()
+        # keyed by config_key (arch + -reduced/-mesh) so the CI audit lane
+        # can run several builds of one arch into the same artifact dir
+        path = os.path.join(args.out, f"AUDIT_{ctx.config_key}.json")
+        os.makedirs(args.out or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"wrote {path}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""AST lint: ``PYTHONPATH=src python -m repro.audit.lint src/``.
+
+Static source-level rules complementing the jaxpr/HLO passes — things
+that are invisible after tracing because they already happened at trace
+time. Scope is two-tier:
+
+HOT modules (kernels/ + the jitted step/DMD core — see HOT_PREFIXES),
+where trace-time host work either breaks under jit or silently bakes a
+host value into the compiled program:
+
+  host-time        time.time/perf_counter/monotonic/sleep, datetime.now —
+                   a wall-clock read at trace time is a frozen constant
+  host-callback    jax.pure_callback / io_callback / debug.callback
+                   (whitelist: core/dmd.py, the eig-mode eigensolve — the
+                   jaxpr-level pass checks where it may be CALLED from)
+  host-sync        .item() / jax.device_get / .block_until_ready() —
+                   device->host syncs inside kernel/step code
+  nonstatic-shape  int(...)/float(...) wrapped around a jnp./jax. call —
+                   concretizes a traced value at trace time
+                   (ConcretizationTypeError under jit, or a silently
+                   frozen shape/scalar)
+
+EVERY module:
+
+  unused-import    import debt (also enforced by ruff F401 in CI; this
+                   rule keeps the check runnable in the hermetic test
+                   container where ruff is not installed)
+
+Exit code is nonzero iff any finding. ``# lint: allow-<rule>`` on the
+offending line suppresses it (used sparingly; each use is greppable).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# Modules whose code runs (or is traced) inside the jitted hot loop.
+HOT_PREFIXES = (
+    "repro/kernels/",
+    "repro/core/",
+    "repro/train/step.py",
+)
+# The eig-mode batched eigensolve is the ONE sanctioned host callback.
+CALLBACK_WHITELIST = ("repro/core/dmd.py",)
+
+HOST_TIME = {("time", "time"), ("time", "perf_counter"),
+             ("time", "monotonic"), ("time", "sleep"),
+             ("datetime", "now"), ("datetime.datetime", "now")}
+HOST_CALLBACK = {"pure_callback", "io_callback"}
+HOST_SYNC = {"item", "block_until_ready", "device_get"}
+
+Finding = Tuple[str, int, str, str]     # (file, line, rule, detail)
+
+
+def _dotted(node) -> str:
+    """'a.b.c' for an attribute/name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _allowed(src_lines: List[str], lineno: int, rule: str) -> bool:
+    line = src_lines[lineno - 1] if 0 < lineno <= len(src_lines) else ""
+    if f"lint: allow-{rule}" in line:
+        return True
+    # one comment serves both linters: a ruff-style noqa for the matching
+    # code (F401 = unused import) suppresses the same rule here
+    return rule == "unused-import" and "noqa" in line and "F401" in line
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel: str, src: str, hot: bool):
+        self.rel = rel
+        self.lines = src.splitlines()
+        self.hot = hot
+        self.findings: List[Finding] = []
+        self.imports: dict = {}          # alias -> (lineno, col)
+        self.used: set = set()
+
+    def _add(self, node, rule: str, detail: str):
+        if not _allowed(self.lines, node.lineno, rule):
+            self.findings.append((self.rel, node.lineno, rule, detail))
+
+    # -- unused-import bookkeeping ------------------------------------
+    def visit_Import(self, node):
+        for a in node.names:
+            alias = a.asname or a.name.split(".")[0]
+            self.imports.setdefault(alias, node.lineno)
+
+    def visit_ImportFrom(self, node):
+        for a in node.names:
+            if a.name == "*":
+                continue
+            alias = a.asname or a.name
+            self.imports.setdefault(alias, node.lineno)
+
+    def visit_Name(self, node):
+        if isinstance(node.ctx, ast.Load):
+            self.used.add(node.id)
+
+    def visit_Assign(self, node):
+        # names re-exported via __all__ count as used (package façades)
+        targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+        if "__all__" in targets:
+            for el in ast.walk(node.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value,
+                                                               str):
+                    self.used.add(el.value)
+        self.generic_visit(node)
+
+    # -- hot-module rules ---------------------------------------------
+    def visit_Call(self, node):
+        dotted = _dotted(node.func)
+        leaf = dotted.rsplit(".", 1)[-1] if dotted else ""
+        if self.hot:
+            for mod, fn in HOST_TIME:
+                if dotted == f"{mod}.{fn}":
+                    self._add(node, "host-time",
+                              f"{dotted}() at trace time is a frozen "
+                              "host-clock read")
+            if leaf in HOST_CALLBACK and not any(
+                    self.rel.endswith(w) for w in CALLBACK_WHITELIST):
+                self._add(node, "host-callback",
+                          f"{dotted or leaf}() outside the eig whitelist "
+                          f"({CALLBACK_WHITELIST[0]})")
+            if leaf in HOST_SYNC and isinstance(node.func, ast.Attribute):
+                self._add(node, "host-sync",
+                          f".{leaf}() forces a device->host sync in a "
+                          "hot module")
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in ("int", "float") and node.args):
+                inner = node.args[0]
+                if isinstance(inner, ast.Call):
+                    d = _dotted(inner.func)
+                    if d.startswith(("jnp.", "jax.")):
+                        self._add(
+                            node, "nonstatic-shape",
+                            f"{node.func.id}({d}(...)) concretizes a "
+                            "traced value at trace time — shape math in "
+                            "kernel/step modules must be static Python "
+                            "ints")
+        self.generic_visit(node)
+
+    def finish(self):
+        for alias, lineno in sorted(self.imports.items(),
+                                    key=lambda kv: kv[1]):
+            if alias in self.used or alias == "_":
+                continue
+            if alias in ("annotations",):    # from __future__
+                continue
+            if not _allowed(self.lines, lineno, "unused-import"):
+                self.findings.append(
+                    (self.rel, lineno, "unused-import",
+                     f"{alias!r} imported but unused"))
+
+
+def lint_file(path: Path, root: Path) -> List[Finding]:
+    rel = path.relative_to(root).as_posix() if root in path.parents \
+        else path.as_posix()
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [(rel, e.lineno or 0, "syntax", str(e))]
+    hot = any(rel.endswith(h) or f"/{h}" in rel or rel.startswith(h)
+              for h in HOT_PREFIXES)
+    v = _Visitor(rel, src, hot)
+    v.visit(tree)
+    v.finish()
+    return v.findings
+
+
+def lint_paths(paths) -> List[Finding]:
+    findings: List[Finding] = []
+    for p in paths:
+        p = Path(p)
+        root = p if p.is_dir() else p.parent
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f, root))
+    return findings
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    if not args:
+        print("usage: python -m repro.audit.lint <path> [path ...]")
+        return 2
+    findings = lint_paths(args)
+    for rel, line, rule, detail in findings:
+        print(f"{rel}:{line}: [{rule}] {detail}")
+    print(f"repro.audit.lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""Seeded violations: named mutations that break ONE audited invariant.
+
+The audit lane is only trustworthy if it is known to bite — each mutation
+here injects exactly the defect its pass exists to catch, and
+tests/test_audit.py (plus the CI mutation step) asserts the mutated build
+exits nonzero while the clean build stays green:
+
+  drop-donation    compile every step without donate_argnums
+                   -> donation-alias fails (empty alias table + copies)
+  force-allgather  reshard arena buffers sharded->replicated inside
+                   record_update (needs --mesh) -> collective-budget fails
+                   (buffer-sized all-gather)
+  misalign-arena   shift one ArenaSegment's lane_start off the block grid
+                   -> arena-layout fails (alignment + contiguity)
+  overlap-groups   add two match-everything group rules with distinct
+                   phases -> schedule-conflict fails (overlap; and if the
+                   residues still collide, the stagger check too)
+
+Mutations compose with ``build_context`` at three seams: ``config``
+rewrites the ArchConfig before anything is built, ``donate`` feeds
+``audit_step_fns``, ``wrap_fns`` replaces jitted entry points, and
+``post`` edits the static tables after the build (for table-only passes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+
+@dataclass(frozen=True)
+class Mutation:
+    name: str
+    doc: str
+    expect_fail: str                     # the pass this mutation must trip
+    donate: bool = True
+    needs_mesh: bool = False
+    config: Optional[Callable] = None    # acfg -> acfg
+    wrap_fns: Optional[Callable] = None  # (acc, fns, mesh) -> fns
+    post: Optional[Callable] = None      # ctx -> None
+
+
+_REGISTRY: Dict[str, Mutation] = {}
+
+
+def _register(m: Mutation) -> Mutation:
+    _REGISTRY[m.name] = m
+    return m
+
+
+def get(name: str) -> Mutation:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown mutation {name!r}; have "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_mutations():
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+
+_register(Mutation(
+    name="drop-donation",
+    doc="compile train/dmd/record steps with donate_argnums=()",
+    expect_fail="donation-alias",
+    donate=False))
+
+
+def _force_allgather_fns(acc, fns, mesh):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import arena as arena_mod
+
+    if mesh is None:
+        raise ValueError("force-allgather needs --mesh (a sharded build): "
+                         "on one device there is nothing to gather")
+
+    def record_update(buffers, grams, params, slots):
+        if arena_mod.is_arena_state(buffers):
+            arenas, leaf = arena_mod.split_state(buffers)
+            gathered = {}
+            for key, buf in arenas.items():
+                b = acc._arena_table()[key]
+                if b.lane_axes:
+                    # lane-shard, then demand the replicated buffer back:
+                    # GSPMD must materialize a full-buffer all-gather.
+                    spec = P(None, *tuple(b.lane_spec()))
+                    buf = jax.lax.with_sharding_constraint(
+                        buf, NamedSharding(mesh, spec))
+                    buf = jax.lax.with_sharding_constraint(
+                        buf, NamedSharding(mesh, P()))
+                gathered[key] = buf
+            buffers = arena_mod.make_state(gathered, leaf)
+        return acc.record(buffers, params, slots, grams)
+
+    out = dict(fns)
+    out["record_update"] = jax.jit(record_update, donate_argnums=(0, 1))
+    return out
+
+
+_register(Mutation(
+    name="force-allgather",
+    doc="reshard arena buffers sharded->replicated inside record_update",
+    expect_fail="collective-budget",
+    needs_mesh=True,
+    wrap_fns=_force_allgather_fns))
+
+
+def _misalign_arena(ctx) -> None:
+    for key in sorted(ctx.arena):
+        b = ctx.arena[key]
+        if not b.segments:
+            continue
+        seg = dataclasses.replace(b.segments[-1],
+                                  lane_start=b.segments[-1].lane_start + 1)
+        ctx.arena[key] = dataclasses.replace(
+            b, segments=b.segments[:-1] + (seg,))
+        return
+    raise ValueError("misalign-arena: no arena segments in this config "
+                     "(dmd.arena off or every leaf excluded)")
+
+
+_register(Mutation(
+    name="misalign-arena",
+    doc="shift one ArenaSegment.lane_start off the 128-lane block grid",
+    expect_fail="arena-layout",
+    post=_misalign_arena))
+
+
+def _overlap_groups(acfg):
+    from repro.core.schedule import DMDGroupRule
+    rules = (DMDGroupRule(name="overlap-a", path_regex="", phase=0),
+             DMDGroupRule(name="overlap-b", path_regex="", phase=1))
+    return dataclasses.replace(
+        acfg, dmd=dataclasses.replace(acfg.dmd, groups=rules))
+
+
+_register(Mutation(
+    name="overlap-groups",
+    doc="two match-everything group rules with distinct phases",
+    expect_fail="schedule-conflict",
+    config=_overlap_groups))

@@ -1,0 +1,510 @@
+"""The built-in audit passes (DESIGN.md §8).
+
+Each pass is a pure function over an ``AuditContext`` — traced jaxprs,
+compiled HLO, and the static plan/schedule/arena tables — registered under
+a stable name. The registry order below is the report order:
+
+  donation-alias            dropped donate_argnums / buffer-shaped copies
+  collective-budget         analytic psum budget + buffer-sized all-gather ban
+  trace-budget              per-target eqn/launch ceilings (repro.audit.pins)
+  dtype-flow                silent fp32<->bf16 casts on Gram/buffer tensors
+  host-callback-in-hot-loop pure/io_callback in a jitted step (eig whitelist)
+  arena-layout              offset-table / alignment / eligibility invariants
+  schedule-conflict         overlapping rules, phase-residue collisions, clamps
+
+These are the SAME invariant checks the tier-1 audits assert
+(tests/test_donation.py, tests/test_trace_size.py route through them) —
+the CLI just runs them over every target at once and emits AUDIT_*.json.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from repro.audit import hlo as H
+from repro.audit.registry import Violation, register_pass
+
+ROUTES = ("pallas_flat", "pallas_shard_map", "dot_general")
+
+# collective-budget slack: XLA may split/fuse psums, carry counters, or pad;
+# the budget bounds the ORDER, not the byte.
+PSUM_SLACK, PSUM_FLOOR = 4, 4096
+
+# Targets whose all-reduce volume is NOT bounded by the DMD psum budget:
+# the gradient psum under data parallelism (train_step) and the gate
+# forward's activation collectives (the gated jump) are legitimately
+# buffer-/activation-sized. The all-gather ban still applies to them.
+_UNBUDGETED = ("train_step", "dmd_step_gated")
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation-alias
+# ---------------------------------------------------------------------------
+
+@register_pass(
+    "donation-alias",
+    "every buffer/Gram leaf aliases input->output; zero dmd-shaped copies")
+def donation_alias(ctx):
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    # (expected alias floor, exact?) per target — the fused step and the
+    # gated jump must alias the WHOLE TrainState; the plain jump prunes
+    # dead param inputs so only a floor is pinned there.
+    for name, t in sorted(ctx.targets.items()):
+        if name in ("train_step", "dmd_step_gated"):
+            expect, exact = t.n_state_leaves, True
+        else:
+            expect, exact = t.n_dmd_leaves, False
+        ac = H.alias_count(t.hlo)
+        info[f"{name}.alias_count"] = ac
+        info[f"{name}.alias_expected"] = ("==" if exact else ">=") + str(expect)
+        if t.donated and (ac != expect if exact else ac < expect):
+            vs.append(Violation(
+                "donation-alias", name,
+                f"input_output_alias covers {ac} leaves, expected "
+                f"{'==' if exact else '>='} {expect} — a donation was "
+                "dropped (missing donate_argnums or a dead donated input)"))
+        elif not t.donated and ac >= max(expect, 1):
+            # mutation sanity: donate=() must NOT alias
+            info[f"{name}.note"] = "undonated build still aliases?"
+        if not t.donated:
+            vs.append(Violation(
+                "donation-alias", name,
+                "jit compiled without donate_argnums on the state "
+                f"(alias table covers {ac} of {expect} leaves)"))
+        buf_copies = H.copy_ops(t.hlo, t.buffer_shapes)
+        gram_copies = H.copy_ops(t.hlo, t.gram_shapes)
+        info[f"{name}.dmd_copies"] = len(buf_copies) + len(gram_copies)
+        if buf_copies:
+            vs.append(Violation(
+                "donation-alias", name,
+                f"{len(buf_copies)} snapshot-buffer-shaped copy op(s) in "
+                f"compiled HLO (dropped donation): "
+                f"{sorted(set(buf_copies))[:4]}"))
+        if gram_copies:
+            # The SPMD partitioner conservatively copies the O(n_sys*m^2)
+            # Gram stack across called computations on sharded builds —
+            # same order as the psum budget, not the O(m*n) failure mode.
+            vs.append(Violation(
+                "donation-alias", name,
+                f"{len(gram_copies)} Gram-shaped copy op(s): "
+                f"{sorted(set(gram_copies))[:4]}",
+                severity="warning" if ctx.mesh is not None else "error"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# collective-budget
+# ---------------------------------------------------------------------------
+
+def psum_budget_bytes(ctx) -> int:
+    """Analytic per-call Gram psum budget: O(n_sys * m^2) fp32 words over
+    every lane-sharded bucket / per-leaf plan (DESIGN.md §6) — the ONLY
+    collectives the DMD data pass is allowed."""
+    from repro.core.arena import arena_paths
+    from repro.core.leafplan import plan_entries
+
+    total = 0
+    for b in ctx.arena.values():
+        if b.lane_axes:
+            total += b.n_sys * (b.m * b.m + b.m) * 4
+    packed = arena_paths(ctx.arena)
+    for p in plan_entries(ctx.plans):
+        if p.path in packed:
+            continue
+        if p.psum_axes():
+            n_sys = _prod(p.shape[:p.stack_dims]) if p.stack_dims else 1
+            total += n_sys * (p.m * p.m + p.m) * 4
+    return total
+
+
+@register_pass(
+    "collective-budget",
+    "all-reduce bytes within the analytic O(n_sys*m^2) psum budget; "
+    "no buffer-sized all-gather anywhere")
+def collective_budget(ctx):
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    budget = psum_budget_bytes(ctx) * PSUM_SLACK + PSUM_FLOOR
+    info["psum_budget_bytes"] = budget
+    buf_bytes = [H.shape_bytes(s) for s in ctx.targets.get(
+        "train_step", next(iter(ctx.targets.values()))).buffer_shapes]
+    min_buf = min(buf_bytes) if buf_bytes else None
+    info["min_buffer_bytes"] = min_buf
+    for name, t in sorted(ctx.targets.items()):
+        totals, counts = H.parse_collectives(t.hlo)
+        info[f"{name}.collectives"] = {k: [counts[k], totals[k]]
+                                       for k in sorted(totals)}
+        # Buffer-shaped all-gather: banned in EVERY target. The model
+        # forward's TP gathers are activation-sized and never land on a
+        # snapshot/Gram shape; a gather RESULTING in one means a managed
+        # tensor was resharded to replicated instead of psum'd in Gram
+        # form.
+        dmd_shapes = set(t.buffer_shapes) | set(t.gram_shapes)
+        hits = [s for s in H.allgather_shapes(t.hlo) if s in dmd_shapes]
+        if hits:
+            vs.append(Violation(
+                "collective-budget", name,
+                f"all-gather materializes a snapshot/Gram-shaped tensor "
+                f"({sorted(set(hits))}): sharded DMD must psum "
+                "O(n_sys*m^2) Gram partials, never gather a buffer"))
+        if name not in _UNBUDGETED:
+            ag = H.max_allgather_bytes(t.hlo)
+            if min_buf is not None and ag >= min_buf:
+                vs.append(Violation(
+                    "collective-budget", name,
+                    f"buffer-sized all-gather ({ag} B >= smallest "
+                    f"snapshot buffer {min_buf} B) in a DMD-only program"
+                    " (no model forward to justify it)"))
+            ar = totals.get("all-reduce", 0)
+            if ar > budget:
+                vs.append(Violation(
+                    "collective-budget", name,
+                    f"all-reduce volume {ar} B exceeds the analytic Gram "
+                    f"psum budget {budget} B (O(n_sys*m^2) fp32 words "
+                    f"x{PSUM_SLACK} slack)"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# trace-budget
+# ---------------------------------------------------------------------------
+
+@register_pass(
+    "trace-budget",
+    "jaxpr equation / kernel-launch counts within the pinned ceilings")
+def trace_budget(ctx):
+    from repro import trace
+    from repro.audit import pins
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    for name, t in sorted(ctx.targets.items()):
+        n = trace.count_eqns(t.jaxpr)
+        launches = trace.count_launch_ops(t.jaxpr)
+        info[f"{name}.eqns"] = n
+        info[f"{name}.launches"] = launches
+        pin = pins.trace_ceiling(ctx.config_key, name)
+        if pin is None:
+            info[f"{name}.pin"] = "none (unpinned config: counts are info)"
+            continue
+        info[f"{name}.pin"] = dict(pin)
+        if "eqns" in pin and n > pin["eqns"]:
+            vs.append(Violation(
+                "trace-budget", name,
+                f"{n} jaxpr equations > pinned ceiling {pin['eqns']} for "
+                f"{ctx.config_key} — trace growth regression (see "
+                "repro/audit/pins.py for the bump procedure)"))
+        if "launches" in pin and launches > pin["launches"]:
+            vs.append(Violation(
+                "trace-budget", name,
+                f"{launches} launch-class ops > pinned ceiling "
+                f"{pin['launches']} for {ctx.config_key}"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# dtype-flow
+# ---------------------------------------------------------------------------
+
+def _twin(shape: str, dtype: str) -> str:
+    return dtype + "[" + shape.split("[", 1)[1]
+
+
+@register_pass(
+    "dtype-flow",
+    "no silent fp32<->bf16 casts on Gram or snapshot-buffer tensors")
+def dtype_flow(ctx):
+    import jax.numpy as jnp
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    snap_bf16 = jnp.dtype(ctx.cfg.snapshot_dtype) == jnp.bfloat16
+    upcast_ok = bool(getattr(ctx.cfg, "gram_upcast", True))
+    info["snapshot_dtype"] = str(jnp.dtype(ctx.cfg.snapshot_dtype))
+    info["gram_upcast"] = upcast_ok
+    for name, t in sorted(ctx.targets.items()):
+        converts = H.convert_ops(t.hlo)
+        info[f"{name}.converts"] = len(converts)
+        for res, opnd in converts:
+            # Grams are pinned fp32 end-to-end: any downcast is an error.
+            if opnd in t.gram_shapes and res == _twin(opnd, "bf16"):
+                vs.append(Violation(
+                    "dtype-flow", name,
+                    f"Gram tensor downcast {opnd} -> {res}: Grams must "
+                    "stay fp32 (accumulated inner products)"))
+            if opnd not in t.buffer_shapes:
+                continue
+            if not snap_bf16 and res == _twin(opnd, "bf16"):
+                vs.append(Violation(
+                    "dtype-flow", name,
+                    f"snapshot buffer downcast {opnd} -> {res} with "
+                    "snapshot_dtype=float32 (silent precision loss)"))
+            if snap_bf16 and not upcast_ok and res == _twin(opnd, "f32"):
+                vs.append(Violation(
+                    "dtype-flow", name,
+                    f"whole-buffer upcast {opnd} -> {res} with "
+                    "gram_upcast=False: the bf16 path must accumulate in "
+                    "f32 WITHOUT materializing an f32 buffer copy"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# host-callback-in-hot-loop
+# ---------------------------------------------------------------------------
+
+@register_pass(
+    "host-callback-in-hot-loop",
+    "no pure_callback/io_callback in jitted steps (eig-mode jump whitelisted)")
+def host_callback_in_hot_loop(ctx):
+    from repro import trace
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    eig = ctx.cfg.mode == "eig"
+
+    def is_cb(eqn) -> bool:
+        return "callback" in str(eqn.primitive)
+
+    for name, t in sorted(ctx.targets.items()):
+        n = trace.count_eqns(t.jaxpr, is_cb)
+        info[f"{name}.callbacks"] = n
+        if n == 0:
+            continue
+        if eig and name.startswith("dmd_step"):
+            info[f"{name}.whitelist"] = ("eig-mode batched eigensolve "
+                                         "(core/dmd.py::_host_eig)")
+            continue
+        vs.append(Violation(
+            "host-callback-in-hot-loop", name,
+            f"{n} host callback(s) in a jitted hot-loop program — each "
+            "forces a device->host sync per call (only the eig-mode "
+            "batched eigensolve inside dmd_step is whitelisted)"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# arena-layout
+# ---------------------------------------------------------------------------
+
+@register_pass(
+    "arena-layout",
+    "128-lane alignment, no system-straddling blocks, offset table "
+    "consistent with the LeafPlan pytree, eligibility partition exact")
+def arena_layout(ctx):
+    from repro.core.arena import arena_eligible, arena_paths
+    from repro.core.leafplan import plan_entries
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    entries = plan_entries(ctx.plans)
+    by_path = {p.path: p for p in entries}
+    packed = arena_paths(ctx.arena)
+    info["n_leaves"] = len(entries)
+    info["n_packed"] = len(packed)
+    info["n_buckets"] = len(ctx.arena)
+
+    # Eligibility partition (ISSUE 6 satellite): packed iff eligible —
+    # anchor=mean and sharded-stack leaves must be ABSENT from every
+    # bucket, and every excluded leaf must still carry a valid per-leaf
+    # plan (it trains through the per-leaf route, not silently dropped).
+    for p in entries:
+        elig = arena_eligible(p, ctx.cfg, ctx.mesh)
+        if elig and p.path not in packed:
+            vs.append(Violation(
+                "arena-layout", p.path,
+                "arena-eligible leaf missing from every ArenaBucket "
+                "(pays per-leaf dispatch it shouldn't)"))
+        if not elig and p.path in packed:
+            vs.append(Violation(
+                "arena-layout", p.path,
+                f"ineligible leaf packed into an arena (route={p.route}, "
+                f"anchor={ctx.cfg.anchor}, sharded={p.sharded}) — "
+                "mean re-anchoring / sharded stack axes cannot run the "
+                "segmented kernels"))
+        if p.path not in packed:
+            if p.route not in ROUTES:
+                vs.append(Violation("arena-layout", p.path,
+                                    f"unknown per-leaf route {p.route!r}"))
+            if p.sched is None or p.m < 2:
+                vs.append(Violation(
+                    "arena-layout", p.path,
+                    f"per-leaf plan has no usable window (m={p.m})"))
+            if p.route != "dot_general" and p.block_n % 128 != 0:
+                vs.append(Violation(
+                    "arena-layout", p.path,
+                    f"per-leaf block_n={p.block_n} is not a 128-lane "
+                    "multiple"))
+
+    seen: Dict[str, str] = {}
+    for key in sorted(ctx.arena):
+        b = ctx.arena[key]
+        where = f"arena[{key}]"
+        if b.block_n <= 0 or b.block_n % 128 != 0:
+            vs.append(Violation(
+                "arena-layout", where,
+                f"block_n={b.block_n} is not a positive 128-lane multiple"))
+        sys_cursor = lane_cursor = 0
+        for s in b.segments:
+            seg_where = f"{where}:{s.path}"
+            if s.path in seen:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"leaf packed twice (also in {seen[s.path]})"))
+            seen[s.path] = key
+            plan = by_path.get(s.path)
+            if plan is None:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    "segment has no LeafPlan (stale offset table)"))
+            elif (tuple(s.shape) != tuple(plan.shape)
+                  or s.stack_dims != plan.stack_dims
+                  or s.param_dtype != plan.dtype
+                  or b.group != plan.group):
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    "segment disagrees with the LeafPlan table "
+                    f"(shape {tuple(s.shape)} vs {tuple(plan.shape)}, "
+                    f"stack {s.stack_dims} vs {plan.stack_dims}, dtype "
+                    f"{s.param_dtype} vs {plan.dtype}, group {b.group} "
+                    f"vs {plan.group})"))
+            if s.sys_start != sys_cursor:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"sys_start={s.sys_start}, expected {sys_cursor} "
+                    "(non-contiguous system packing)"))
+            if s.lane_start != lane_cursor:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"lane_start={s.lane_start}, expected {lane_cursor} "
+                    "(offset table out of step with segment lengths)"))
+            if b.block_n > 0 and s.lane_start % b.block_n != 0:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"lane_start={s.lane_start} not aligned to "
+                    f"block_n={b.block_n}: a block would straddle the "
+                    "previous system"))
+            if b.block_n > 0 and s.seg_lanes % b.block_n != 0:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"seg_lanes={s.seg_lanes} not a block_n={b.block_n} "
+                    "multiple (block straddles the next system)"))
+            want = _prod(s.local_shape[s.stack_dims:])
+            if s.flat_local != want:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"flat_local={s.flat_local} != prod(local_shape"
+                    f"[stack:])={want}"))
+            if s.seg_lanes < s.flat_local:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"seg_lanes={s.seg_lanes} < flat_local="
+                    f"{s.flat_local}: lanes would be truncated"))
+            n_sys_want = _prod(s.local_shape[:s.stack_dims]) or 1
+            if s.n_sys != n_sys_want:
+                vs.append(Violation(
+                    "arena-layout", seg_where,
+                    f"n_sys={s.n_sys} != prod(stack shape)={n_sys_want}"))
+            sys_cursor += s.n_sys
+            lane_cursor += s.n_sys * s.seg_lanes
+        if lane_cursor != b.n_lanes_local:
+            vs.append(Violation(
+                "arena-layout", where,
+                f"segment lanes sum to {lane_cursor} but the bucket "
+                f"carries n_lanes_local={b.n_lanes_local}"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# schedule-conflict
+# ---------------------------------------------------------------------------
+
+@register_pass(
+    "schedule-conflict",
+    "no overlapping group rules, no phase-residue collisions between "
+    "staggered groups, resolved table within clamps")
+def schedule_conflict(ctx):
+    from repro.core.leafplan import plan_entries
+    from repro.core.schedule import jump_collisions, rules_for_config
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    groups = list(ctx.groups)
+    info["n_groups"] = len(groups)
+
+    for g in groups:
+        where = f"group[{g.index}:{g.name}]"
+        if g.m < 2:
+            vs.append(Violation("schedule-conflict", where,
+                                f"m={g.m}: DMD needs >= 2 snapshots"))
+        if g.s < 1:
+            vs.append(Violation("schedule-conflict", where,
+                                f"s={g.s}: horizon must be >= 1"))
+        if min(g.warmup_steps, g.cooldown_steps, g.phase) < 0:
+            vs.append(Violation(
+                "schedule-conflict", where,
+                f"negative schedule field (warmup={g.warmup_steps}, "
+                f"cooldown={g.cooldown_steps}, phase={g.phase})"))
+        if g.cycle != g.m + g.cooldown_steps:
+            vs.append(Violation(
+                "schedule-conflict", where,
+                f"cycle={g.cycle} != m+cooldown={g.m + g.cooldown_steps}"))
+        if not (0.0 <= g.energy <= 1.0):   # 0.0 = unset (tol mask rules)
+            vs.append(Violation(
+                "schedule-conflict", where,
+                f"energy={g.energy} outside [0, 1]"))
+
+    # Overlapping non-exclude rules: first-match-wins makes the second
+    # rule dead for every shared leaf — a config bug, not a tiebreak.
+    rules = [r for r in rules_for_config(ctx.cfg) if not r.exclude]
+    overlaps = 0
+    for p in plan_entries(ctx.plans):
+        ndim, size = len(p.shape), _prod(p.shape)
+        hits = [r.name for r in rules if r.matches(p.path, ndim, size)]
+        if len(hits) > 1:
+            overlaps += 1
+            vs.append(Violation(
+                "schedule-conflict", p.path,
+                f"{len(hits)} group rules match one leaf "
+                f"({', '.join(hits)}): all but the first are dead here"))
+    info["overlapping_leaves"] = overlaps
+
+    # Member counts: a rule-defined group no leaf selects is dead config.
+    members = [0] * len(groups)
+    for p in plan_entries(ctx.plans):
+        if p.group is not None and 0 <= p.group < len(groups):
+            members[p.group] += 1
+    info["group_members"] = members
+    for g, n in zip(groups, members):
+        if n == 0 and g.index > 0:
+            vs.append(Violation(
+                "schedule-conflict", f"group[{g.index}:{g.name}]",
+                "group rule matches no leaf (dead group)",
+                severity="warning"))
+
+    # Phase-residue collisions (CRT): an ERROR only between groups that
+    # DECLARED distinct phases — they opted into staggering and the
+    # config fails to deliver it. Same-phase collisions (the synchronous
+    # default) are reported as info.
+    pairs = jump_collisions(groups)
+    info["jump_collisions"] = [list(p) for p in pairs]
+    for ia, ib in pairs:
+        a, b = groups[ia], groups[ib]
+        if a.phase != b.phase:
+            ra = (a.warmup_steps + a.phase + a.cycle - 1) % a.cycle
+            rb = (b.warmup_steps + b.phase + b.cycle - 1) % b.cycle
+            vs.append(Violation(
+                "schedule-conflict",
+                f"group[{a.index}:{a.name}]+group[{b.index}:{b.name}]",
+                f"declared distinct phases ({a.phase} vs {b.phase}) but "
+                f"jump residues collide (r={ra} mod {a.cycle} meets "
+                f"r={rb} mod {b.cycle}, gcd={math.gcd(a.cycle, b.cycle)})"
+                " — the stagger never takes effect"))
+    return vs, info

@@ -1,0 +1,59 @@
+"""Pinned trace-size ceilings for the trace-budget pass.
+
+A pin is a hard ceiling on the jaxpr equation count (and optionally the
+launch-class op count, trace.LAUNCH_PRIMS) of ONE audit target under ONE
+config key (``AuditContext.config_key`` — arch name plus ``-reduced`` /
+``-mesh`` suffixes). Unpinned (config, target) pairs report their counts
+as info and never fail: pins are opt-in, per config we actually gate in CI.
+
+Measured values (jax 0.4.37, CPU lowering) are noted next to each ceiling;
+ceilings carry ~25-40% headroom over measured so routine jax upgrades
+don't trip them.
+
+Bump procedure (DESIGN.md §8): a legitimate trace growth (new fused
+feature, jax version bump) raises a ceiling in THIS file, in the same PR
+as the change that grew the trace, with the newly measured count in the
+comment. Never bump to "make CI green" without knowing which equations
+appeared — run ``python -m repro.audit --arch <arch> --reduced`` and diff
+the per-target counts first.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+# {config_key: {target: {"eqns": ceiling, "launches": ceiling}}}
+TRACE_PINS: Dict[str, Dict[str, Dict[str, int]]] = {
+    # Reduced tinyllama (the tier-1 audit model): train_step ceiling is
+    # the historical tests/test_trace_size.py pin (measured 870 arena-on
+    # vs 1137 per-leaf at PR 5 — the pin sits BELOW the per-leaf count so
+    # a route regression fails before slack is eaten).
+    "tinyllama-1.1b-reduced": {
+        "train_step": {"eqns": 1100},       # measured 870
+        "dmd_step": {"eqns": 550},          # measured 375 (groups=None)
+        "dmd_step_gated": {"eqns": 1450},   # measured 1193
+        "record_update": {"eqns": 250},     # measured 140
+    },
+    # The paper's pollutant MLP (PAPER_SIZES, m=14, mode=eig, anchor=none).
+    "pollutant-mlp": {
+        "train_step": {"eqns": 500},        # measured 355
+        "dmd_step": {"eqns": 500},          # measured 336
+        "dmd_step_gated": {"eqns": 850},    # measured 574
+        "record_update": {"eqns": 150},     # measured 85
+    },
+    "pollutant-mlp-reduced": {
+        "train_step": {"eqns": 450},        # measured 280
+        "dmd_step": {"eqns": 500},          # measured 318
+        "dmd_step_gated": {"eqns": 800},    # measured 529
+        "record_update": {"eqns": 150},     # measured 72
+    },
+    # tests/test_trace_size.py's bespoke 24-layer MLP (48 DMD leaves, one
+    # bucket; m=6): measured 1731 arena vs 2906 per-leaf at PR 5.
+    "deep-mlp-24x32": {
+        "train_step": {"eqns": 2200},
+    },
+}
+
+
+def trace_ceiling(config_key: str, target: str) -> Optional[Dict[str, int]]:
+    """The pinned ceilings for one (config, target), or None if unpinned."""
+    return TRACE_PINS.get(config_key, {}).get(target)

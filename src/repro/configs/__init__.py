@@ -4,7 +4,7 @@ from __future__ import annotations
 import importlib
 from typing import Dict, List
 
-from repro.configs.base import (
+from repro.configs.base import (  # noqa: F401  (config facade)
     ArchConfig, DMDConfig, DMDControllerConfig, ModelConfig, MoEConfig,
     OptimizerConfig, ParallelConfig, SSMConfig, ShapeConfig, TrainConfig,
     STANDARD_SHAPES, reduced,

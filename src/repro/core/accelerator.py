@@ -72,6 +72,17 @@ rollback) and carries per-group ControllerState in TrainState —
 `init_controller()` builds it, `controller_on` reports the mode. The
 host-side `apply` below stays UNGATED (benches and examples gate by hand);
 the gated path lives in train/step.py::make_dmd_step.
+
+Static audits (repro.audit, DESIGN.md §8): every structural invariant
+above — buffer/Gram donation, the sharded kernels' collective budget,
+trace size, arena lane alignment, schedule phase disjointness — is
+checked against the lowered jaxprs/HLO of the step fns built from this
+module plus the plan/schedule/arena tables by
+
+    PYTHONPATH=src python -m repro.audit --arch <name> [--reduced] [--mesh DxM]
+
+which CI runs per config (nonzero exit on violation; see the pass
+catalog in DESIGN.md §8).
 """
 from __future__ import annotations
 

@@ -255,6 +255,30 @@ def arena_paths(table: Dict[str, ArenaBucket]) -> frozenset:
     return frozenset(s.path for b in table.values() for s in b.segments)
 
 
+def layout_table(table: Dict[str, ArenaBucket]) -> list:
+    """JSON-able rows of the packed-arena layout — the static-audit export
+    consumed by ``repro.audit`` (arena-layout pass) and the AUDIT_*.json
+    artifact: one dict per bucket carrying the offset/length table the
+    segmented kernels index by."""
+    out = []
+    for key in sorted(table):
+        b = table[key]
+        out.append({
+            "key": b.key, "group": b.group, "m": b.m,
+            "block_n": b.block_n, "n_sys": b.n_sys,
+            "n_lanes_local": b.n_lanes_local, "n_lanes": b.n_lanes,
+            "lane_axes": list(b.lane_axes), "shard_factor": b.shard_factor,
+            "segments": [{
+                "path": s.path, "sys_start": s.sys_start,
+                "lane_start": s.lane_start, "n_sys": s.n_sys,
+                "flat_local": s.flat_local, "seg_lanes": s.seg_lanes,
+                "shape": list(s.shape), "local_shape": list(s.local_shape),
+                "stack_dims": s.stack_dims, "param_dtype": s.param_dtype,
+            } for s in b.segments],
+        })
+    return out
+
+
 # ---------------------------------------------------------------------------
 # State: the {"__arena__": ..., "leaf": ...} wrapper
 # ---------------------------------------------------------------------------

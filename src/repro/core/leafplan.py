@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
@@ -262,6 +262,23 @@ def plan_entries(plans: PyTree) -> List[LeafPlan]:
 def plan_summary(plans: PyTree) -> Dict[str, Tuple[str, int]]:
     """{path: (route, stack_dims)} — the regression-pin view of the table."""
     return {p.path: (p.route, p.stack_dims) for p in plan_entries(plans)}
+
+
+def plan_records(plans: PyTree) -> List[dict]:
+    """JSON-able rows of the dispatch table — the static-audit export
+    consumed by ``repro.audit`` (arena-layout / schedule-conflict /
+    collective-budget passes) and the AUDIT_*.json artifact."""
+    return [{
+        "path": p.path, "shape": list(p.shape), "dtype": p.dtype,
+        "stack_dims": p.stack_dims, "flat_size": p.flat_size,
+        "route": p.route, "anchor_ok": p.anchor_ok, "sharded": p.sharded,
+        "block_n": p.block_n, "group": p.group,
+        "m": (p.sched.m if p.sched is not None else None),
+        "s": (p.sched.s if p.sched is not None else None),
+        "phase": (p.sched.phase if p.sched is not None else None),
+        "param_spec": str(p.param_spec),
+        "psum_axes": list(p.psum_axes()),
+    } for p in plan_entries(plans)]
 
 
 def plan_table(plans: PyTree, arena: Optional[dict] = None) -> str:

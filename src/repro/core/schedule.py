@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -245,6 +245,40 @@ def group_for_leaf(cfg, path: str, ndim: int, size: int) -> Optional[int]:
         if rule.matches(path, ndim, size):
             return gi
     return 0
+
+
+def schedule_records(groups: Sequence[GroupSchedule]) -> list:
+    """JSON-able rows of the resolved group table — the static-audit
+    export consumed by ``repro.audit`` (schedule-conflict pass) and the
+    AUDIT_*.json artifact. One dict per group, every resolved field."""
+    return [{
+        "index": g.index, "name": g.name, "m": g.m, "s": g.s,
+        "warmup_steps": g.warmup_steps, "cooldown_steps": g.cooldown_steps,
+        "phase": g.phase, "cycle": g.cycle, "relax": g.relax,
+        "anneal": g.anneal, "reset_opt": g.reset_opt, "energy": g.energy,
+        "jump_residue": (g.warmup_steps + g.phase + g.cycle - 1) % g.cycle,
+    } for g in groups]
+
+
+def jump_collisions(groups: Sequence[GroupSchedule]
+                    ) -> list:
+    """Pairs of groups that jump on the SAME step infinitely often.
+
+    Group g jumps at steps ``step ≡ warmup+phase+cycle-1 (mod cycle)``
+    (for step past its start); two groups collide iff the congruences are
+    simultaneously solvable, i.e. ``r_a ≡ r_b (mod gcd(cycle_a,
+    cycle_b))`` (CRT). Staggered configs (distinct declared phases) are
+    expected to be pairwise collision-free — benchmarks/staggered_jump
+    measures exactly that; the schedule-conflict pass flags violations."""
+    import math
+    out = []
+    for i, a in enumerate(groups):
+        ra = (a.warmup_steps + a.phase + a.cycle - 1) % a.cycle
+        for b in groups[i + 1:]:
+            rb = (b.warmup_steps + b.phase + b.cycle - 1) % b.cycle
+            if (ra - rb) % math.gcd(a.cycle, b.cycle) == 0:
+                out.append((a.index, b.index))
+    return out
 
 
 def slots_for_step(groups: Sequence[GroupSchedule], step) -> jnp.ndarray:

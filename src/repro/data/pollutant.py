@@ -28,7 +28,7 @@ the terrain (y=0) and top. Sources: discs of radius 0.5 at (0.1, 0.1) and
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,6 @@ without shard_map — single-host benchmarks and tests share one code path.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,14 +21,12 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, list_archs, shape_by_name, STANDARD_SHAPES
 from repro.launch.mesh import make_production_mesh
@@ -36,43 +34,16 @@ from repro.launch import inputs as inputs_mod
 from repro.distributed.sharding import mesh_context, partition_specs
 from repro.models.transformer import LanguageModel
 from repro.train.state import TrainState
-from repro.train.step import make_train_step, make_dmd_step, resolve_grad_accum
+from repro.train.step import make_train_step, resolve_grad_accum
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 HBM_BYTES = 16 * 1024**3       # v5e per-chip budget
 
-COLLECTIVE_RE = re.compile(
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"[^=]*=\s*(?:\([^)]*\)|([a-z0-9]+)\[([0-9,]*)\])")
-
-
-def parse_collectives(hlo_text: str):
-    """Sum operand bytes per collective kind from HLO text (shard-local
-    shapes; multiply by participating devices for global traffic)."""
-    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                   "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8,
-                   "c64": 8, "u16": 2, "s16": 2}
-    totals = {}
-    counts = {}
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*?) (all-reduce|"
-                     r"all-gather|reduce-scatter|all-to-all|collective-permute)"
-                     r"(-start|-done)?\(", line)
-        if not m or (m.group(3) == "-done"):
-            continue
-        shapes_str, kind = m.group(1), m.group(2)
-        nbytes = 0
-        for ms in re.finditer(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]", shapes_str):
-            dt, dims = ms.group(1), ms.group(2)
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            nbytes += n * dtype_bytes.get(dt, 4)
-        totals[kind] = totals.get(kind, 0) + nbytes
-        counts[kind] = counts.get(kind, 0) + 1
-    return totals, counts
+# Collective parsing lives in the shared static-audit layer since ISSUE 6
+# (repro.audit.hlo — one regex, one dtype map for the dry-run inventory,
+# the dist_worker audits and the collective-budget pass alike); re-exported
+# here for the roofline/multipod benchmarks.
+from repro.audit.hlo import parse_collectives  # noqa: E402,F401
 
 
 def scan_trip_counts(model: LanguageModel):

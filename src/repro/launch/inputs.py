@@ -6,7 +6,6 @@ complete in_shardings for jit(...).lower().
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -14,7 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.distributed.sharding import normalize_path, partition_specs
+from repro.distributed.sharding import normalize_path
 
 PyTree = Any
 

@@ -11,6 +11,21 @@ import argparse
 import time
 
 
+def serve_fns(model, donate=True):
+    """The serving programs, jitted the way ``main`` runs them: the KV
+    caches (positional arg 2 of both prefill and decode_step) are donated
+    so the per-token cache update is in-place — a decode step that COPIES
+    its caches doubles the serving HBM footprint and shows up in the
+    compiled HLO as cache-shaped copy ops. tests/test_serve_audit.py
+    routes both programs through the shared donation/collective passes
+    (``python -m repro.audit`` machinery, DESIGN.md §8); ``donate=False``
+    exists only so that audit can prove it bites."""
+    import jax
+    dn = (2,) if donate else ()
+    return {"prefill": jax.jit(model.prefill, donate_argnums=dn),
+            "decode_step": jax.jit(model.decode_step, donate_argnums=dn)}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -36,7 +51,13 @@ def main():
             multi_pod=args.multi_pod))
 
     def run():
-        model = LanguageModel(mc, head_tp=not args.reduced, chunk_k=64)
+        # scan_layers=False: serving unrolls the layer stack so XLA updates
+        # the donated caches fully in place — a lax.scan over layers carries
+        # the stacked cache as (xs, stacked-ys) and double-buffers it by
+        # construction, which both costs a cache-sized copy per token and
+        # would trip the serve donation audit (tests/test_serve_audit.py).
+        model = LanguageModel(mc, head_tp=not args.reduced, chunk_k=64,
+                              scan_layers=False)
         params = model.init(jax.random.PRNGKey(0))
         B, P, N = args.batch, args.prompt_len, args.new_tokens
         batch = {"tokens": jax.random.randint(
@@ -48,8 +69,8 @@ def main():
             batch["frames"] = jax.random.normal(
                 jax.random.PRNGKey(2), (B, mc.encoder_seq_len, mc.d_model))
         caches = model.init_cache(B, P + N)
-        prefill = jax.jit(model.prefill)
-        decode = jax.jit(model.decode_step)
+        fns = serve_fns(model)
+        prefill, decode = fns["prefill"], fns["decode_step"]
         t0 = time.time()
         logits, caches = prefill(params, batch, caches)
         jax.block_until_ready(logits)

@@ -10,7 +10,6 @@ same --ckpt resumes bit-exactly.
 """
 import argparse
 import dataclasses
-import sys
 
 
 def main():
@@ -25,7 +24,6 @@ def main():
     ap.add_argument("--seq", type=int, default=0)
     args = ap.parse_args()
 
-    import jax
     from repro.configs import get_config, reduced, shape_by_name
     from repro.data.tokens import synthetic_lm_batches
     from repro.distributed.sharding import mesh_context

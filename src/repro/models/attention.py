@@ -20,7 +20,6 @@ the lowering default.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

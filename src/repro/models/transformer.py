@@ -21,7 +21,6 @@ decode scans carry (hidden, per-layer-cache) pairs.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax

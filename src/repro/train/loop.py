@@ -22,8 +22,7 @@ straggler/elastic-restart story depends on this.
 from __future__ import annotations
 
 import signal
-import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp

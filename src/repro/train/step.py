@@ -39,7 +39,6 @@ gate-overhead fix in benchmarks/paper_benches.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -222,6 +221,46 @@ def reset_opt_state_after_jump(opt, opt_state, params, plans, groups,
         return type(opt_state)(*(merge(o, n)
                                  for o, n in zip(opt_state, fresh)))
     return opt_state
+
+
+def audit_step_fns(model, acfg, *, mesh=None,
+                   acc: Optional[DMDAccelerator] = None,
+                   loss_fn: Callable = None, donate: bool = True):
+    """The static-audit surface (repro.audit.targets): every jitted hot
+    entry point, under the Trainer's EXACT jit contract (same
+    donate_argnums, same static argnames), plus the shared accelerator.
+
+    Returns ``(acc, {name: jitted_fn})`` with
+      * ``train_step``     — the fused step (record+Gram riding inside),
+      * ``dmd_step``       — the jump in whichever variant the config
+                             selects (plain or loss-gated controller),
+      * ``record_update``  — record + streaming-Gram maintenance as a
+                             standalone program (buffers AND grams
+                             donated), so the data-pass invariants are
+                             auditable in isolation from the model's
+                             forward/backward.
+
+    ``donate=False`` drops every donate_argnums — the seeded-violation
+    fixture the donation pass must catch (audit ``--mutate
+    drop-donation`` and the CI mutation test)."""
+    acc = _accelerator_for(model, acfg, mesh, acc)
+    dn = (0,) if donate else ()
+    fns = {
+        "train_step": jax.jit(
+            make_train_step(model, acfg, mesh=mesh, loss_fn=loss_fn,
+                            acc=acc), donate_argnums=dn),
+        "dmd_step": jax.jit(
+            make_dmd_step(acfg, mesh=mesh, acc=acc, model=model,
+                          loss_fn=loss_fn), donate_argnums=dn,
+            static_argnames=("groups",)),
+    }
+
+    def record_update(buffers, grams, params, slots):
+        return acc.record(buffers, params, slots, grams)
+
+    fns["record_update"] = jax.jit(record_update,
+                                   donate_argnums=(0, 1) if donate else ())
+    return acc, fns
 
 
 def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,

@@ -9,11 +9,10 @@ stand-in runs each property over a small fixed sample grid (strategy
 endpoints + midpoints) so the properties still execute — collection never
 hard-errors either way (the importorskip-style contract from ISSUE 1).
 """
-import functools
 import itertools
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False

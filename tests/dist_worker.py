@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.configs.base import DMDConfig, OptimizerConfig, TrainConfig
 from repro.data.tokens import batch_for_step
-from repro.distributed.sharding import mesh_context, partition_specs, set_mesh
+from repro.distributed.sharding import mesh_context, set_mesh
 from repro.models.transformer import LanguageModel
 from repro.train import Trainer
 from repro.train.state import TrainState
@@ -101,27 +101,10 @@ def run_train(mesh_shape, axis_names, steps=6):
         return losses, checksum(state.params)
 
 
-def max_allgather_bytes(hlo: str) -> int:
-    """Largest all-gather operand in an HLO text, in bytes — the shared
-    audit primitive for both shard_map workers (one copy: a dtype added to
-    the byte map lands in every audit at once)."""
-    import re
-    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                   "s8": 1, "u8": 1, "pred": 1}
-    max_ag = 0
-    for line in hlo.splitlines():
-        mt = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = (.*?) all-gather"
-                      r"(?:-start)?\(", line)
-        if not mt:
-            continue
-        for ms in re.finditer(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]",
-                              mt.group(1)):
-            n = 1
-            for d in ms.group(2).split(","):
-                if d:
-                    n *= int(d)
-            max_ag = max(max_ag, n * dtype_bytes.get(ms.group(1), 4))
-    return max_ag
+# The largest-all-gather scan is the shared static-audit primitive since
+# ISSUE 6 (repro.audit.hlo — one regex, one dtype map for both shard_map
+# workers here AND the collective-budget pass the CLI runs).
+from repro.audit.hlo import max_allgather_bytes  # noqa: E402
 
 
 def run_sharded_kernels():

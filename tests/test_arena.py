@@ -17,7 +17,6 @@ import pytest
 from repro.configs.base import DMDConfig
 from repro.core import DMDAccelerator
 from repro.core import arena as arena_mod
-from repro.core import dmd as dmd_math
 from repro.core.schedule import DMDGroupRule
 from repro.kernels import arena as ka
 from repro.kernels import ops
@@ -420,3 +419,84 @@ def test_plan_table_shows_arena_columns():
     acc2 = DMDAccelerator(_cfg(arena=False))
     table2 = acc2.plan_table(params)
     assert "g0-float32" not in table2
+
+
+# ---------------------------------------------------------------------------
+# Eligibility partition (ISSUE 6 satellite): excluded buckets
+# ---------------------------------------------------------------------------
+
+def _audit_arena(cfg, acc, params, mesh=None):
+    """Run the shared arena-layout audit pass over one accelerator build."""
+    import types
+    from repro.audit.passes import arena_layout
+    from repro.audit.targets import adhoc_context
+    ctx = adhoc_context("test-arena", types.SimpleNamespace(dmd=cfg), {},
+                        mesh=mesh, plans=acc.plans_for(params),
+                        arena=acc.arena_for(params))
+    violations, info = arena_layout(ctx)
+    return [v for v in violations if v.severity == "error"], info
+
+
+def test_mean_anchor_leaves_absent_from_buckets_with_valid_plans():
+    """anchor=mean re-anchors every row — no fused arena kernel. Every
+    leaf must be ABSENT from every ArenaBucket yet still carry a valid
+    per-leaf plan (trains through the per-leaf route, never dropped);
+    the arena-layout audit pass agrees the partition is exact."""
+    from repro.core import leafplan
+    from repro.core.arena import arena_eligible
+
+    cfg = _cfg(anchor="mean")
+    params = {"w": jnp.ones((16, 16)), "b": jnp.ones((48,))}
+    acc = DMDAccelerator(cfg)
+    assert acc.arena_for(params) == {}
+    plans = acc.plans_for(params)
+    entries = leafplan.plan_entries(plans)
+    assert len(entries) == 2
+    for p in entries:
+        assert not arena_eligible(p, cfg, None), p.path
+        assert p.route in ("pallas_flat", "pallas_shard_map",
+                           "dot_general"), p.route
+        assert p.m >= 2
+    errors, info = _audit_arena(cfg, acc, params)
+    assert errors == [], errors
+    assert info["n_packed"] == 0 and info["n_leaves"] == 2
+
+
+def test_sharded_stack_leaves_absent_from_buckets_with_valid_plans():
+    """A leaf whose STACK axis is device-sharded cannot pack (systems
+    would straddle shards): it must skip every bucket and keep a valid
+    per-leaf shard_map plan while its unsharded-stack neighbours still
+    pack. The mesh here is structural (axis names + sizes are all the
+    layout code reads) so the partition check runs without 8 devices."""
+    import numpy as _np
+    from repro.core import leafplan
+    from repro.core.arena import arena_eligible, arena_paths
+    from repro.distributed.sharding import set_rule_overrides
+
+    class _FakeMesh:
+        axis_names = ("data", "model")
+        devices = _np.empty((2, 4))
+
+    mesh = _FakeMesh()
+    set_rule_overrides([(r"stacked", ("fsdp", None, "tp"))])
+    try:
+        cfg = _cfg()
+        params = {"stacked": jnp.ones((4, 64, 128)),
+                  "w": jnp.ones((64, 128))}
+        acc = DMDAccelerator(cfg, mesh=mesh,
+                             stack_dims={"stacked": 1, "w": 0})
+        table = acc.arena_for(params)
+        packed = arena_paths(table)
+        assert "/stacked" not in packed          # sharded stack: excluded
+        assert "/w" in packed                    # neighbour still packs
+        plans = acc.plans_for(params)
+        by_path = {p.path: p for p in leafplan.plan_entries(plans)}
+        st = by_path["/stacked"]
+        assert not arena_eligible(st, cfg, mesh)
+        assert st.route == "pallas_shard_map" and st.m >= 2
+        assert st.param_spec[0] is not None      # the stack axis IS sharded
+        errors, info = _audit_arena(cfg, acc, params, mesh=mesh)
+        assert errors == [], errors
+        assert info["n_packed"] == 1
+    finally:
+        set_rule_overrides(None)

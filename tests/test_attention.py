@@ -1,5 +1,4 @@
 """Attention: blockwise core vs naive oracle; prefill/decode consistency."""
-import dataclasses
 
 import numpy as np
 import jax
@@ -8,8 +7,8 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.kernels.ref import flash_attention_ref
-from repro.models.attention import (KVCache, RingKVCache, blockwise_attention,
-                                    init_kv_cache, init_ring_cache)
+from repro.models.attention import (blockwise_attention, init_kv_cache,
+                                    init_ring_cache)
 from repro.models.transformer import LanguageModel
 
 

@@ -1,0 +1,98 @@
+"""The audit lane must bite (ISSUE 6 acceptance): a clean build passes
+every registered pass, and EACH seeded mutation (repro.audit.mutations)
+flips exactly its pass to failing. A lane that cannot fail guards
+nothing — these tests pin the failure side the CI mutation step relies
+on, on the cheapest config that exercises each pass (the reduced paper
+MLP; force-allgather needs a sharded build, so it runs the real CLI in a
+subprocess that forces an 8-device CPU topology)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.audit import run_audit
+from repro.audit.mutations import get as get_mutation, list_mutations
+
+
+def _failed(report):
+    return {r.name for r in report.results if not r.ok}
+
+
+def test_clean_reduced_mlp_audit_is_green():
+    report = run_audit("pollutant-mlp", reduced=True)
+    assert report.ok, report.render()
+    assert {r.name for r in report.results} == {
+        "donation-alias", "collective-budget", "trace-budget",
+        "dtype-flow", "host-callback-in-hot-loop", "arena-layout",
+        "schedule-conflict"}
+
+
+def test_drop_donation_bites():
+    report = run_audit("pollutant-mlp", reduced=True,
+                       mutate="drop-donation")
+    assert not report.ok
+    assert "donation-alias" in _failed(report), report.render()
+
+
+def test_misalign_arena_bites():
+    report = run_audit("pollutant-mlp", reduced=True,
+                       mutate="misalign-arena", passes=["arena-layout"])
+    assert _failed(report) == {"arena-layout"}, report.render()
+    details = " ".join(v.detail for v in report.violations)
+    assert "aligned" in details or "lane_start" in details
+
+
+def test_overlap_groups_bites():
+    report = run_audit("pollutant-mlp", reduced=True,
+                       mutate="overlap-groups",
+                       passes=["schedule-conflict"])
+    assert _failed(report) == {"schedule-conflict"}, report.render()
+    assert any("rules match one leaf" in v.detail
+               for v in report.violations)
+
+
+def test_force_allgather_needs_mesh():
+    with pytest.raises(Exception, match="mesh"):
+        run_audit("pollutant-mlp", reduced=True, mutate="force-allgather",
+                  passes=["collective-budget"])
+
+
+def test_mutation_registry_is_complete():
+    assert list_mutations() == ["drop-donation", "force-allgather",
+                                "misalign-arena", "overlap-groups"]
+    for name in list_mutations():
+        m = get_mutation(name)
+        assert m.expect_fail in ("donation-alias", "collective-budget",
+                                 "arena-layout", "schedule-conflict")
+
+
+@pytest.mark.slow
+def test_cli_mesh_clean_and_force_allgather_bites(tmp_path):
+    """The sharded build end-to-end through the real CLI: clean rc=0 with
+    an AUDIT json artifact, force-allgather rc!=0 with a buffer-sized
+    all-gather in the collective-budget violations. Subprocess because
+    --mesh must force the CPU device count before jax imports."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    base = [sys.executable, "-m", "repro.audit", "--arch",
+            "tinyllama-1.1b", "--reduced", "--mesh", "2x4",
+            "--out", str(tmp_path)]
+    clean = subprocess.run(base, capture_output=True, text=True, env=env,
+                           timeout=900)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    artifact = tmp_path / "AUDIT_tinyllama-1.1b-reduced-mesh.json"
+    payload = json.loads(artifact.read_text())
+    assert payload["ok"] is True
+    assert {"plans", "arena", "groups"} <= set(payload["tables"])
+
+    mutated = subprocess.run(
+        base + ["--mutate", "force-allgather", "--no-json"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert mutated.returncode != 0, mutated.stdout + mutated.stderr
+    assert "all-gather" in mutated.stdout
+    assert "[FAIL] collective-budget" in mutated.stdout

@@ -1,7 +1,6 @@
 """Data pipelines: pollutant PDE physics sanity + token determinism."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.data import pollutant as pol
 from repro.data.tokens import batch_for_step

@@ -241,7 +241,7 @@ def test_streaming_gram_stacked_matches_oracle():
 def test_streaming_accelerator_apply_matches_recompute():
     """DMDAccelerator.apply(grams=...) == apply with the full recompute."""
     from repro.configs.base import DMDConfig
-    from repro.core import DMDAccelerator, snapshots as snap
+    from repro.core import DMDAccelerator
 
     cfg = DMDConfig(m=5, s=9, tol=1e-4, warmup_steps=0, cooldown_steps=0)
     acc = DMDAccelerator(cfg)

@@ -1,9 +1,13 @@
-"""Donation audit (ISSUE 5 satellite): ``donate_argnums=(0,)`` must
-actually donate the snapshot buffers and Grams — per-leaf and packed-arena
-— in the fused train step and BOTH dmd_step variants. Verified against the
-compiled HLO: every buffer/Gram leaf appears in the module's
-``input_output_alias`` table, and no copy op of a buffer/Gram shape
-survives (a silently-dropped donation shows up as exactly such a copy).
+"""Donation audit: ``donate_argnums=(0,)`` must actually donate the
+snapshot buffers and Grams — per-leaf and packed-arena — in the fused
+train step and BOTH dmd_step variants.
+
+Since ISSUE 6 the invariant itself lives in the shared static-audit layer
+(repro.audit.passes::donation_alias — the same pass the
+``python -m repro.audit`` CLI runs): every buffer/Gram leaf appears in
+the compiled module's ``input_output_alias`` table, and no copy op of a
+buffer/Gram shape survives. This file routes the Trainer's REAL jitted
+programs through that pass; no standalone HLO-regex logic remains here.
 
 The plain (ungated) jump reads only the buffers — the param VALUES are
 dead, XLA prunes those inputs, and only the pass-through leaves can alias;
@@ -12,12 +16,13 @@ WHOLE TrainState must alias through (the rollback branch passes the
 donated pre-jump params and moments straight through untouched).
 """
 import dataclasses
-import re
 
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.audit.passes import donation_alias
+from repro.audit.targets import adhoc_context, trace_target
 from repro.configs import get_config, reduced
 from repro.configs.base import (DMDConfig, DMDControllerConfig,
                                 OptimizerConfig, TrainConfig)
@@ -43,41 +48,27 @@ def _setup(controller=None, arena=True):
     return Trainer(model, acfg), synthetic_lm_batches(0, 4, 16, mc.vocab_size)
 
 
-def _alias_count(hlo: str) -> int:
-    line = next(l for l in hlo.splitlines() if "input_output_alias" in l)
-    return len(re.findall(r"\{\d+\}: \(\d+", line))
-
-
-def _shape_str(leaf) -> str:
-    d = {"float32": "f32", "bfloat16": "bf16"}.get(str(leaf.dtype),
-                                                   str(leaf.dtype))
-    return d + "[" + ",".join(map(str, leaf.shape)) + "]"
-
-
-def _dmd_shapes(state):
-    out = set()
-    for kp, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
-        k = jax.tree_util.keystr(kp)
-        if leaf is not None and ("dmd_buffers" in k or "dmd_gram" in k):
-            out.add(_shape_str(leaf))
-    return out
-
-
-def _buffer_copies(hlo: str, shapes) -> list:
-    copies = re.findall(r"= (\S+?)\{[^}]*\} copy\(", hlo)
-    copies += re.findall(r"= (\S+?) copy\(", hlo)
-    return [c for c in copies if any(c.startswith(s) for s in shapes)]
+def _audit(trainer, name, target):
+    """Run the shared donation pass over one Trainer program."""
+    ctx = adhoc_context("tinyllama-1.1b-reduced", trainer.acfg,
+                        {name: target})
+    violations, info = donation_alias(ctx)
+    return [v for v in violations if v.severity == "error"], info
 
 
 @pytest.mark.parametrize("arena", [True, False])
 def test_train_step_donates_everything(arena):
     trainer, batches = _setup(arena=arena)
     state = trainer.init_state()
-    hlo = trainer.train_step.lower(
-        state, next(batches), jnp.asarray(5, jnp.int32)).compile().as_text()
-    n_leaves = len(jax.tree_util.tree_leaves(state))
-    assert _alias_count(hlo) == n_leaves
-    assert _buffer_copies(hlo, _dmd_shapes(state)) == []
+    t = trace_target("train_step", trainer.train_step,
+                     (state, next(batches), jnp.asarray(5, jnp.int32)), {},
+                     state)
+    errors, info = _audit(trainer, "train_step", t)
+    assert errors == [], errors
+    # the pass pins exact whole-state aliasing for the fused step
+    assert info["train_step.alias_count"] == len(
+        jax.tree_util.tree_leaves(state))
+    assert info["train_step.dmd_copies"] == 0
 
 
 @pytest.mark.parametrize("arena", [True, False])
@@ -85,16 +76,13 @@ def test_plain_dmd_step_donates_buffers_and_grams(arena):
     trainer, _ = _setup(arena=arena)
     state = trainer.init_state()
     relax = jnp.ones((trainer.acc.n_groups,), jnp.float32)
-    hlo = trainer.dmd_step.lower(state, relax,
-                                 groups=(0,)).compile().as_text()
-    shapes = _dmd_shapes(state)
-    n_dmd = sum(1 for kp, l in jax.tree_util.tree_flatten_with_path(state)[0]
-                if l is not None
-                and ("dmd_buffers" in jax.tree_util.keystr(kp)
-                     or "dmd_gram" in jax.tree_util.keystr(kp)))
+    t = trace_target("dmd_step", trainer.dmd_step, (state, relax),
+                     {"groups": (0,)}, state)
     # buffers+grams (and the step scalar) pass through -> must all alias
-    assert _alias_count(hlo) >= n_dmd
-    assert _buffer_copies(hlo, shapes) == []
+    errors, info = _audit(trainer, "dmd_step", t)
+    assert errors == [], errors
+    assert info["dmd_step.alias_count"] >= t.n_dmd_leaves
+    assert info["dmd_step.dmd_copies"] == 0
 
 
 @pytest.mark.parametrize("arena", [True, False])
@@ -106,7 +94,27 @@ def test_gated_dmd_step_donates_whole_state(arena):
         arena=arena)
     state = trainer.init_state()
     relax = jnp.ones((trainer.acc.n_groups,), jnp.float32)
-    hlo = trainer.dmd_step.lower(state, relax, next(batches),
-                                 groups=(0,)).compile().as_text()
-    assert _alias_count(hlo) == len(jax.tree_util.tree_leaves(state))
-    assert _buffer_copies(hlo, _dmd_shapes(state)) == []
+    t = trace_target("dmd_step_gated", trainer.dmd_step,
+                     (state, relax, next(batches)), {"groups": (0,)}, state)
+    errors, info = _audit(trainer, "dmd_step_gated", t)
+    assert errors == [], errors
+    assert info["dmd_step_gated.alias_count"] == len(
+        jax.tree_util.tree_leaves(state))
+    assert info["dmd_step_gated.dmd_copies"] == 0
+
+
+def test_dropped_donation_is_caught():
+    """Mutation check riding the same build: compiling WITHOUT
+    donate_argnums must flip the pass to failing (the audit lane bites —
+    ISSUE 6 acceptance)."""
+    from repro.train.step import audit_step_fns
+
+    trainer, batches = _setup()
+    state = trainer.init_state()
+    _, fns = audit_step_fns(trainer.model, trainer.acfg, acc=trainer.acc,
+                            donate=False)
+    t = trace_target("train_step", fns["train_step"],
+                     (state, next(batches), jnp.asarray(5, jnp.int32)), {},
+                     state, donated=False)
+    errors, _ = _audit(trainer, "train_step", t)
+    assert errors, "donation pass failed to flag an undonated train step"

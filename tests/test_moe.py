@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import get_config, reduced
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.models.moe import apply_moe, moe_init
 

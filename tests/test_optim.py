@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import OptimizerConfig
-from repro.optim import (adafactor, adam, adam8bit, apply_updates,
+from repro.optim import (adam, adam8bit, apply_updates,
                          clip_by_global_norm, global_norm, make_optimizer,
                          make_schedule)
 

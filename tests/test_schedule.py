@@ -1,7 +1,6 @@
 """Per-leaf scheduling (core/schedule.py): group resolution, schedule
 invariants over (warmup, cooldown, m, phase), legacy param_filter mapping,
 trace/host agreement, and bit-exactness with the pre-refactor closed form."""
-import dataclasses
 
 import numpy as np
 import jax
@@ -194,7 +193,6 @@ def test_first_matching_rule_wins_and_default_falls_through():
 
 
 def test_plans_carry_group_and_heterogeneous_buffers():
-    from repro.core import snapshots as snap
     cfg = DMDConfig(m=8, s=16, groups=(
         DMDGroupRule(name="small", max_ndim=1, m=4, phase=3),))
     params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,))}

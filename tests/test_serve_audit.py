@@ -1,0 +1,82 @@
+"""Serving-path donation audit (ISSUE 6 satellite): the KV caches are the
+serving loop's hot donated state — ``launch/serve.py::serve_fns`` jits
+prefill and decode_step with ``donate_argnums=(2,)`` so the per-token
+cache update is in-place. A dropped donation doubles the serving HBM
+footprint and shows up as cache-shaped copy ops in the compiled HLO.
+
+Both programs route through the SAME shared passes the train programs use
+(repro.audit.passes::donation_alias / collective_budget via an adhoc
+context) — no standalone HLO-regex logic here either."""
+import jax
+import jax.numpy as jnp
+
+from repro.audit.passes import collective_budget, donation_alias
+from repro.audit.targets import adhoc_context, serve_target
+from repro.configs import get_config, reduced
+from repro.launch.serve import serve_fns
+from repro.models.transformer import LanguageModel
+
+
+def _setup(donate=True):
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
+                 n_heads=2, n_kv_heads=1, head_dim=16)
+    # scan_layers=False is the serving build (launch/serve.py): a layer
+    # scan double-buffers the stacked cache by construction and would
+    # read as cache-shaped copies here.
+    model = LanguageModel(mc, head_tp=False, chunk_k=16, scan_layers=False)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, N = 2, 8, 4
+    caches = model.init_cache(B, P + N)
+    fns = serve_fns(model, donate=donate)
+    prompt = {"tokens": jnp.zeros((B, P), jnp.int32)}
+    tok = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    return acfg, fns, params, caches, prompt, tok
+
+
+def _targets(donate=True):
+    acfg, fns, params, caches, prompt, tok = _setup(donate)
+    return acfg, caches, {
+        "prefill": serve_target("prefill", fns["prefill"],
+                                (params, prompt, caches), caches,
+                                donated=donate),
+        "decode_step": serve_target("decode_step", fns["decode_step"],
+                                    (params, tok, caches), caches,
+                                    donated=donate),
+    }
+
+
+def test_serve_programs_donate_kv_caches():
+    """Every cache leaf aliases input->output in BOTH serving programs,
+    and zero KV-cache-shaped copies survive compilation."""
+    acfg, caches, targets = _targets()
+    ctx = adhoc_context("tinyllama-1.1b-reduced", acfg, targets)
+    violations, info = donation_alias(ctx)
+    errors = [v for v in violations if v.severity == "error"]
+    assert errors == [], errors
+    n_cache = len(jax.tree_util.tree_leaves(caches))
+    assert n_cache > 0
+    for name in ("prefill", "decode_step"):
+        assert info[f"{name}.alias_count"] >= n_cache, (name, info)
+        assert info[f"{name}.dmd_copies"] == 0, (name, info)
+
+
+def test_serve_programs_within_collective_budget():
+    """Single-host serving lowers no collectives at all — in particular no
+    cache-sized all-gather (the reshard-to-replicated failure mode)."""
+    acfg, _, targets = _targets()
+    ctx = adhoc_context("tinyllama-1.1b-reduced", acfg, targets)
+    violations, info = collective_budget(ctx)
+    errors = [v for v in violations if v.severity == "error"]
+    assert errors == [], errors
+    assert info["prefill.collectives"] == {}
+    assert info["decode_step.collectives"] == {}
+
+
+def test_undonated_serve_build_is_caught():
+    """Mutation check: serve_fns(donate=False) must flip the pass."""
+    acfg, _, targets = _targets(donate=False)
+    ctx = adhoc_context("tinyllama-1.1b-reduced", acfg, targets)
+    violations, _ = donation_alias(ctx)
+    errors = [v for v in violations if v.severity == "error"]
+    assert errors, "donation pass failed to flag undonated serving jits"

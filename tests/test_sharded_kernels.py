@@ -6,7 +6,9 @@ The heavy lifting happens in the subprocess worker (dist_worker.py mode
 for fsdp- and tp-sharded leaves (incl. bf16 / gram_upcast=False storage), and
 the lowered-HLO audit that `update_grams` emits NO all-gather of a
 buffer-sized operand — the whole point of the shard_map route (DESIGN.md
-§3.4).
+§3.4). Since ISSUE 6 the worker's HLO scan is the shared audit primitive
+(repro.audit.hlo.max_allgather_bytes — the same byte accounting the
+collective-budget pass applies in ``python -m repro.audit``).
 """
 import os
 import subprocess

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.models.ssm import apply_ssm, init_ssm_state, ssd_chunked, ssm_init
+from repro.models.ssm import ssd_chunked
 from repro.models.transformer import LanguageModel
 
 

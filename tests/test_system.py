@@ -5,7 +5,6 @@ training at equal optimizer-step budget, on a slow smooth regression (the
 paper's regime). Uses a reduced pollutant-style problem so it runs in
 seconds on CPU.
 """
-import dataclasses
 
 import numpy as np
 import jax

@@ -1,6 +1,12 @@
-"""Trace-size guard (ISSUE 5 satellite): pin the jitted train step's jaxpr
-equation count for a pollutant-MLP-style config and a reduced transformer
-config, so per-leaf unrolling can never silently regress the trace again.
+"""Trace-size guard: pin the jitted train step's jaxpr equation count for
+a pollutant-MLP-style config and a reduced transformer config, so per-leaf
+unrolling can never silently regress the trace again.
+
+Since ISSUE 6 the counting AND the ceilings live in the shared audit
+layer: repro.audit.passes::trace_budget counts via repro.trace.count_eqns
+and compares against repro/audit/pins.py (keys "deep-mlp-24x32" and
+"tinyllama-1.1b-reduced" here). This file only builds the programs and
+routes them through the pass — bump procedure is in pins.py / DESIGN.md §8.
 
 The packed-arena route (DESIGN.md §7) replaced the O(leaves) per-leaf
 record/gram fan-out with O(buckets) segmented passes; these ceilings sit
@@ -21,7 +27,8 @@ from repro.configs import get_config, reduced
 from repro.configs.base import (DMDConfig, OptimizerConfig, TrainConfig)
 from repro.models.mlp_net import init_mlp, mse_loss
 from repro.models.transformer import LanguageModel
-from repro.trace import count_eqns as _count_eqns
+from repro.audit.passes import trace_budget
+from repro.audit.targets import adhoc_context, jaxpr_target
 from repro.train.state import TrainState
 from repro.train.step import make_train_step
 
@@ -63,12 +70,14 @@ def test_deep_mlp_train_step_trace_pinned():
     opt = make_optimizer(acfg.optimizer)
     state = state._replace(opt_state=opt.init(params))
     jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
-    n = _count_eqns(jx.jaxpr)
     # measured 1731 on the arena route vs 2906 per-leaf (the fixed cost is
-    # the 24-layer forward+backward+adam); pin below the per-leaf count
-    # with ~25% slack over the arena measurement
-    assert n < 2200, f"fused-step trace grew to {n} equations " \
-        "(per-leaf unroll regression? see tests/test_trace_size.py)"
+    # the 24-layer forward+backward+adam); the ceiling in pins.py sits
+    # below the per-leaf count
+    ctx = adhoc_context("deep-mlp-24x32", acfg,
+                        {"train_step": jaxpr_target("train_step", jx)})
+    violations, info = trace_budget(ctx)
+    assert violations == [], violations
+    assert info["train_step.pin"] == {"eqns": 2200}  # pinned, not skipped
 
 
 def test_transformer_train_step_trace_pinned():
@@ -96,9 +105,11 @@ def test_transformer_train_step_trace_pinned():
     batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
              "labels": jnp.zeros((4, 16), jnp.int32)}
     jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
-    n = _count_eqns(jx.jaxpr)
-    # measured 870 on the arena route vs 1137 per-leaf; the pin sits below
-    # the per-leaf count so a route regression fails before any slack is
-    # eaten by legitimate model-side growth
-    assert n < 1100, f"fused-step trace grew to {n} equations " \
-        "(per-leaf unroll regression? see tests/test_trace_size.py)"
+    # measured 870 on the arena route vs 1137 per-leaf; the ceiling in
+    # pins.py sits below the per-leaf count so a route regression fails
+    # before any slack is eaten by legitimate model-side growth
+    ctx = adhoc_context("tinyllama-1.1b-reduced", acfg,
+                        {"train_step": jaxpr_target("train_step", jx)})
+    violations, info = trace_budget(ctx)
+    assert violations == [], violations
+    assert info["train_step.pin"]["eqns"] == 1100
