@@ -15,10 +15,10 @@
                      counts, loss-vs-wall trajectory at equal step count,
                      zero unrecovered rejects, and the gate's wall overhead
                      on the jump step — DESIGN.md §5
-  arena_bench        packed leaf arenas vs the per-leaf route: kernel
-                     launches per recorded step, traced-program size, and
-                     record/jump walls on a deep MLP + reduced tinyllama —
-                     DESIGN.md §7
+  arena_bench        per_leaf vs pack-copy vs arena-resident routes: kernel
+                     launches per recorded step, traced-program size,
+                     record/jump walls and the per-record pack cost on a
+                     deep MLP + reduced tinyllama — DESIGN.md §7
 """
 from __future__ import annotations
 
@@ -113,48 +113,68 @@ def fig4_curves(steps=600) -> List[str]:
 
 
 def arena_bench(n_mlp_layers=24, width=192, reps=10) -> List[str]:
-    """ISSUE 5 tentpole evidence: packed leaf arenas vs the per-leaf route
-    (core/arena.py, DESIGN.md §7) on two multi-leaf configs:
+    """Tentpole evidence for arena-native residency (core/arena.py,
+    train/step.py::state_resident, DESIGN.md §7) on two multi-leaf configs:
 
       * a deep unstacked MLP (2 leaves per layer — the dispatch-bound
         regime: hundreds of tiny per-leaf launches), and
       * reduced tinyllama (scan-stacked transformer leaves + embeddings).
 
-    Rows record, per route: the kernel-launch proxy (data-pass primitives
-    per recorded step — dot_general / pallas_call / scatter / row-write),
-    the traced-program size (total jaxpr primitives: the per-leaf unroll
-    is what made traces long), and measured record+update / jump walls.
-    Acceptance: >= 5x fewer launches per recorded step on the arena route
-    and lower step wall on the transformer config; the jaxpr pins in
-    tests/test_trace_size.py guard the trace-size half of this from
-    regressing.
+    Three routes per config:
 
-    CPU-wall caveat: the arena record pays one extra params-sized gather
-    copy (pack -> row write) that the per-leaf route does not; on CPU —
-    where op dispatch is nearly free and memcpy is the cost — the deep-MLP
-    bucket can show that copy as a record-wall REGRESSION while still
-    cutting launches ~50x. The launch/trace counts are the
-    dispatch-bound-TPU story the arenas exist for; the tinyllama row is
-    the like-for-like wall evidence.
+      per_leaf   dmd.arena=False — the pre-arena route: one record write
+                 and one Gram pass per leaf.
+      packed     dmd.arena=True, arena_native=False — the PR-5 pack-copy
+                 route: params stay leaf-wise; every record re-gathers
+                 them into bucket rows (the `pack_ms` column) before the
+                 row write.
+      resident   dmd.arena=True, arena_native=True — params LIVE in the
+                 flat buckets (the layout Trainer.fit converts to at
+                 entry); record degenerates to one dynamic_update_slice
+                 per bucket and pack_ms is paid once per fit(), not per
+                 record.
+
+    Rows record, per route: the kernel-launch proxy (data-pass primitives
+    per recorded step), the traced-program size, measured record+update /
+    jump walls, and pack_ms (the per-record params->row gather that
+    residency deletes; "-" where the route has no pack, 0.00 where it is
+    amortized to one conversion per fit).
+
+    Acceptance (CI bench-regression guard): record_speedup and
+    jump_speedup in the summary rows compare RESIDENT vs per_leaf and
+    must be > 1.0 on every config — residency exists precisely to delete
+    the pack copy that made the PR-5 deep-MLP record a CPU-wall
+    regression (0.53x) while it was winning launches 48x.
     """
     from repro.configs import get_config, reduced
+    from repro.core import arena as arena_mod
     from repro.models.mlp_net import init_mlp
     from repro.models.transformer import init_params, param_stack_dims
     from repro.trace import count_eqns, count_launch_ops
 
     rows = ["arena,config,route,launches_per_recorded_step,jaxpr_eqns,"
-            "record_update_ms,jump_ms,n_leaves,n_buckets"]
+            "record_update_ms,jump_ms,pack_ms,n_leaves,n_buckets"]
 
-    def bench_one(name, params, stack_dims, m=8):
+    def bench_one(name, params0, stack_dims, m=8):
         cfg = DMDConfig(m=m, s=10, tol=1e-4, anchor="first", warmup_steps=0,
                         cooldown_steps=0)
         out = {}
-        for route, arena_on in (("arena", True), ("per_leaf", False)):
-            c = dataclasses.replace(cfg, arena=arena_on)
+        for route, arena_on, native in (("per_leaf", False, False),
+                                        ("packed", True, False),
+                                        ("resident", True, True)):
+            c = dataclasses.replace(cfg, arena=arena_on,
+                                    arena_native=native)
             acc = DMDAccelerator(c, stack_dims=stack_dims)
+            params = params0
             bufs = acc.init(params)
             grams = acc.init_grams(bufs)
-            n_buckets = len(acc.arena_for(params))
+            table = acc.arena_for(params)
+            n_buckets = len(table)
+            n_leaves = len(leafplan.plan_entries(acc.plans_for(params)))
+            if native and table:
+                # the Trainer.fit entry conversion: params move INTO the
+                # buckets, outside any timed region
+                params = arena_mod.tree_resident(table, params)
 
             def rec(b, g, p, slot):
                 return acc.record(b, p, slot, g)
@@ -164,6 +184,25 @@ def arena_bench(n_mlp_layers=24, width=192, reps=10) -> List[str]:
             launches = count_launch_ops(jx.jaxpr)
             eqns = count_eqns(jx.jaxpr)
             rec_jit = jax.jit(rec, donate_argnums=(0, 1))
+
+            # pack_ms: the params -> bucket-row gather. The packed route
+            # pays it inside EVERY record; the resident route paid it once
+            # at fit() entry (reported 0.00/rec); per_leaf has no buckets.
+            if not table:
+                pack_ms = "-"
+            elif native:
+                pack_ms = "0.00"
+            else:
+                pack = jax.jit(
+                    lambda p: arena_mod.split_state(
+                        arena_mod.tree_resident(table, p))[0])
+                jax.block_until_ready(pack(params))     # compile
+                walls = []
+                for _ in range(reps):
+                    t0 = time.time()
+                    jax.block_until_ready(pack(params))
+                    walls.append(time.time() - t0)
+                pack_ms = f"{float(np.median(walls)) * 1e3:.2f}"
 
             # warm the window so the jump solves on real data
             p = params
@@ -187,27 +226,31 @@ def arena_bench(n_mlp_layers=24, width=192, reps=10) -> List[str]:
             # apply donates params: pre-clone outside the timed region
             clones = [jax.tree_util.tree_map(jnp.copy, p)
                       for _ in range(reps + 1)]
-            jax.block_until_ready(acc.apply(clones.pop(), bufs, grams=grams,
-                                            step=m - 1)[0])    # compile
+            jax.block_until_ready(jax.tree_util.tree_leaves(
+                acc.apply(clones.pop(), bufs, grams=grams,
+                          step=m - 1)[0]))               # compile
             walls = []
             for cp in clones:
                 t0 = time.time()
-                jax.block_until_ready(
-                    acc.apply(cp, bufs, grams=grams, step=m - 1)[0])
+                jax.block_until_ready(jax.tree_util.tree_leaves(
+                    acc.apply(cp, bufs, grams=grams, step=m - 1)[0]))
                 walls.append(time.time() - t0)
             t_jump = float(np.median(walls))
-            n_leaves = len(leafplan.plan_entries(acc.plans_for(params)))
             rows.append(
                 f"arena,{name},{route},{launches},{eqns},"
-                f"{t_rec * 1e3:.2f},{t_jump * 1e3:.2f},{n_leaves},"
-                f"{n_buckets}")
+                f"{t_rec * 1e3:.2f},{t_jump * 1e3:.2f},{pack_ms},"
+                f"{n_leaves},{n_buckets}")
             out[route] = (launches, eqns, t_rec, t_jump)
-        la, ea, ra, ja = out["arena"]
+        lr, er, rr, jr = out["resident"]
         lp, ep, rp, jp = out["per_leaf"]
-        rows.append(f"arena,{name},launch_ratio,{lp / max(la, 1):.1f}x,"
-                    f"eqn_ratio,{ep / max(ea, 1):.1f}x,"
-                    f"record_speedup,{rp / max(ra, 1e-9):.2f}x,"
-                    f"jump_speedup,{jp / max(ja, 1e-9):.2f}x")
+        _, _, rk, jk = out["packed"]
+        rows.append(f"arena,{name},launch_ratio,{lp / max(lr, 1):.1f}x,"
+                    f"eqn_ratio,{ep / max(er, 1):.1f}x,"
+                    f"record_speedup,{rp / max(rr, 1e-9):.2f}x,"
+                    f"jump_speedup,{jp / max(jr, 1e-9):.2f}x")
+        rows.append(f"arena,{name},resident_vs_packed,"
+                    f"record,{rk / max(rr, 1e-9):.2f}x,"
+                    f"jump,{jk / max(jr, 1e-9):.2f}x")
         return out
 
     # deep unstacked MLP: the dispatch-bound many-leaf regime

@@ -12,6 +12,9 @@ exits nonzero while the clean build stays green:
                    (buffer-sized all-gather)
   misalign-arena   shift one ArenaSegment's lane_start off the block grid
                    -> arena-layout fails (alignment + contiguity)
+  force-pack       expand resident params leaf-wise inside record_update
+                   so the PR-5 pack-copy concatenate reappears
+                   -> arena-residency fails (bucket-sized 1-D gather)
   overlap-groups   add two match-everything group rules with distinct
                    phases -> schedule-conflict fails (overlap; and if the
                    residues still collide, the stagger check too)
@@ -85,11 +88,10 @@ def _force_allgather_fns(acc, fns, mesh):
             for key, buf in arenas.items():
                 b = acc._arena_table()[key]
                 if b.lane_axes:
-                    # lane-shard, then demand the replicated buffer back:
+                    # block-shard, then demand the replicated buffer back:
                     # GSPMD must materialize a full-buffer all-gather.
-                    spec = P(None, *tuple(b.lane_spec()))
                     buf = jax.lax.with_sharding_constraint(
-                        buf, NamedSharding(mesh, spec))
+                        buf, NamedSharding(mesh, b.buffer_spec()))
                     buf = jax.lax.with_sharding_constraint(
                         buf, NamedSharding(mesh, P()))
                 gathered[key] = buf
@@ -128,6 +130,37 @@ _register(Mutation(
     doc="shift one ArenaSegment.lane_start off the 128-lane block grid",
     expect_fail="arena-layout",
     post=_misalign_arena))
+
+
+def _force_pack_fns(acc, fns, mesh):
+    import jax
+
+    from repro.core import arena as arena_mod
+
+    def record_update(buffers, grams, params, slots):
+        if not arena_mod.is_arena_state(params):
+            raise ValueError(
+                "force-pack needs a RESIDENT build (dmd.arena_native on "
+                "with a resident-capable optimizer) — the audited state "
+                "has per-leaf params, there is nothing to force back")
+        # Expand the flat buckets to per-leaf tensors before recording:
+        # acc.record sees leaf-wise params and falls back to the pack-copy
+        # route, so the bucket-sized concatenate the arena-residency pass
+        # bans reappears in the traced program.
+        params = arena_mod.tree_leafwise(acc._arena_table(), params)
+        return acc.record(buffers, params, slots, grams)
+
+    out = dict(fns)
+    out["record_update"] = jax.jit(record_update, donate_argnums=(0, 1))
+    return out
+
+
+_register(Mutation(
+    name="force-pack",
+    doc="expand resident params leaf-wise inside record_update (pack-copy "
+        "route resurfaces)",
+    expect_fail="arena-residency",
+    wrap_fns=_force_pack_fns))
 
 
 def _overlap_groups(acfg):

@@ -10,6 +10,8 @@ a stable name. The registry order below is the report order:
   dtype-flow                silent fp32<->bf16 casts on Gram/buffer tensors
   host-callback-in-hot-loop pure/io_callback in a jitted step (eig whitelist)
   arena-layout              offset-table / alignment / eligibility invariants
+  arena-residency           resident params: no bucket-sized pack gathers in
+                            the hot data passes (record is a pointer bump)
   schedule-conflict         overlapping rules, phase-residue collisions, clamps
 
 These are the SAME invariant checks the tier-1 audits assert
@@ -114,7 +116,11 @@ def psum_budget_bytes(ctx) -> int:
     total = 0
     for b in ctx.arena.values():
         if b.lane_axes:
-            total += b.n_sys * (b.m * b.m + b.m) * 4
+            # n_sys_global: a system-sharded bucket psums one Gram partial
+            # per GLOBAL system (each sys shard reduces its local rows over
+            # the lane axes), so the analytic volume scales with the full
+            # stack, not the per-shard slice.
+            total += b.n_sys_global * (b.m * b.m + b.m) * 4
     packed = arena_paths(ctx.arena)
     for p in plan_entries(ctx.plans):
         if p.path in packed:
@@ -144,15 +150,19 @@ def collective_budget(ctx):
                                        for k in sorted(totals)}
         # Buffer-shaped all-gather: banned in EVERY target. The model
         # forward's TP gathers are activation-sized and never land on a
-        # snapshot/Gram shape; a gather RESULTING in one means a managed
-        # tensor was resharded to replicated instead of psum'd in Gram
-        # form.
-        dmd_shapes = set(t.buffer_shapes) | set(t.gram_shapes)
+        # snapshot shape; a gather RESULTING in one means a managed tensor
+        # was resharded to replicated instead of psum'd in Gram form.
+        # Gram-SHAPED gathers are deliberately out of scope: a system-
+        # sharded bucket's (n_sys, m, m) stack is P(sys_axes, None, None),
+        # and the jump's gcat concatenate legitimately gathers those
+        # O(n_sys*m^2) rows — same order as the psum budget, which still
+        # bounds them via max_allgather_bytes below.
+        dmd_shapes = set(t.buffer_shapes)
         hits = [s for s in H.allgather_shapes(t.hlo) if s in dmd_shapes]
         if hits:
             vs.append(Violation(
                 "collective-budget", name,
-                f"all-gather materializes a snapshot/Gram-shaped tensor "
+                f"all-gather materializes a snapshot-buffer-shaped tensor "
                 f"({sorted(set(hits))}): sharded DMD must psum "
                 "O(n_sys*m^2) Gram partials, never gather a buffer"))
         if name not in _UNBUDGETED:
@@ -311,10 +321,13 @@ def arena_layout(ctx):
     info["n_packed"] = len(packed)
     info["n_buckets"] = len(ctx.arena)
 
-    # Eligibility partition (ISSUE 6 satellite): packed iff eligible —
-    # anchor=mean and sharded-stack leaves must be ABSENT from every
-    # bucket, and every excluded leaf must still carry a valid per-leaf
-    # plan (it trains through the per-leaf route, not silently dropped).
+    # Eligibility partition: packed iff eligible. Since the residency PR,
+    # anchor=mean leaves pack (the full-recompute gram kernel fuses the
+    # mean subtraction) and leading-dim sharded-stack leaves pack into
+    # single-segment system-sharded buckets; only the dot_general route
+    # and non-leading sharded stack dims stay excluded. Every excluded
+    # leaf must still carry a valid per-leaf plan (it trains through the
+    # per-leaf route, not silently dropped).
     for p in entries:
         elig = arena_eligible(p, ctx.cfg, ctx.mesh)
         if elig and p.path not in packed:
@@ -326,9 +339,9 @@ def arena_layout(ctx):
             vs.append(Violation(
                 "arena-layout", p.path,
                 f"ineligible leaf packed into an arena (route={p.route}, "
-                f"anchor={ctx.cfg.anchor}, sharded={p.sharded}) — "
-                "mean re-anchoring / sharded stack axes cannot run the "
-                "segmented kernels"))
+                f"anchor={ctx.cfg.anchor}, sharded={p.sharded}) — the "
+                "dot_general route and non-leading sharded stack dims "
+                "cannot run the segmented kernels"))
         if p.path not in packed:
             if p.route not in ROUTES:
                 vs.append(Violation("arena-layout", p.path,
@@ -419,6 +432,92 @@ def arena_layout(ctx):
                 "arena-layout", where,
                 f"segment lanes sum to {lane_cursor} but the bucket "
                 f"carries n_lanes_local={b.n_lanes_local}"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# arena-residency
+# ---------------------------------------------------------------------------
+
+# The pack-copy signature lives in the DATA passes: the fused step's record
+# arm and the standalone record_update. The jump programs legitimately
+# build bucket-sized 1-D rows (core/arena.py::jump combines modes into one
+# flat row per bucket) and stay out of scope.
+_RESIDENCY_TARGETS = ("train_step", "record_update")
+
+
+@register_pass(
+    "arena-residency",
+    "resident params: record is one dynamic_update_slice per bucket — no "
+    "bucket-sized 1-D pack concatenate/gather in the data passes")
+def arena_residency(ctx):
+    """With arena-native residency on (dmd.arena_native, DESIGN.md §7) the
+    managed params LIVE in the flat (N,) buckets, so recording a snapshot
+    never re-packs leaves: a bucket-sized 1-D concatenate/gather in the
+    traced step means the pack-copy route leaked back in and the PR-5 cost
+    (one full gather per record) is being paid silently.
+
+    Checked on the JAXPR, not the optimized HLO: XLA may rewrite the
+    view-gradient pad+add chains into concatenates, which are harmless —
+    the jaxpr shows what the program asked for, not what the compiler
+    canonicalized it into.
+    """
+    from repro import trace
+    from repro.core import arena as arena_mod
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    resident = bool(ctx.state is not None
+                    and arena_mod.is_arena_state(
+                        getattr(ctx.state, "params", None)))
+    native = bool(getattr(ctx.cfg, "arena_native", True))
+    info["resident"] = resident
+    info["arena_native"] = native
+    if not resident:
+        # Consistency: if residency is configured, buckets exist, and the
+        # optimizer supports flat-buffer updates, the audited state MUST
+        # be resident — otherwise every pass below lowered programs that
+        # training never runs.
+        from repro.train.step import RESIDENT_OPTIMIZERS
+        opt = getattr(getattr(ctx.acfg, "optimizer", None), "name", None)
+        info["optimizer"] = opt
+        if native and ctx.arena and opt in RESIDENT_OPTIMIZERS:
+            vs.append(Violation(
+                "arena-residency", "state",
+                f"arena_native on, optimizer {opt!r} supports residency "
+                "and buckets exist, but the audited TrainState is NOT "
+                "resident — the audit is lowering a layout training "
+                "never executes (targets.py must apply state_resident)"))
+        return vs, info
+    if not ctx.arena:
+        return vs, info
+
+    floor = min(b.n_lanes for b in ctx.arena.values())
+    info["min_bucket_lanes"] = floor
+
+    def is_pack(eqn) -> bool:
+        # The pack gather is a 1-D concatenate of per-leaf flats into a
+        # bucket row (core/arena.py::pack_row). Model-side concatenates
+        # are >=2-D activations; slices/views transpose to pads, not
+        # concatenates — so "1-D and bucket-sized" is the signature.
+        if str(eqn.primitive) not in ("concatenate", "gather"):
+            return False
+        shape = getattr(eqn.outvars[0].aval, "shape", ())
+        return len(shape) == 1 and _prod(shape) >= floor
+
+    for name in _RESIDENCY_TARGETS:
+        t = ctx.targets.get(name)
+        if t is None:
+            continue
+        n = trace.count_eqns(t.jaxpr, is_pack)
+        info[f"{name}.pack_ops"] = n
+        if n:
+            vs.append(Violation(
+                "arena-residency", name,
+                f"{n} bucket-sized 1-D concatenate/gather op(s) traced "
+                "with RESIDENT params: record must degenerate to one "
+                "dynamic_update_slice per bucket (the pack-copy route "
+                "leaked back in — core/arena.py::record resident branch)"))
     return vs, info
 
 

@@ -165,6 +165,7 @@ def _init_state(model, acfg, acc, mesh=None):
     import jax.numpy as jnp
     from repro.optim import make_optimizer
     from repro.train.state import TrainState
+    from repro.train.step import state_resident
 
     params = model.init(jax.random.PRNGKey(0))
     opt = make_optimizer(acfg.optimizer)
@@ -183,7 +184,11 @@ def _init_state(model, acfg, acc, mesh=None):
         state = jax.tree_util.tree_map(
             lambda l, s: jax.device_put(l, NamedSharding(mesh, s)),
             state, specs)
-    return state
+    # Same entry conversion Trainer.fit applies (train/step.py): the audit
+    # must lower the step programs over the SAME resident layout training
+    # runs with, or the residency pass would audit a program that never
+    # executes.
+    return state_resident(acc, acfg, state)
 
 
 def trace_target(name: str, jitted, args, kwargs, state,

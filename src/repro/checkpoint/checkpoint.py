@@ -10,7 +10,7 @@ CURRENT mesh's shardings — a checkpoint written on one topology restores onto
 any other (tested across different host-device counts).
 
 Packed-arena states (DESIGN.md §7) are saved/restored LEAF-WISE: the Trainer
-unpacks the per-bucket (m, N) ring buffers into per-leaf buffers/Grams
+unpacks the per-bucket block-major ring buffers into per-leaf buffers/Grams
 (``DMDAccelerator.state_leafwise``) before calling save_checkpoint here, and
 re-packs after restore — so the manifest paths and on-disk format are
 identical whether ``dmd.arena`` is on or off, pre-arena checkpoints load

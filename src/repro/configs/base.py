@@ -183,6 +183,18 @@ class DMDConfig:
                                     # clamped to the bucket's widest member);
                                     # every segment is padded to a multiple
                                     # so kernel blocks never straddle leaves
+    arena_native: bool = True       # arena-native parameter residency
+                                    # (DESIGN.md §7): during Trainer.fit the
+                                    # managed params of packed leaves live IN
+                                    # the bucket's contiguous device buffer;
+                                    # the forward reads zero-copy slice views
+                                    # and record is one dynamic_update_slice
+                                    # per bucket instead of a pack-copy
+                                    # gather. False = the PR-5 pack-copy
+                                    # route — the bit-exact A/B oracle.
+                                    # Residency only engages for optimizers
+                                    # whose moments are elementwise
+                                    # (train/step.py::RESIDENT_OPTIMIZERS).
     kernel_route: str = "auto"      # auto | pallas_flat | pallas_shard_map |
                                     # dot_general: force the per-leaf kernel
                                     # route in core/leafplan.py. "auto" picks

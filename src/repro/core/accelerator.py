@@ -51,13 +51,25 @@ core/arena.py, DESIGN.md §7 — "-" for leaves kept on the per-leaf route.)
 
 Packed arenas (core/arena.py, DESIGN.md §7): with cfg.arena (default on)
 all compatible leaves of a schedule group are packed into contiguous
-per-bucket (m, N) ring buffers at init — the snapshot/Gram/combine data
+per-bucket block-major (n_blocks, m, block_n) ring buffers at init (the
+layout that keeps every arena pass a batch-leading contraction and makes
+the TPU tile the storage tile) — the snapshot/Gram/combine data
 passes then cost ONE segmented kernel launch per bucket per step
 (kernels/arena.py) and the jump ONE batched coefficient solve per group,
 instead of one launch + one eigensolve per leaf. `arena_for(params)`
 exposes the bucket table; `init`/`record`/`apply` transparently carry the
 ``{"__arena__": ..., "leaf": ...}`` two-route state. cfg.arena=False is
 the per-leaf A/B oracle (bit-exact with the pre-arena route).
+
+Arena-native residency (cfg.arena_native, DESIGN.md §7): during
+``Trainer.fit`` the packed leaves' PARAMS (and elementwise optimizer
+moments) also live in the bucket buffers, carried as the same wrapper
+layout. Every entry point here is layout-driven — `record` turns into one
+dynamic_update_slice per bucket when it sees resident params, `jump_tree`
+writes flat bucket rows back without an unpack scatter, and
+`state_leafwise` expands residency for checkpoints, so disk format and
+non-fit callers never see the wrapper. ``arena_native=False`` keeps the
+PR-5 pack-copy route as the bit-exact A/B oracle.
 
 Streaming Gram (DESIGN.md §2): with cfg.streaming_gram the (stack..., m, m)
 Gram is maintained incrementally — each record adds one O(m*n) row pass —
@@ -179,6 +191,16 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
     gset = None if groups is None else frozenset(int(g) for g in groups)
     per_group = getattr(relax, "ndim", 0) == 1
 
+    # Arena-RESIDENT params (dmd.arena_native): split the wrapper — the
+    # per-leaf route below runs over the leaf subtree (None at packed
+    # paths, so packed leaves are compile-time pass-throughs there), and
+    # the arena jump returns whole flat bucket rows that overlay the
+    # resident buffers directly (no unpack scatter at all).
+    resident = arena_mod.is_arena_state(params)
+    pres: dict = {}
+    if resident:
+        pres, params = arena_mod.split_state(params)
+
     arena_updates: dict = {}
     ranks: list = []
     if arena_mod.is_arena_state(buffers):
@@ -195,7 +217,7 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
                          if arena_mod.is_arena_state(grams) else (None, grams))
         arena_updates, ranks = arena_mod.jump(
             cfg, arena, params, arenas, agrams, relax, groups=gset,
-            s_vec=s_vec)
+            s_vec=s_vec, resident=resident)
         ranks = list(ranks)
 
     def one(plan, p, buf, g):
@@ -214,7 +236,10 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
     new_params = jax.tree_util.tree_map(
         lambda o: o.params if isinstance(o, LeafJump) else o, out,
         is_leaf=is_jump)
-    if arena_updates:
+    if resident:
+        new_params = arena_mod.make_state({**pres, **arena_updates},
+                                          new_params)
+    elif arena_updates:
         from repro.distributed.sharding import normalize_path
 
         def overlay(kp, p):
@@ -284,6 +309,15 @@ class DMDAccelerator:
         must rebuild the table, not silently reuse a stale one. Reads only
         metadata, so it is trace-safe (params may be tracers or
         ShapeDtypeStructs)."""
+        if arena_mod.is_arena_state(params):
+            # Arena-resident params (dmd.arena_native): the wrapper has no
+            # leaf metadata for the packed paths — the plan table that
+            # BUILT the residency layout is the only valid one.
+            if self._plans is None:
+                raise ValueError(
+                    "resident params before plans were built — call "
+                    "plans_for/init on the leafwise params first")
+            return self._plans
         key = (jax.tree_util.tree_structure(params),
                tuple((tuple(l.shape), str(getattr(l, "dtype", "?")))
                      for l in jax.tree_util.tree_leaves(params)))
@@ -330,7 +364,9 @@ class DMDAccelerator:
         on first use."""
         if params is not None:
             self.plans_for(params)
-        return leafplan.plan_table(self._plans, self._arena_table())
+        return leafplan.plan_table(
+            self._plans, self._arena_table(),
+            native=bool(getattr(self.cfg, "arena_native", True)))
 
     # ---- schedule ---------------------------------------------------------
     # Per-group cycle after warmup+phase: [cooldown unrecorded steps]
@@ -388,8 +424,9 @@ class DMDAccelerator:
     # ---- state ------------------------------------------------------------
     def init(self, params: PyTree) -> PyTree:
         """Snapshot state for `params`. With arenas on (DESIGN.md §7) this
-        is the two-route wrapper ``{"__arena__": {bucket: (m, N) ring
-        buffer}, "leaf": per-leaf pytree}`` — arena'd leaves live packed,
+        is the two-route wrapper ``{"__arena__": {bucket: block-major
+        (n_blocks, m, block_n) ring buffer}, "leaf": per-leaf pytree}``
+        — arena'd leaves live packed,
         the rest (dot_general oracle / sharded stack axes) keep their
         per-leaf (m, *shape) buffers; otherwise the plain per-leaf pytree.
         Abstract-aware either way (ShapeDtypeStruct in -> out)."""
@@ -448,26 +485,48 @@ class DMDAccelerator:
                                                self.cfg, plans)
         table = self.arena_for(params)
         arenas, leaf = arena_mod.split_state(buffers)
+        # With RESIDENT params (the arena wrapper) arena_mod.record is a
+        # pointer bump — one astype + dynamic_update_slice per bucket; the
+        # per-leaf snapshot calls below only see the non-packed leaves
+        # (the wrapper's leaf subtree is None at every packed path).
         arenas = arena_mod.record(arenas, params, slot, table, self.cfg)
-        leaf = snap.record(leaf, params, slot, plans)
+        p_leaf = (arena_mod.split_state(params)[1]
+                  if arena_mod.is_arena_state(params) else params)
+        leaf = snap.record(leaf, p_leaf, slot, plans)
         new_bufs = arena_mod.make_state(arenas, leaf)
         if grams is None:
             return new_bufs, None
         agrams, lgrams = arena_mod.split_state(grams)
         new_grams = arena_mod.make_state(
             arena_mod.update_grams(agrams, arenas, slot, self.cfg, table),
-            snap.update_grams(lgrams, leaf, params, slot, self.cfg, plans))
+            snap.update_grams(lgrams, leaf, p_leaf, slot, self.cfg, plans))
         return new_bufs, new_grams
 
     # ---- checkpoint format (leaf-wise arena views) ------------------------
     def state_leafwise(self, state):
         """TrainState -> the same state with arenas unpacked into the
-        per-leaf buffer/Gram pytrees (the ``dmd.arena=False`` layout).
+        per-leaf buffer/Gram pytrees (the ``dmd.arena=False`` layout) AND
+        resident params/optimizer moments expanded back to per-leaf arrays.
         Checkpoints are ALWAYS written in this form, so they are
-        byte-compatible across arena on/off, pre-arena checkpoints restore
-        unchanged, and elastic remapped-mesh restore keeps using the
-        audited per-leaf PartitionSpecs. No-op when nothing is packed."""
-        if state is None or not arena_mod.is_arena_state(state.dmd_buffers):
+        byte-compatible across arena on/off AND arena_native on/off,
+        pre-residency checkpoints restore unchanged, and elastic
+        remapped-mesh restore keeps using the audited per-leaf
+        PartitionSpecs. No-op when nothing is packed."""
+        if state is None:
+            return state
+        if arena_mod.is_arena_state(getattr(state, "params", None)):
+            table = self.arena_for(state.params)
+
+            def unwrap(x):
+                return (arena_mod.tree_leafwise(table, x)
+                        if arena_mod.is_arena_state(x) else x)
+
+            state = state._replace(
+                params=arena_mod.tree_leafwise(table, state.params),
+                opt_state=jax.tree_util.tree_map(
+                    unwrap, state.opt_state,
+                    is_leaf=arena_mod.is_arena_state))
+        if not arena_mod.is_arena_state(state.dmd_buffers):
             return state
         from repro.distributed.sharding import normalize_path
         table = self.arena_for(state.params)

@@ -15,7 +15,7 @@ This module buckets all compatible leaves at accelerator init —
 
     bucket key = (schedule group, param dtype, lane-sharding axes)
 
-— into one contiguous flat arena per bucket, with an offset/length table
+— into one contiguous arena per bucket, with an offset/length table
 (``ArenaSegment``) carried on the ``ArenaBucket`` alongside the LeafPlan
 pytree. Per-system segments (a "system" = one independent DMD trajectory:
 an unstacked leaf, or one layer of a scan-stacked leaf) are padded to a
@@ -26,13 +26,47 @@ contribute zero to every inner product (padding is exact).
 
 State layout (TrainState.dmd_buffers / dmd_gram when arenas are active):
 
-    {"__arena__": {bucket_key: (m, N_bucket) ring buffer}, "leaf": pytree}
-    {"__arena__": {bucket_key: (n_sys, m, m) fp32 Grams},  "leaf": pytree}
+    {"__arena__": {bucket_key: (n_blocks, m, block_n) ring buffer}, "leaf": …}
+    {"__arena__": {bucket_key: (n_sys, m, m) fp32 Grams},           "leaf": …}
+
+The snapshot ring buffer is BLOCK-MAJOR: the flat lane axis is cut into
+``block_n``-lane blocks and each block carries its own m snapshot rows
+contiguously. That single layout decision makes every DMD data pass a
+batch-LEADING contraction (one gemm/gemv-shaped ``dot_general`` per
+bucket on CPU/GPU — batch dims must lead, so the old snapshot-major
+(m, N) layout forced either a full-buffer transpose or a slow fused
+multiply-reduce) and makes the TPU Pallas tile literally the storage
+tile ``x[i]``. The every-step record writes one (nb, 1, bn) slab per
+bucket; flat (N,) rows appear only at the pack/unpack and jump-blend
+boundaries, where blocking is a free divisible reshape.
 
 The ``leaf`` subtree keeps the per-leaf layout for leaves an arena cannot
-take (route forced to ``dot_general``, sharded stack axes) — the two
-routes coexist leaf-by-leaf. ``dmd.arena=False`` disables bucketing
-entirely and keeps the bit-exact per-leaf A/B oracle.
+take (route forced to ``dot_general``, or a stack axis sharded on a
+non-leading dim) — the two routes coexist leaf-by-leaf. ``dmd.arena=False``
+disables bucketing entirely and keeps the bit-exact per-leaf A/B oracle.
+
+Parameter residency (``dmd.arena_native``, DESIGN.md §7): during
+``Trainer.fit`` the managed params (and elementwise optimizer moments) of
+packed leaves live IN their bucket's contiguous ``(N_local,)`` device
+buffer — the same wrapper layout as the snapshot state:
+
+    {"__arena__": {bucket_key: (N,) flat params}, "leaf": pytree-with-None}
+
+``tree_resident`` / ``tree_leafwise`` convert between the two layouts;
+``tree_leafwise`` doubles as the in-trace view expansion for the model's
+forward (static slice + reshape per segment — zero-copy views of the
+contiguous buffer, no scatter). With resident params, ``record`` is one
+``astype`` + ``dynamic_update_slice`` per bucket (a pointer bump) instead
+of the per-leaf pack gather, and ``jump`` writes the blended flat row
+straight back as the new resident buffer.
+
+Sharded-stack leaves (scan-stacked params whose leading stack dim is
+sharded) pack into their own SINGLE-SEGMENT bucket per leaf: each device
+owns whole systems (``sys_axes``), the Gram stack stays sharded
+``P(sys_axes, None, None)``, and the kernels need no collective beyond
+the usual lane psum. ``anchor=mean`` buckets run the full-recompute Gram
+kernel with fused mean subtraction (streaming is structurally off for
+mean — dmd.gram_row_matrix rejects it).
 
 Jump solve: instead of one ``eigh``/``_host_eig`` call per leaf,
 ``jump`` concatenates every bucket's Grams of a jumping group into one
@@ -74,14 +108,15 @@ ARENA_KEY = "__arena__"
 class ArenaSegment:
     """One leaf's slice of a bucket's lane axis (the offset/length table).
 
-    A leaf with k stack dims contributes ``n_sys = prod(stack_shape)``
-    consecutive systems, each occupying ``seg_lanes`` lanes (``flat_local``
-    real + zero tail). ``*_local`` fields are shard-local for sharded
-    buckets (every device holds the same layout over its own shards)."""
+    A leaf with k stack dims contributes ``n_sys`` consecutive systems,
+    each occupying ``seg_lanes`` lanes (``flat_local`` real + zero tail).
+    ``*_local`` fields and ``n_sys`` are shard-local for sharded buckets
+    (every device holds the same layout over its own shards; for a
+    system-sharded bucket the global count is ``n_sys * sys_factor``)."""
     path: str
     sys_start: int                 # first system index within the bucket
     lane_start: int                # first (shard-local) lane offset
-    n_sys: int                     # independent DMD systems in this leaf
+    n_sys: int                     # shard-LOCAL DMD systems in this leaf
     flat_local: int                # real lanes per system (unpadded)
     seg_lanes: int                 # padded lanes per system (block multiple)
     shape: Tuple[int, ...]         # full global leaf shape
@@ -107,6 +142,11 @@ class ArenaBucket:
     lane_axes: Tuple[str, ...]     # mesh axes sharding the lane dim (== the
                                    # Gram psum axes; () = unsharded bucket)
     shard_factor: int              # prod of lane_axes' mesh sizes
+    sys_axes: Tuple[str, ...] = () # mesh axes sharding the (leading) stack
+                                   # dim — single-segment buckets only: each
+                                   # device owns whole systems, the Gram
+                                   # stack stays sharded over these axes
+    sys_factor: int = 1            # prod of sys_axes' mesh sizes
     mesh: Optional[Mesh] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -116,7 +156,13 @@ class ArenaBucket:
 
     @property
     def n_sys(self) -> int:
+        """Shard-LOCAL system count (what the segmented kernels see)."""
         return sum(s.n_sys for s in self.segments)
+
+    @property
+    def n_sys_global(self) -> int:
+        """Global system count (the carried Gram stack's leading dim)."""
+        return self.n_sys * self.sys_factor
 
     @property
     def n_lanes_local(self) -> int:
@@ -124,8 +170,19 @@ class ArenaBucket:
 
     @property
     def n_lanes(self) -> int:
-        """Global lane count of the carried (m, N) array."""
-        return self.n_lanes_local * self.shard_factor
+        """Global lane count (flat rows; block_n * n_blocks)."""
+        return self.n_lanes_local * self.shard_factor * self.sys_factor
+
+    @property
+    def n_blocks_local(self) -> int:
+        """Shard-local block count (what the segmented kernels walk)."""
+        return self.n_lanes_local // self.block_n
+
+    @property
+    def n_blocks(self) -> int:
+        """Global block count: leading dim of the carried block-major
+        (n_blocks, m, block_n) snapshot buffer."""
+        return self.n_lanes // self.block_n
 
     def block_sys(self) -> np.ndarray:
         """Static (shard-local) block -> system-index table for the
@@ -136,8 +193,26 @@ class ArenaBucket:
         return np.concatenate(parts) if parts else np.zeros(0, np.int32)
 
     def lane_spec(self) -> P:
+        """Spec of the FLAT 1-D lane axis (pack/unpack rows, jump blend):
+        system-sharded buckets are sys-major so the flat lane dim shards
+        over sys_axes THEN lane_axes."""
         from repro.kernels.arena import lane_spec
-        return lane_spec(self.lane_axes)
+        return lane_spec(self.sys_axes + self.lane_axes)
+
+    def buffer_spec(self) -> P:
+        """Spec of the block-major (n_blocks, m, block_n) snapshot buffer:
+        the same mesh axes shard the leading BLOCK axis (every shard's
+        lane count is a block_n multiple, so shard boundaries are block
+        boundaries and flat<->blocked reshapes split/merge the sharded
+        dim divisibly)."""
+        from repro.kernels.arena import buf_spec
+        return buf_spec(self.sys_axes + self.lane_axes)
+
+    def gram_spec(self) -> P:
+        """Spec of the (n_sys_global, m, m) Gram stack."""
+        from repro.kernels.arena import _axis_entry
+        return (P(_axis_entry(self.sys_axes), None, None)
+                if self.sys_axes else P())
 
 
 # ---------------------------------------------------------------------------
@@ -176,20 +251,19 @@ def _local_shape(plan: LeafPlan, mesh: Optional[Mesh]) -> Tuple[int, ...]:
 
 
 def arena_eligible(plan: LeafPlan, cfg, mesh: Optional[Mesh]) -> bool:
-    """A leaf joins an arena unless it must keep its per-leaf route:
-    the forced ``dot_general`` oracle, anchors without a fused kernel
-    (``mean`` re-anchors every row), or stack axes sharded across devices
-    (systems would straddle shards — the per-leaf shard_map route handles
-    those)."""
+    """A leaf joins an arena unless it must keep its per-leaf route: only
+    the forced ``dot_general`` oracle, and stack axes sharded on a
+    NON-leading stack dim (shard-major packing would interleave the
+    global system ordering). ``anchor=mean`` leaves pack (the full-gram
+    kernel fuses the mean subtraction) and leading-dim sharded stacks get
+    their own single-segment bucket (``sys_axes``)."""
     if not getattr(cfg, "arena", True):
         return False
     if plan.route == "dot_general":
         return False
-    if cfg.anchor not in ("none", "first"):
-        return False
     ent = tuple(plan.param_spec) + (None,) * plan.stack_dims
-    if _axes_of(ent[:plan.stack_dims], mesh):
-        return False                       # sharded stack axes
+    if plan.stack_dims > 1 and _axes_of(ent[1:plan.stack_dims], mesh):
+        return False                   # non-leading sharded stack axes
     return True
 
 
@@ -204,31 +278,40 @@ def build_arenas(plans: PyTree, cfg, mesh: Optional[Mesh] = None
     collapse to one 128-lane tile while big buckets keep wide tiles."""
     from repro.kernels.ops import lane_block
 
-    grouped: Dict[str, List[Tuple[LeafPlan, Tuple[str, ...]]]] = {}
+    grouped: Dict[str, List[Tuple[LeafPlan, Tuple[str, ...],
+                                  Tuple[str, ...]]]] = {}
     for plan in plan_entries(plans):
         if not arena_eligible(plan, cfg, mesh):
             continue
         ent = tuple(plan.param_spec) + (None,) * len(plan.shape)
         lane_axes = _axes_of(ent[plan.stack_dims:], mesh)
+        sys_axes = _axes_of(ent[:plan.stack_dims], mesh)
         key = f"g{plan.group}-{plan.dtype}"
         if lane_axes:
             key += "-" + "+".join(lane_axes)
-        grouped.setdefault(key, []).append((plan, lane_axes))
+        if sys_axes:
+            # system-sharded leaves get their own SINGLE-segment bucket:
+            # packing two leaves shard-major would interleave their global
+            # system ordering; the path disambiguates the key.
+            key += ("-sys" + "+".join(sys_axes) + "-"
+                    + plan.path.replace("/", "."))
+        grouped.setdefault(key, []).append((plan, lane_axes, sys_axes))
 
     sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
              if mesh is not None else {})
     out: Dict[str, ArenaBucket] = {}
     for key in sorted(grouped):
         members = grouped[key]
-        locals_ = [_local_shape(p, mesh) for p, _ in members]
+        locals_ = [_local_shape(p, mesh) for p, _, _ in members]
         flats = [int(np.prod(ls[p.stack_dims:], dtype=np.int64) or 1)
-                 for (p, _), ls in zip(members, locals_)]
+                 for (p, _, _), ls in zip(members, locals_)]
         block_n = lane_block(int(getattr(cfg, "arena_block_n", 512)),
                              max(flats))
         segs: List[ArenaSegment] = []
         sys_i = lane_i = 0
-        for (plan, lane_axes), lshape, flat in zip(members, locals_, flats):
-            n_sys = int(np.prod(plan.stack_shape, dtype=np.int64)) \
+        for (plan, lane_axes, sys_axes), lshape, flat in zip(
+                members, locals_, flats):
+            n_sys = int(np.prod(lshape[:plan.stack_dims], dtype=np.int64)) \
                 if plan.stack_dims else 1
             seg_lanes = -(-flat // block_n) * block_n
             segs.append(ArenaSegment(
@@ -240,14 +323,17 @@ def build_arenas(plans: PyTree, cfg, mesh: Optional[Mesh] = None
                 snapshot_spec=plan.snapshot_spec))
             sys_i += n_sys
             lane_i += n_sys * seg_lanes
-        lane_axes = members[0][1]
-        factor = 1
+        lane_axes, sys_axes = members[0][1], members[0][2]
+        factor = sys_f = 1
         for a in lane_axes:
             factor *= sizes.get(a, 1)
+        for a in sys_axes:
+            sys_f *= sizes.get(a, 1)
         out[key] = ArenaBucket(
             key=key, group=members[0][0].group, sched=members[0][0].sched,
             block_n=block_n, segments=tuple(segs), lane_axes=lane_axes,
-            shard_factor=factor, mesh=mesh)
+            shard_factor=factor, sys_axes=sys_axes, sys_factor=sys_f,
+            mesh=mesh)
     return out
 
 
@@ -266,8 +352,10 @@ def layout_table(table: Dict[str, ArenaBucket]) -> list:
         out.append({
             "key": b.key, "group": b.group, "m": b.m,
             "block_n": b.block_n, "n_sys": b.n_sys,
+            "n_sys_global": b.n_sys_global,
             "n_lanes_local": b.n_lanes_local, "n_lanes": b.n_lanes,
             "lane_axes": list(b.lane_axes), "shard_factor": b.shard_factor,
+            "sys_axes": list(b.sys_axes), "sys_factor": b.sys_factor,
             "segments": [{
                 "path": s.path, "sys_start": s.sys_start,
                 "lane_start": s.lane_start, "n_sys": s.n_sys,
@@ -300,7 +388,7 @@ def init_arena_buffers(table: Dict[str, ArenaBucket], cfg,
     dtype = jnp.dtype(cfg.snapshot_dtype)
     out = {}
     for key, b in table.items():
-        shape = (b.m, b.n_lanes)
+        shape = (b.n_blocks, b.m, b.block_n)
         out[key] = (jax.ShapeDtypeStruct(shape, dtype) if abstract
                     else jnp.zeros(shape, dtype))
     return out
@@ -310,7 +398,7 @@ def init_arena_grams(table: Dict[str, ArenaBucket], abstract: bool = False
                      ) -> Dict[str, Any]:
     out = {}
     for key, b in table.items():
-        shape = (b.n_sys, b.m, b.m)
+        shape = (b.n_sys_global, b.m, b.m)
         out[key] = (jax.ShapeDtypeStruct(shape, jnp.float32) if abstract
                     else jnp.zeros(shape, jnp.float32))
     return out
@@ -346,8 +434,8 @@ def _shard_wrap(bucket: ArenaBucket, fn, in_specs, out_specs):
     """One shard_map contract for pack/unpack AND the kernels: delegate to
     kernels/arena.py's shard_wrap so the two paths can never diverge."""
     from repro.kernels.arena import shard_wrap
-    return shard_wrap(bucket.mesh, bucket.lane_axes, fn, in_specs,
-                      out_specs)
+    return shard_wrap(bucket.mesh, bucket.sys_axes + bucket.lane_axes, fn,
+                      in_specs, out_specs)
 
 
 def _params_by_path(params: PyTree) -> Dict[str, Any]:
@@ -388,6 +476,57 @@ def _unpack_row(bucket: ArenaBucket, row: jnp.ndarray, lead: int = 0
 
 
 # ---------------------------------------------------------------------------
+# Parameter residency (dmd.arena_native): params/moments live in the bucket
+# ---------------------------------------------------------------------------
+
+def tree_resident(table: Dict[str, ArenaBucket], tree: PyTree) -> PyTree:
+    """Move every packed leaf of a params-shaped ``tree`` into its bucket's
+    contiguous ``(N,)`` flat buffer (the resident layout). The buffer
+    keeps each field's OWN leaf dtype (param dtype for params, fp32 for
+    optimizer moments); packed positions of the ``leaf`` subtree become
+    None. Inverse: ``tree_leafwise``. Off the hot path — called once at
+    ``Trainer.fit`` entry."""
+    from repro.distributed.sharding import normalize_path
+
+    by_path = _params_by_path(tree)
+    arenas: Dict[str, jnp.ndarray] = {}
+    for key in sorted(table):
+        b = table[key]
+        dtype = by_path[b.segments[0].path].dtype
+        arenas[key] = pack_row(b, by_path, dtype)
+    packed = arena_paths(table)
+
+    def strip(kp, leaf):
+        path = normalize_path(jax.tree_util.keystr(kp))
+        return None if path in packed else leaf
+
+    return make_state(arenas,
+                      jax.tree_util.tree_map_with_path(strip, tree))
+
+
+def tree_leafwise(table: Dict[str, ArenaBucket], wrapper: PyTree) -> PyTree:
+    """Resident wrapper -> per-leaf pytree. ALSO the in-trace zero-copy
+    view expansion for the model's forward: each leaf is a static
+    slice + reshape of the contiguous resident row (no data movement, no
+    scatter — XLA keeps them as views), so grads of loss∘views transpose
+    to pure pad-extended slices of the flat gradient."""
+    from repro.distributed.sharding import normalize_path
+
+    arenas, leaf = split_state(wrapper)
+    by_path: Dict[str, jnp.ndarray] = {}
+    for key, row in arenas.items():
+        b = table[key]
+        for seg, x in zip(b.segments, _unpack_row(b, row)):
+            by_path[seg.path] = x          # uncast: row dtype == leaf dtype
+
+    def fill(kp, x):
+        return by_path.get(normalize_path(jax.tree_util.keystr(kp)), x)
+
+    return jax.tree_util.tree_map_with_path(
+        fill, leaf, is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
 # record / streaming-Gram update (one launch per bucket)
 # ---------------------------------------------------------------------------
 
@@ -398,10 +537,16 @@ def _bucket_slot(bucket: ArenaBucket, slot):
 def record(arenas: Dict[str, jnp.ndarray], params: PyTree, slot,
            table: Dict[str, ArenaBucket], cfg,
            group: Optional[int] = None) -> Dict[str, jnp.ndarray]:
-    """Write current params into each bucket's row `slot` — ONE packed
-    gather + ONE dynamic row update per bucket, replacing the per-leaf
-    dynamic-update fan-out. Slot semantics match snapshots.record."""
-    by_path = _params_by_path(params)
+    """Write current params into each bucket's snapshot row `slot` — with
+    RESIDENT params (``params`` is the arena wrapper) this is one
+    ``astype`` + blocked reshape + ``dynamic_update_slice`` on the middle
+    (snapshot) axis per bucket: the row is already contiguous in the
+    resident buffer, and the flat->(nb, bn) reshape is a free divisible
+    split. Leafwise params pay the PR-5 pack gather instead. Slot
+    semantics match snapshots.record."""
+    resident = is_arena_state(params)
+    pres = split_state(params)[0] if resident else None
+    by_path = None if resident else _params_by_path(params)
     dtype = jnp.dtype(cfg.snapshot_dtype)
     out = dict(arenas)
     for key, buf in arenas.items():
@@ -416,8 +561,10 @@ def record(arenas: Dict[str, jnp.ndarray], params: PyTree, slot,
             s = si
         else:
             s = jnp.maximum(s, 0)
-        row = pack_row(b, by_path, dtype)
-        out[key] = jax.lax.dynamic_update_index_in_dim(buf, row, s, axis=0)
+        row = (pres[key].astype(dtype) if resident
+               else pack_row(b, by_path, dtype))
+        out[key] = jax.lax.dynamic_update_index_in_dim(
+            buf, row.reshape(b.n_blocks, b.block_n), s, axis=1)
     return out
 
 
@@ -442,11 +589,11 @@ def update_grams(agrams: Dict[str, jnp.ndarray],
             continue
         sv = si if si is not None else jnp.maximum(s, 0)
         buf = arenas[key]
-        q = jax.lax.dynamic_index_in_dim(buf, sv, 0, keepdims=False)
+        q = jax.lax.dynamic_index_in_dim(buf, sv, 1, keepdims=False)
         row = ka.gram_row(buf, q, b.block_sys(), b.n_sys,
                           anchor_first=cfg.anchor == "first",
-                          block_n=b.block_n,
-                          mesh=b.mesh, lane_axes=b.lane_axes)
+                          block_n=b.block_n, mesh=b.mesh,
+                          lane_axes=b.lane_axes, sys_axes=b.sys_axes)
         out[key] = dmd_math.set_gram_row(g, row, sv)
     return out
 
@@ -458,20 +605,25 @@ def update_grams(agrams: Dict[str, jnp.ndarray],
 def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
          arenas: Dict[str, jnp.ndarray],
          agrams: Optional[Dict[str, jnp.ndarray]], relax,
-         groups: Optional[frozenset] = None, s_vec=None
+         groups: Optional[frozenset] = None, s_vec=None,
+         resident: bool = False
          ) -> Tuple[Dict[str, jnp.ndarray], List[jnp.ndarray]]:
     """DMD jump over every arena'd leaf of the jumping groups.
 
-    Returns ({path: new_leaf (param dtype)}, [per-leaf mean rank ...]).
+    Returns ({path: new_leaf (param dtype)}, [per-leaf mean rank ...]);
+    with ``resident=True`` the updates stay flat and are keyed by BUCKET
+    ({bucket_key: (N,) new resident row}) — no unpack scatter at all.
     Per group: concatenate the buckets' (n_sys, m, m) Grams, ONE
     dmd_coefficients call (the batched eigh/host-eig solve — m is uniform
     within a group), split the coefficient rows back per bucket, ONE
     segmented combine launch per bucket, then scatter the flat result into
     per-leaf arrays. Missing/None ``agrams`` entries trigger the one-launch
-    full Gram recompute (the streaming_gram=False A/B path)."""
+    full Gram recompute (the streaming_gram=False A/B path — also the only
+    Gram path for ``anchor=mean`` buckets, whose mean subtraction is fused
+    into the kernel)."""
     from repro.kernels import arena as ka
 
-    by_path = _params_by_path(params)
+    by_path = None if resident else _params_by_path(params)
     per_group = getattr(relax, "ndim", 0) == 1
     updates: Dict[str, jnp.ndarray] = {}
     ranks: List[jnp.ndarray] = []
@@ -492,8 +644,9 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
             if g is None:
                 g = ka.gram(arenas[b.key], b.block_sys(), b.n_sys,
                             anchor_first=cfg.anchor == "first",
-                            block_n=b.block_n,
-                            mesh=b.mesh, lane_axes=b.lane_axes)
+                            anchor_mean=cfg.anchor == "mean",
+                            block_n=b.block_n, mesh=b.mesh,
+                            lane_axes=b.lane_axes, sys_axes=b.sys_axes)
             grams.append(g)
         gcat = grams[0] if len(grams) == 1 else jnp.concatenate(grams)
         sched = buckets[0].sched
@@ -506,23 +659,34 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
             s_dyn=sd)
         ofs = 0
         for b in buckets:
-            cb = jax.lax.slice_in_dim(c, ofs, ofs + b.n_sys, axis=0)
-            rb = jax.lax.slice_in_dim(info["rank"], ofs, ofs + b.n_sys,
-                                      axis=0)
-            ofs += b.n_sys
+            cb = jax.lax.slice_in_dim(c, ofs, ofs + b.n_sys_global, axis=0)
+            rb = jax.lax.slice_in_dim(info["rank"], ofs,
+                                      ofs + b.n_sys_global, axis=0)
+            ofs += b.n_sys_global
             buf = arenas[b.key]
             flat = ka.combine(buf, cb, b.block_sys(), block_n=b.block_n,
-                              mesh=b.mesh, lane_axes=b.lane_axes)
+                              mesh=b.mesh, lane_axes=b.lane_axes,
+                              sys_axes=b.sys_axes)
             # Same last line of defense as the per-leaf route: a non-finite
             # BUFFER poisons the combine even under c = e_last (0*inf=NaN);
             # never leave params less finite than the last snapshot.
             flat = jnp.where(jnp.isfinite(flat), flat,
-                             buf[-1].astype(flat.dtype))
+                             buf[:, -1, :].reshape(-1).astype(flat.dtype))
+            if resident:
+                updates[b.key] = flat.astype(
+                    jnp.dtype(b.segments[0].param_dtype))
+                for seg in b.segments:
+                    ranks.append(jnp.mean(jax.lax.slice_in_dim(
+                        rb, seg.sys_start * b.sys_factor,
+                        (seg.sys_start + seg.n_sys) * b.sys_factor, axis=0
+                    ).astype(jnp.float32)))
+                continue
             for seg, leaf in zip(b.segments, _unpack_row(b, flat)):
                 p = by_path[seg.path]
                 updates[seg.path] = leaf.astype(p.dtype)
                 ranks.append(jnp.mean(jax.lax.slice_in_dim(
-                    rb, seg.sys_start, seg.sys_start + seg.n_sys, axis=0
+                    rb, seg.sys_start * b.sys_factor,
+                    (seg.sys_start + seg.n_sys) * b.sys_factor, axis=0
                 ).astype(jnp.float32)))
     return updates, ranks
 
@@ -534,11 +698,14 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
 def buffers_leafwise(table: Dict[str, ArenaBucket],
                      arenas: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
     """{path: (m, *shape) buffer} — the per-leaf layout a non-arena run
-    would carry, sliced out of the arenas (checkpoint save path)."""
+    would carry, sliced out of the arenas (checkpoint save path). The
+    block-major buffer is re-slabbed to snapshot-major (m, N) first — a
+    transpose + divisible reshape, off the hot path."""
     out = {}
     for key, buf in arenas.items():
         b = table[key]
-        for seg, arr in zip(b.segments, _unpack_row(b, buf, lead=1)):
+        slab = jnp.transpose(buf, (1, 0, 2)).reshape(b.m, b.n_lanes)
+        for seg, arr in zip(b.segments, _unpack_row(b, slab, lead=1)):
             out[seg.path] = arr
     return out
 
@@ -550,8 +717,9 @@ def grams_leafwise(table: Dict[str, ArenaBucket],
     for key, g in agrams.items():
         b = table[key]
         for seg in b.segments:
-            sub = jax.lax.slice_in_dim(g, seg.sys_start,
-                                       seg.sys_start + seg.n_sys, axis=0)
+            sub = jax.lax.slice_in_dim(
+                g, seg.sys_start * b.sys_factor,
+                (seg.sys_start + seg.n_sys) * b.sys_factor, axis=0)
             stack = seg.shape[:seg.stack_dims]
             out[seg.path] = sub.reshape(stack + (b.m, b.m))
     return out
@@ -561,20 +729,24 @@ def buffers_from_leafwise(table: Dict[str, ArenaBucket],
                           by_path: Dict[str, Any], cfg
                           ) -> Dict[str, jnp.ndarray]:
     """Inverse of buffers_leafwise: re-pack restored per-leaf buffers into
-    arenas (checkpoint restore path; pad lanes re-zeroed)."""
+    block-major arenas (checkpoint restore path; pad lanes re-zeroed).
+    The shard-local pack concatenates to snapshot-major (m, N_local) then
+    re-slabs to (nb_local, m, bn) — a transpose + divisible reshape, off
+    the hot path."""
     dtype = jnp.dtype(cfg.snapshot_dtype)
     out = {}
     for key, b in table.items():
         leaves = [by_path[s.path] for s in b.segments]
 
         def local(*ls, b=b):
-            return jnp.concatenate(
+            packed = jnp.concatenate(
                 [_pack_leaf_local(x, s, dtype, lead=1)
                  for x, s in zip(ls, b.segments)], axis=1)
+            return jnp.transpose(
+                packed.reshape(b.m, -1, b.block_n), (1, 0, 2))
 
         in_specs = tuple(s.snapshot_spec for s in b.segments)
-        out_spec = P(None, *tuple(b.lane_spec()))
-        out[key] = _shard_wrap(b, local, in_specs, out_spec)(*leaves)
+        out[key] = _shard_wrap(b, local, in_specs, b.buffer_spec())(*leaves)
     return out
 
 
@@ -583,7 +755,7 @@ def grams_from_leafwise(table: Dict[str, ArenaBucket],
     out = {}
     for key, b in table.items():
         parts = [jnp.asarray(by_path[s.path], jnp.float32
-                             ).reshape(s.n_sys, b.m, b.m)
+                             ).reshape(s.n_sys * b.sys_factor, b.m, b.m)
                  for s in b.segments]
         out[key] = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
     return out

@@ -281,7 +281,8 @@ def plan_records(plans: PyTree) -> List[dict]:
     } for p in plan_entries(plans)]
 
 
-def plan_table(plans: PyTree, arena: Optional[dict] = None) -> str:
+def plan_table(plans: PyTree, arena: Optional[dict] = None,
+               native: bool = False) -> str:
     """Human-readable audit dump of the whole dispatch table (kernel route
     + schedule group / window / horizon / phase per selected leaf; the
     `energy` column is the group's controller-mode cumulative-energy rank
@@ -290,16 +291,22 @@ def plan_table(plans: PyTree, arena: Optional[dict] = None) -> str:
     With the accelerator's arena bucket table (core/arena.py) the `arena`
     and `off` columns show which packed bucket serves each leaf and the
     leaf's lane offset inside it ("-" = per-leaf route: dot_general oracle,
-    sharded stack axes, or arenas disabled)."""
+    or arenas disabled). `native` (cfg.dmd.arena_native, resolved by the
+    accelerator) fills the `resident` column: "y" for packed leaves whose
+    params live IN the bucket buffer during Trainer.fit (DESIGN.md §7),
+    "n" for packed-but-copied (the PR-5 pack route), "-" for per-leaf
+    leaves."""
     seg_of = {}
     for b in (arena or {}).values():
         for s in b.segments:
             seg_of[s.path] = (b.key, s.lane_start)
     rows = [("path", "route", "group", "m", "s", "phase", "energy", "stack",
-             "shape", "flat_n", "block_n", "arena", "off", "spec", "psum")]
+             "shape", "flat_n", "block_n", "arena", "off", "resident",
+             "spec", "psum")]
     for p in plan_entries(plans):
         sched = p.sched
         akey, aoff = seg_of.get(p.path, ("-", "-"))
+        res = "-" if akey == "-" else ("y" if native else "n")
         rows.append((p.path, p.route,
                      sched.name if sched is not None else str(p.group),
                      str(p.m if sched is not None else "?"),
@@ -309,8 +316,8 @@ def plan_table(plans: PyTree, arena: Optional[dict] = None) -> str:
                       if sched is not None and sched.energy > 0 else "-"),
                      str(p.stack_dims),
                      "x".join(map(str, p.shape)), str(p.flat_size),
-                     str(p.block_n), akey, str(aoff), str(p.param_spec),
-                     ",".join(p.psum_axes()) or "-"))
+                     str(p.block_n), akey, str(aoff), res,
+                     str(p.param_spec), ",".join(p.psum_axes()) or "-"))
     widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
     lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
              for r in rows]

@@ -86,7 +86,7 @@ def init_buffers(params: PyTree, cfg, plans: Optional[PyTree] = None,
     from plans built on the spot (standalone callers with flat pytrees).
     `skip_paths` (a set of normalized paths) excludes leaves served by a
     packed arena instead (core/arena.py) — those live in the bucket's
-    (m, N) ring buffer, not here. Abstract-aware: ShapeDtypeStruct params
+    block-major ring buffer, not here. Abstract-aware: ShapeDtypeStruct params
     produce ShapeDtypeStruct buffers (the dry-run path must never
     materialize m x params of zeros).
     """

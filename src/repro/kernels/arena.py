@@ -4,39 +4,57 @@ The per-leaf kernels (gram.py / gram_row.py / combine.py, plus their
 shard_map wrappers in sharded.py) pay one launch PER LEAF per pass — a
 transformer config with hundreds of DMD-managed leaves pays hundreds of tiny
 dispatches per recorded step. An arena (core/arena.py) packs every
-compatible leaf of a schedule group into ONE contiguous (m, N) buffer whose
-lane axis is split into per-system segments, each padded to a multiple of
-the bucket's ``block_n`` so no kernel block ever straddles two systems.
-The kernels here then walk the whole arena in a single launch:
+compatible leaf of a schedule group into ONE contiguous BLOCK-MAJOR
+``(n_blocks, m, block_n)`` snapshot buffer: the lane axis is split into
+``block_n``-lane blocks, each block carries all ``m`` snapshot rows of its
+lanes contiguously, and every per-system segment is padded to a block
+multiple so no block ever straddles two systems. The kernels here then walk
+the whole arena in a single launch:
 
-  * ``gram_row``  (m, N), (N,)        -> (n_sys, m)    streaming rows
-  * ``gram``      (m, N)              -> (n_sys, m, m) full recompute
-  * ``combine``   (m, N), (n_sys, m)  -> (N,)          the jump blend
+  * ``gram_row``  (nb, m, bn), (nb, bn)       -> (n_sys, m)    streaming rows
+  * ``gram``      (nb, m, bn)                 -> (n_sys, m, m) full recompute
+  * ``combine``   (nb, m, bn), (n_sys, m)     -> (N,)          the jump blend
 
-Segmentation is driven by a static ``block_sys`` table mapping each
-``block_n``-lane block to its system index (a "system" = one independent
-DMD trajectory: an unstacked leaf, or one stacked layer of a scan-stacked
-leaf). On TPU the table rides in scalar-prefetch memory
-(``PrefetchScalarGridSpec``) and indexes the OUTPUT BlockSpec: consecutive
-blocks of the same system revisit the same (1, m)/(1, m, m) output tile, so
-the per-system reduction accumulates in-place in VMEM with zero extra
-bandwidth — the classic ragged/segmented grid pattern. The CPU/GPU
-reference route computes per-block partials with one batched ``einsum`` and
-reduces them with one ``segment_sum`` — still a single fused XLA op chain,
-which is the whole point: O(buckets) dispatches instead of O(leaves).
+Block-major is the load-bearing layout choice, on every backend at once:
+
+  * CPU/GPU: the block axis is a LEADING batch dimension, so each pass is
+    one batched ``dot_general`` that XLA lowers straight to the gemm/gemv
+    library (batch dims must lead a batched contraction — with the old
+    snapshot-major ``(m, N)`` layout the same contraction forced either a
+    full-buffer transpose or a poorly-vectorized fused multiply-reduce,
+    measured ~2.5x slower for the streaming row pass on a deep MLP).
+  * TPU: the Pallas tile IS the storage tile — block ``i`` of the grid maps
+    to ``x[i]`` with no re-tiling, and the (m_pad, block_n) VMEM tile keeps
+    the lane axis on the 128-wide minor dimension.
+  * The every-step resident record writes one ``(nb, 1, bn)`` slab per
+    bucket (``dynamic_update_slice`` on the middle axis) — still a single
+    fused op per bucket.
+
+Segmentation is driven by a static ``block_sys`` table mapping each block
+to its system index (a "system" = one independent DMD trajectory: an
+unstacked leaf, or one stacked layer of a scan-stacked leaf). On TPU the
+table rides in scalar-prefetch memory (``PrefetchScalarGridSpec``) and
+indexes the OUTPUT BlockSpec: consecutive blocks of the same system revisit
+the same (1, m)/(1, m, m) output tile, so the per-system reduction
+accumulates in-place in VMEM with zero extra bandwidth — the classic
+ragged/segmented grid pattern. The CPU/GPU reference route computes
+per-block partials with one batched ``dot_general`` and reduces them with
+one ``segment_sum`` — still a single fused XLA op chain, which is the whole
+point: O(buckets) dispatches instead of O(leaves).
 
 Padding is exact everywhere for the same reason as the flat kernels: tail
 lanes of every segment are zero in the arena (core/arena.py packs them so),
 zero lanes contribute zero to every inner product, and the anchor row's
-padding is itself zero. The anchor subtraction stays fused: arena row 0 IS
-the concatenation of every system's anchor slice, because all systems in a
+padding is itself zero. The anchor subtraction stays fused: snapshot row 0
+of every block IS that block's anchor slice, because all systems in a
 bucket share one slot schedule (same group).
 
 Sharded buckets (every leaf sharded over the SAME mesh axes on contracted
 dims) reuse sharded.py's pattern: the same local kernels run per shard
-under ``shard_map`` on the locally-packed arena (the lane axis is sharded
-so each device holds its own segments), followed by one O(n_sys·m²)/O(n_sys·m)
-psum for the Gram passes; ``combine`` needs no collective at all.
+under ``shard_map`` on the locally-packed arena (the BLOCK axis is sharded
+— shard boundaries are always block boundaries because every shard's lane
+count is a block_n multiple), followed by one O(n_sys·m²)/O(n_sys·m) psum
+for the Gram passes; ``combine`` needs no collective at all.
 
 Backend dispatch matches kernels/ops.py: compiled Pallas on TPU, the
 reference route on CPU/GPU, explicit ``interpret=`` for the
@@ -61,91 +79,111 @@ def _m_pad(m: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Reference route (CPU/GPU oracle): one einsum + one segment_sum per pass
+# Reference route (CPU/GPU oracle): one batched dot_general + one
+# segment_sum per pass, block axis leading
 # ---------------------------------------------------------------------------
-
-def _blocked(x: jnp.ndarray, block_n: int) -> jnp.ndarray:
-    """(m, N) -> (m, nb, block_n) upcast to fp32."""
-    m, n = x.shape
-    return x.astype(jnp.float32).reshape(m, n // block_n, block_n)
-
 
 def gram_row_ref(x: jnp.ndarray, q: jnp.ndarray, block_sys, n_sys: int, *,
                  anchor_first: bool = False, block_n: int) -> jnp.ndarray:
-    """(m, N), (N,) -> (n_sys, m) of <d_q, d_j> per system.
+    """(nb, m, bn), (nb, bn) -> (n_sys, m) of <d_q, d_j> per system.
 
     Always contracts in fp32, exactly like the per-leaf kernel oracles
     (kernels/ref.py) and the per-tile upcast in the Pallas bodies — the
-    blocked form never materializes an HBM-sized fp32 copy, so there is
-    no reason to degrade bf16 storage further (cfg.gram_upcast only
-    shapes the dot_general fallback route, which arenas never take).
+    upcast fuses into the contraction, so there is no reason to degrade
+    bf16 storage further (cfg.gram_upcast only shapes the dot_general
+    fallback route, which arenas never take).
 
-    Per-block partials via a fused multiply-reduce rather than a batched
-    dot_general: XLA requires batch dims to LEAD a batched contraction, so
-    the einsum form transposes the whole (m, N) buffer (measured 2x record
-    wall on a deep MLP); the broadcast-multiply + lane-axis reduce fuses
-    into one read of the buffer with no transpose."""
-    xf = x.astype(jnp.float32)
-    qf = q.astype(jnp.float32)
+    Anchoring uses the partials identity instead of materializing the
+    anchored buffer: with qa = q - x0,
+
+        <qa, x_j - x_0> = <qa, x_j> - <qa, x_0>
+
+    so only q is anchored (one (nb, bn) subtract), the batched dot runs on
+    the RAW buffer — one streaming read, no (nb, m, bn)-sized anchored
+    temporary — and column 0 of the raw partials is subtracted afterwards.
+    The identity is algebraic, so it is exact on the dyadic trajectories
+    the route-equality pins use; under fp rounding it differs from
+    explicit anchoring only by summation-order effects, inside the
+    kernel-contract tolerances (the Pallas tile body anchors explicitly in
+    VMEM, where the subtract costs no bandwidth)."""
+    del block_n                         # implied by the block-major shape
+    xf = x.astype(jnp.float32)          # (nb, m, bn)
+    qf = q.astype(jnp.float32)          # (nb, bn)
     if anchor_first:
-        qf = qf - xf[0]
-        xf = xf - xf[:1]
-    m, n = xf.shape
-    xb = xf.reshape(m, n // block_n, block_n)
-    qb = qf.reshape(n // block_n, block_n)
-    part = jnp.sum(xb * qb[None], axis=-1)                    # (m, nb)
-    return jax.ops.segment_sum(part.T, jnp.asarray(block_sys),
+        qf = qf - xf[:, 0, :]
+    part = jax.lax.dot_general(
+        xf, qf, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                   # (nb, m)
+    if anchor_first:
+        part = part - part[:, 0:1]
+    return jax.ops.segment_sum(part, jnp.asarray(block_sys),
                                num_segments=n_sys, indices_are_sorted=True)
 
 
 def gram_ref(x: jnp.ndarray, block_sys, n_sys: int, *,
-             anchor_first: bool = False, block_n: int) -> jnp.ndarray:
-    """(m, N) -> (n_sys, m, m) full Grams, one per system (fp32
-    contraction regardless of storage dtype — see gram_row_ref)."""
-    xf = x.astype(jnp.float32)
+             anchor_first: bool = False, anchor_mean: bool = False,
+             block_n: int) -> jnp.ndarray:
+    """(nb, m, bn) -> (n_sys, m, m) full Grams, one per system (fp32
+    contraction regardless of storage dtype — see gram_row_ref).
+
+    ``anchor_mean`` subtracts the per-lane snapshot mean before the
+    contraction (dmd.gram_matrix's mean path, fp32 like its upcast
+    route). Pad lanes are zero, their mean is zero, so padding stays
+    exact. Mutually exclusive with ``anchor_first``; mean buckets have
+    no streaming row pass (dmd.gram_row_matrix rejects mean), so only
+    this full-recompute kernel carries the flag. The once-per-rebuild
+    pass anchors explicitly (an (nb, m, bn) fused subtract) — the m×m
+    partials of the part-anchor identity don't pay for themselves here."""
+    if anchor_first and anchor_mean:
+        raise ValueError("anchor_first and anchor_mean are exclusive")
+    del block_n
+    xf = x.astype(jnp.float32)          # (nb, m, bn)
     if anchor_first:
-        xf = xf - xf[:1]
-    m, n = xf.shape
-    xb = xf.reshape(m, n // block_n, block_n)
-    part = jnp.einsum("mnb,knb->nmk", xb, xb,
-                      preferred_element_type=jnp.float32)     # (nb, m, m)
+        xf = xf - xf[:, 0:1, :]
+    if anchor_mean:
+        xf = xf - jnp.mean(xf, axis=1, keepdims=True)
+    part = jax.lax.dot_general(
+        xf, xf, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                   # (nb, m, m)
     return jax.ops.segment_sum(part, jnp.asarray(block_sys),
                                num_segments=n_sys, indices_are_sorted=True)
 
 
 def combine_ref(x: jnp.ndarray, c: jnp.ndarray, block_sys, *,
                 block_n: int) -> jnp.ndarray:
-    """(m, N), (n_sys, m) -> (N,) = S^T c_sys per lane's own system.
+    """(nb, m, bn), (n_sys, m) -> (N,) = S^T c_sys per lane's own system.
 
     Always fp32, like the per-leaf ref.combine_ref — downcasting the
     coefficients to bf16 storage dtype would silently break the
     arena-vs-per-leaf oracle contract on gram_upcast=False configs
     (the per-leaf kernel route never does).
 
-    Deliberately a batched dot_general (NOT the multiply-reduce trick
-    gram_row_ref uses): contracting the snapshot axis through a dot keeps
-    the same m-reduction order as the per-leaf tensordot, so the two
-    routes stay BIT-identical whenever the coefficient solves agree
-    (pinned by the integer-trajectory test). The transpose this forces is
-    paid once per window — the combine is the jump's pass, not the
-    every-step pass."""
-    xb = _blocked(x, block_n)
+    A batched dot_general contracting the snapshot axis: same m-reduction
+    order as the per-leaf tensordot, so the two routes stay BIT-identical
+    whenever the coefficient solves agree (pinned by the
+    integer-trajectory test). Block-major makes this a batch-leading
+    gemv — no transpose at all, where the old (m, N) layout paid one per
+    jump."""
+    del block_n
+    xf = x.astype(jnp.float32)                                # (nb, m, bn)
     cb = c.astype(jnp.float32)[jnp.asarray(block_sys)]        # (nb, m)
-    out = jnp.einsum("nm,mnb->nb", cb, xb,
-                     preferred_element_type=jnp.float32)
+    out = jax.lax.dot_general(
+        cb[:, None, :], xf, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                   # (nb, 1, bn)
     return out.reshape(-1)
 
 
 # ---------------------------------------------------------------------------
-# Pallas TPU kernels: one launch per arena, output tile indexed by the
-# prefetched block->system table, in-place accumulation across revisits
+# Pallas TPU kernels: one launch per arena, the grid tile IS the storage
+# tile x[i], output tile indexed by the prefetched block->system table,
+# in-place accumulation across revisits
 # ---------------------------------------------------------------------------
 
 def _row_kernel(seg_ref, x_ref, q_ref, out_ref, *, anchor_first: bool):
     i = pl.program_id(0)
     first = jnp.logical_or(i == 0,
                            seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
-    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    x = x_ref[0].astype(jnp.float32)              # (m_pad, block_n)
     q = q_ref[...].astype(jnp.float32)            # (1, block_n)
     if anchor_first:
         q = q - x[0:1, :]
@@ -168,33 +206,39 @@ def _row_kernel(seg_ref, x_ref, q_ref, out_ref, *, anchor_first: bool):
 def gram_row_pallas(x: jnp.ndarray, q: jnp.ndarray, block_sys, n_sys: int, *,
                     anchor_first: bool = False, block_n: int,
                     interpret: bool = True) -> jnp.ndarray:
-    m, n = x.shape
+    nb, m, _ = x.shape
     mp = _m_pad(m)
     if mp != m:
-        x = jnp.pad(x, ((0, mp - m), (0, 0)))
-    grid = (n // block_n,)
+        x = jnp.pad(x, ((0, 0), (0, mp - m), (0, 0)))
+    grid = (nb,)
     out = pl.pallas_call(
         functools.partial(_row_kernel, anchor_first=anchor_first),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[pl.BlockSpec((mp, block_n), lambda i, s: (0, i)),
-                      pl.BlockSpec((1, block_n), lambda i, s: (0, i))],
+            in_specs=[pl.BlockSpec((1, mp, block_n), lambda i, s: (i, 0, 0)),
+                      pl.BlockSpec((1, block_n), lambda i, s: (i, 0))],
             out_specs=pl.BlockSpec((1, mp), lambda i, s: (s[i], 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((n_sys, mp), jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(block_sys, jnp.int32), x, q.reshape(1, n))
+    )(jnp.asarray(block_sys, jnp.int32), x, q)
     return out[:, :m]
 
 
-def _gram_kernel(seg_ref, x_ref, out_ref, *, anchor_first: bool):
+def _gram_kernel(seg_ref, x_ref, out_ref, *, anchor_first: bool,
+                 m_real: int):
     i = pl.program_id(0)
     first = jnp.logical_or(i == 0,
                            seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
-    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    x = x_ref[0].astype(jnp.float32)              # (m_pad, block_n)
     if anchor_first:
         x = x - x[0:1, :]
+    if m_real > 0:
+        # mean anchoring: pad rows are zero so sum/m_real is the exact
+        # per-lane mean; subtracting it contaminates only the pad rows,
+        # whose Gram entries land at indices >= m and are sliced away.
+        x = x - jnp.sum(x, axis=0, keepdims=True) / m_real
     part = jax.lax.dot_general(
         x, x, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)[None]  # (1, m_pad, m_pad)
@@ -209,21 +253,26 @@ def _gram_kernel(seg_ref, x_ref, out_ref, *, anchor_first: bool):
 
 
 @functools.partial(jax.jit, static_argnames=("n_sys", "anchor_first",
-                                             "block_n", "interpret"))
+                                             "anchor_mean", "block_n",
+                                             "interpret"))
 def gram_pallas(x: jnp.ndarray, block_sys, n_sys: int, *,
-                anchor_first: bool = False, block_n: int,
-                interpret: bool = True) -> jnp.ndarray:
-    m, n = x.shape
+                anchor_first: bool = False, anchor_mean: bool = False,
+                block_n: int, interpret: bool = True) -> jnp.ndarray:
+    if anchor_first and anchor_mean:
+        raise ValueError("anchor_first and anchor_mean are exclusive")
+    nb, m, _ = x.shape
     mp = _m_pad(m)
     if mp != m:
-        x = jnp.pad(x, ((0, mp - m), (0, 0)))
-    grid = (n // block_n,)
+        x = jnp.pad(x, ((0, 0), (0, mp - m), (0, 0)))
+    grid = (nb,)
     out = pl.pallas_call(
-        functools.partial(_gram_kernel, anchor_first=anchor_first),
+        functools.partial(_gram_kernel, anchor_first=anchor_first,
+                          m_real=m if anchor_mean else 0),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[pl.BlockSpec((mp, block_n), lambda i, s: (0, i))],
+            in_specs=[pl.BlockSpec((1, mp, block_n),
+                                   lambda i, s: (i, 0, 0))],
             out_specs=pl.BlockSpec((1, mp, mp), lambda i, s: (s[i], 0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((n_sys, mp, mp), jnp.float32),
@@ -234,7 +283,7 @@ def gram_pallas(x: jnp.ndarray, block_sys, n_sys: int, *,
 
 def _combine_kernel(seg_ref, c_ref, x_ref, out_ref):
     del seg_ref                                   # consumed by the index maps
-    x = x_ref[...].astype(jnp.float32)            # (m_pad, block_n)
+    x = x_ref[0].astype(jnp.float32)              # (m_pad, block_n)
     c = c_ref[...].astype(jnp.float32)            # (1, m_pad)
     out_ref[...] = jax.lax.dot_general(
         c, x, (((1,), (0,)), ((), ())),
@@ -244,19 +293,21 @@ def _combine_kernel(seg_ref, c_ref, x_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def combine_pallas(x: jnp.ndarray, c: jnp.ndarray, block_sys, *,
                    block_n: int, interpret: bool = True) -> jnp.ndarray:
-    m, n = x.shape
+    nb, m, _ = x.shape
+    n = nb * block_n
     mp = _m_pad(m)
     if mp != m:
-        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, mp - m), (0, 0)))
         c = jnp.pad(c.astype(jnp.float32), ((0, 0), (0, mp - m)))
-    grid = (n // block_n,)
+    grid = (nb,)
     out = pl.pallas_call(
         _combine_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[pl.BlockSpec((1, mp), lambda i, s: (s[i], 0)),
-                      pl.BlockSpec((mp, block_n), lambda i, s: (0, i))],
+                      pl.BlockSpec((1, mp, block_n),
+                                   lambda i, s: (i, 0, 0))],
             out_specs=pl.BlockSpec((1, block_n), lambda i, s: (0, i)),
         ),
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
@@ -278,12 +329,14 @@ def _local_gram_row(x, q, block_sys, n_sys, anchor_first, block_n,
                            block_n=block_n, interpret=ops._interp(interpret))
 
 
-def _local_gram(x, block_sys, n_sys, anchor_first, block_n, interpret):
+def _local_gram(x, block_sys, n_sys, anchor_first, anchor_mean, block_n,
+                interpret):
     if ops._route(interpret) == "ref":
         return gram_ref(x, block_sys, n_sys, anchor_first=anchor_first,
-                        block_n=block_n)
+                        anchor_mean=anchor_mean, block_n=block_n)
     return gram_pallas(x, block_sys, n_sys, anchor_first=anchor_first,
-                       block_n=block_n, interpret=ops._interp(interpret))
+                       anchor_mean=anchor_mean, block_n=block_n,
+                       interpret=ops._interp(interpret))
 
 
 def _local_combine(x, c, block_sys, block_n, interpret):
@@ -307,57 +360,87 @@ def shard_wrap(mesh, lane_axes: Tuple[str, ...], fn, in_specs, out_specs):
 
 
 def lane_spec(lane_axes: Tuple[str, ...]) -> P:
-    """PartitionSpec of an arena's 1-D lane axis (shared with
-    core/arena.py's ArenaBucket.lane_spec)."""
+    """PartitionSpec of an arena's FLAT 1-D lane axis — the leaf-wise
+    pack/unpack rows and the combine output (shared with core/arena.py's
+    ArenaBucket.lane_spec). Block-major SNAPSHOT buffers shard the same
+    mesh axes over their leading block axis instead: see buf_spec."""
     return P(lane_axes if len(lane_axes) > 1 else
              (lane_axes[0] if lane_axes else None))
+
+
+def _axis_entry(axes: Tuple[str, ...]):
+    """One PartitionSpec entry for a (possibly multi-axis) mesh axis set."""
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def buf_spec(axes: Tuple[str, ...]) -> P:
+    """PartitionSpec of a block-major (n_blocks, m, block_n) snapshot
+    buffer: the mesh axes that sharded the old flat lane axis shard the
+    leading BLOCK axis (every shard's lane count is a block_n multiple,
+    so shard boundaries are always block boundaries and the global
+    (N,) -> (nb, bn) reshape splits the sharded dim divisibly)."""
+    return P(_axis_entry(axes), None, None)
 
 
 def gram_row(buf: jnp.ndarray, q: jnp.ndarray, block_sys, n_sys: int, *,
              anchor_first: bool = False, block_n: int,
              mesh=None, lane_axes: Tuple[str, ...] = (),
+             sys_axes: Tuple[str, ...] = (),
              interpret=None) -> jnp.ndarray:
     """One streaming Gram row per system, ONE launch for the whole arena.
-    ``block_sys`` is the (shard-local) block->system table. Sharded buckets
-    (``lane_axes`` non-empty) run per shard + one O(n_sys·m) psum."""
+    ``buf`` is block-major (nb, m, bn) and ``q`` its blocked query row
+    (nb, bn). ``block_sys`` is the (shard-local) block->system table and
+    ``n_sys`` the shard-LOCAL system count. Lane-sharded buckets
+    (``lane_axes``) run per shard + one O(n_sys·m) psum; system-sharded
+    buckets (``sys_axes`` — a scan-stacked leaf whose stacked dim is
+    sharded) need NO collective: each shard owns whole systems, and the
+    output stays sharded over its system axis."""
+    axes = sys_axes + lane_axes
 
     def local(x, qq):
         r = _local_gram_row(x, qq, block_sys, n_sys, anchor_first, block_n,
                             interpret)
         return jax.lax.psum(r, lane_axes) if lane_axes else r
 
-    ls = lane_spec(lane_axes)
-    return shard_wrap(mesh, lane_axes, local,
-                 (P(None, *tuple(ls)), ls), P(None, None))(buf, q)
+    return shard_wrap(mesh, axes, local,
+                 (buf_spec(axes), P(_axis_entry(axes), None)),
+                 P(_axis_entry(sys_axes), None))(buf, q)
 
 
 def gram(buf: jnp.ndarray, block_sys, n_sys: int, *,
-         anchor_first: bool = False, block_n: int,
-         mesh=None, lane_axes: Tuple[str, ...] = (),
+         anchor_first: bool = False, anchor_mean: bool = False,
+         block_n: int, mesh=None, lane_axes: Tuple[str, ...] = (),
+         sys_axes: Tuple[str, ...] = (),
          interpret=None) -> jnp.ndarray:
     """Full (n_sys, m, m) Gram recompute, ONE launch + one O(n_sys·m²) psum
-    (the non-streaming A/B path and the restore-staleness rebuild)."""
+    over the lane axes (the non-streaming A/B path and the
+    restore-staleness rebuild). System-sharded outputs stay sharded."""
+    axes = sys_axes + lane_axes
 
     def local(x):
-        g = _local_gram(x, block_sys, n_sys, anchor_first, block_n,
-                        interpret)
+        g = _local_gram(x, block_sys, n_sys, anchor_first, anchor_mean,
+                        block_n, interpret)
         return jax.lax.psum(g, lane_axes) if lane_axes else g
 
-    ls = lane_spec(lane_axes)
-    return shard_wrap(mesh, lane_axes, local,
-                 (P(None, *tuple(ls)),), P(None, None, None))(buf)
+    return shard_wrap(mesh, axes, local,
+                 (buf_spec(axes),),
+                 P(_axis_entry(sys_axes), None, None))(buf)
 
 
 def combine(buf: jnp.ndarray, c: jnp.ndarray, block_sys, *,
             block_n: int, mesh=None,
-            lane_axes: Tuple[str, ...] = (), interpret=None) -> jnp.ndarray:
+            lane_axes: Tuple[str, ...] = (),
+            sys_axes: Tuple[str, ...] = (), interpret=None) -> jnp.ndarray:
     """(N,) fp32 jump blend, ONE launch, zero collectives: c is replicated
-    and every lane contracts only its own system's replicated snapshot
-    axis, so the output inherits the arena's lane sharding."""
+    over the lane axes (sharded over the system axes, matching the Gram
+    stack) and every block contracts only its own system's replicated
+    snapshot axis, so the flat output inherits the arena's lane sharding."""
+    axes = sys_axes + lane_axes
 
     def local(x, cc):
         return _local_combine(x, cc, block_sys, block_n, interpret)
 
-    ls = lane_spec(lane_axes)
-    return shard_wrap(mesh, lane_axes, local,
-                 (P(None, *tuple(ls)), P(None, None)), ls)(buf, c)
+    ls = lane_spec(axes)
+    return shard_wrap(mesh, axes, local,
+                 (buf_spec(axes), P(_axis_entry(sys_axes), None)),
+                 ls)(buf, c)

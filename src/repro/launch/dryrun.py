@@ -78,7 +78,7 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
         state = TrainState(params, opt_state,
                            jax.ShapeDtypeStruct((), jnp.int32), bufs, grams,
                            ctrl)
-        # arena=: bucket-table specs for the packed (m, N) ring buffers
+        # arena=: bucket-table specs for the packed block-major ring buffers
         # (abstract like everything else here — DESIGN.md §7)
         st_specs = inputs_mod.state_specs(state, mesh,
                                           plans=acc.plans_for(params),

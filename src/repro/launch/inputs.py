@@ -129,12 +129,20 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
     special casing: the snapshot axis is replicated whatever its length.
 
     Arena states (DESIGN.md §7) carry per-bucket leaves under
-    ``/dmd_buffers/__arena__/<key>`` — their (m, N) ring buffers are
-    sharded on the lane axis by the bucket's lane_axes (replicated for
-    unsharded buckets), the (n_sys, m, m) Gram stacks are replicated (the
-    psum'd reduction), and the per-leaf remainder lives under ``/leaf``
-    with the plan-derived specs. `arena` is the accelerator's bucket table
-    (``acc.arena_for(params)``).
+    ``/dmd_buffers/__arena__/<key>`` — their block-major
+    (n_blocks, m, block_n) ring buffers shard the lane axes over the
+    leading BLOCK dim by the bucket's buffer_spec (replicated for
+    unsharded buckets), the (n_sys, m, m) Gram stacks follow the bucket's
+    gram_spec (replicated, except system-sharded buckets which stay
+    sharded over their sys_axes), and the per-leaf remainder lives under
+    ``/leaf`` with the plan-derived specs. `arena` is the accelerator's
+    bucket table (``acc.arena_for(params)``).
+
+    Arena-RESIDENT params/moments (dmd.arena_native) add the same wrapper
+    under ``/params`` and the opt_state's moment fields: the flat ``(N,)``
+    buckets take the 1-D lane_spec, the ``/leaf`` remainder keeps the
+    per-leaf param rules (with the wrapper's path segment stripped so the
+    rules still match).
     """
     from repro.core.arena import ARENA_KEY, is_arena_state
     from repro.core.leafplan import plan_entries
@@ -147,27 +155,28 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
     # per-leaf state whose PARAM pytree happens to contain a key literally
     # named "leaf" must NOT have that path segment stripped.
     arena_layout = is_arena_state(getattr(state_tree, "dmd_buffers", None))
+    param_resident = is_arena_state(getattr(state_tree, "params", None))
 
-    def _bucket_spec(sub: str, grams: bool) -> Optional[P]:
-        """Spec for an ``/__arena__/<key>`` leaf, None for non-arena paths."""
-        if not arena_layout or not sub.startswith(f"/{ARENA_KEY}/"):
-            return None
-        if grams:
-            return P()                    # (n_sys, m, m): psum'd, replicated
-        key = sub[len(ARENA_KEY) + 2:]
+    def _bucket_of(key: str):
         if key not in arena:
             # Failing loudly beats a silent replication cliff: marking a
-            # lane-sharded (m, N) ring buffer replicated would device_put
-            # the full multi-GiB arena onto EVERY device with no error.
+            # lane-sharded ring buffer replicated would device_put the
+            # full multi-GiB arena onto EVERY device with no error.
             raise ValueError(
                 f"arena-layout state has bucket {key!r} but no matching "
                 "entry in the bucket table — pass arena="
                 "acc.arena_for(params) to state_specs (and rebuild it "
                 "after any plan-table change)")
-        b = arena[key]
-        if not b.lane_axes:
-            return P(None, None)          # unsharded bucket: replicated
-        return P(None, *tuple(b.lane_spec()))
+        return arena[key]
+
+    def _bucket_spec(sub: str, grams: bool) -> Optional[P]:
+        """Spec for an ``/__arena__/<key>`` leaf, None for non-arena paths."""
+        if not arena_layout or not sub.startswith(f"/{ARENA_KEY}/"):
+            return None
+        b = _bucket_of(sub[len(ARENA_KEY) + 2:])
+        if grams:
+            return b.gram_spec()          # replicated unless sys-sharded
+        return b.buffer_spec()            # block-major snapshot buffer
 
     def _strip_leaf(sub: str) -> str:
         if arena_layout and sub.startswith("/leaf/"):
@@ -208,6 +217,12 @@ def state_specs(state_tree: PyTree, mesh: Mesh,
                 rule = rule[:-1] if "/vr/" in p else rule[:-2] + rule[-1:]
             return resolve_rule(rule, nd, leaf.shape, mesh)
         if p.startswith("/params") or p.startswith("/opt_state"):
+            if param_resident:
+                if f"/{ARENA_KEY}/" in p:
+                    # resident flat (N,) bucket: the 1-D lane spec
+                    b = _bucket_of(p.split(f"/{ARENA_KEY}/", 1)[1])
+                    return b.lane_spec()
+                p = p.replace("/leaf/", "/", 1)   # wrapper's leaf subtree
             return _param_spec_of(p, leaf, mesh)
         return P()
     return jax.tree_util.tree_map_with_path(one, state_tree)

@@ -102,6 +102,12 @@ def adam(lr_fn, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
         bc2 = 1.0 - b2 ** t
 
         def upd(m, v, g, p):
+            if m is None:
+                # arena-resident params (core/arena.py): packed positions
+                # of the leaf subtree are None nodes — but the is_leaf
+                # below makes them leaves of the driving tree, so skip
+                # them here (their moments live in the __arena__ buffers).
+                return None
             g = g.astype(jnp.float32)
             m = b1 * m + (1 - b1) * g
             v = b2 * v + (1 - b2) * g * g

@@ -31,7 +31,8 @@ from repro.core.accelerator import DMDAccelerator
 from repro.core import snapshots as snap
 from repro.optim import make_optimizer
 from repro.train.state import TrainState
-from repro.train.step import make_dmd_step, make_train_step
+from repro.train.step import (make_dmd_step, make_train_step,
+                              state_resident, state_unresident)
 
 PyTree = Any
 
@@ -160,6 +161,12 @@ class Trainer:
             state = resumed
         elif state is None:
             state = self.init_state()
+        # Arena-native residency (DESIGN.md §7, train/step.py): for the
+        # duration of the loop the packed leaves' params and elementwise
+        # optimizer moments live in the bucket buffers; expanded back
+        # before returning, so callers (and checkpoints, via
+        # state_leafwise in save) never see the wrapper layout.
+        state = state_resident(self.acc, self.acfg, state)
         start_step = int(state.step)
         ckpt_every = self.acfg.train.checkpoint_every
 
@@ -199,4 +206,4 @@ class Trainer:
                 self.save(state, step + 1)
                 print(f"preempted: checkpoint saved at step {step + 1}")
                 break
-        return state
+        return state_unresident(self.acc, state)

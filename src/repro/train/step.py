@@ -26,6 +26,22 @@ cfg.streaming_gram=False A/B baseline) it recomputes the full O(m^2*n)
 Gram. Both steps share the same accelerator instance (hence the same plan
 table) — pass `acc=` to avoid rebuilding it.
 
+Arena-native residency (dmd.arena_native, DESIGN.md §7): ``Trainer.fit``
+converts the TrainState at entry via ``state_resident`` — packed leaves'
+params and elementwise optimizer moments move INTO their bucket's
+contiguous flat buffer (the ``{"__arena__": ..., "leaf": ...}`` wrapper,
+core/arena.py) — and back via ``state_unresident`` before returning. The
+step fns here are layout-driven: when the params are resident, the
+model's forward sees zero-copy per-leaf VIEWS (static slice + reshape of
+the flat buffer, expanded in-trace by ``arena.tree_leafwise``), the
+optimizer update runs directly on the flat buffers (grads of loss∘views
+transpose to pad-extended slices — pad lanes stay zero), and `record`
+degenerates to one dynamic_update_slice per bucket. Residency only
+engages for optimizers whose moment updates are elementwise
+(``RESIDENT_OPTIMIZERS``): adafactor factors trailing dims and adam8bit
+quantizes fixed 256-blocks, both of which read shape structure a flat
+buffer destroys.
+
 Donation contract (audited: tests/test_donation.py inspects the compiled
 HLO's input_output_alias table): under the Trainer's
 ``jax.jit(..., donate_argnums=(0,))`` every snapshot buffer and Gram leaf
@@ -67,6 +83,70 @@ def resolve_grad_accum(acfg, mesh, global_batch: int) -> int:
     return max(min(ga, global_batch // shards), 1)
 
 
+# Optimizers whose update is elementwise over each moment entry — the only
+# ones whose moments can live in a flat arena buffer without changing the
+# math. adafactor (factored trailing dims) and adam8bit (256-block absmax
+# quantization) both read shape structure that flattening destroys.
+RESIDENT_OPTIMIZERS = ("sgd", "momentum", "adam", "adamw")
+
+
+def resident_enabled(acc: DMDAccelerator, acfg) -> bool:
+    """Arena-native parameter residency gate (DESIGN.md §7): arenas on,
+    cfg.dmd.arena_native on, and an elementwise-moment optimizer."""
+    return (acc.arena_on
+            and bool(getattr(acc.cfg, "arena_native", True))
+            and acfg.optimizer.name in RESIDENT_OPTIMIZERS)
+
+
+def state_resident(acc: DMDAccelerator, acfg, state):
+    """Leafwise TrainState -> the arena-resident layout (params and
+    params-shaped optimizer-moment fields packed into the bucket buffers).
+    No-op when residency is gated off, nothing is packed, or the state is
+    already resident. Off the hot path — Trainer.fit entry only."""
+    if state is None or not resident_enabled(acc, acfg) \
+            or arena_mod.is_arena_state(state.params):
+        return state
+    table = acc.arena_for(state.params)
+    if not table:
+        return state
+    pdef = jax.tree_util.tree_structure(state.params)
+
+    def to_res(field):
+        # params-shaped moment trees pack; anything else (scalar counters,
+        # empty states) passes through untouched
+        if jax.tree_util.tree_structure(field) == pdef:
+            return arena_mod.tree_resident(table, field)
+        return field
+
+    opt_state = state.opt_state
+    if jax.tree_util.tree_structure(opt_state) == pdef:
+        opt_state = arena_mod.tree_resident(table, opt_state)   # momentum
+    elif isinstance(opt_state, tuple) and opt_state:            # NamedTuple
+        opt_state = type(opt_state)(*(to_res(f) for f in opt_state))
+    return state._replace(
+        params=arena_mod.tree_resident(table, state.params),
+        opt_state=opt_state)
+
+
+def state_unresident(acc: DMDAccelerator, state):
+    """Inverse of state_resident: expand resident params / moments back to
+    the per-leaf layout. DMD buffers and Grams keep their packed arena
+    layout (they are packed whenever arenas are on, residency or not);
+    use acc.state_leafwise for the full checkpoint expansion."""
+    if state is None or not arena_mod.is_arena_state(state.params):
+        return state
+    table = acc.arena_for(state.params)
+
+    def unwrap(x):
+        return (arena_mod.tree_leafwise(table, x)
+                if arena_mod.is_arena_state(x) else x)
+
+    return state._replace(
+        params=arena_mod.tree_leafwise(table, state.params),
+        opt_state=jax.tree_util.tree_map(
+            unwrap, state.opt_state, is_leaf=arena_mod.is_arena_state))
+
+
 def _accelerator_for(model, acfg, mesh, acc: Optional[DMDAccelerator]
                      ) -> DMDAccelerator:
     """Shared accelerator (and hence LeafPlan table) for the step builders:
@@ -98,8 +178,17 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
 
     def train_step(state: TrainState, batch: PyTree, step) -> tuple:
         params = state.params
+        # Arena-RESIDENT params (dmd.arena_native): the model's forward
+        # sees zero-copy per-leaf views of the flat bucket buffers —
+        # static slice + reshape, expanded in-trace. Grads of loss∘views
+        # transpose to pad-extended slices of the flat cotangent, so the
+        # optimizer update below runs directly on the flat buffers.
+        resident = arena_mod.is_arena_state(params)
+        table = acc.arena_for(params) if resident else None
 
         def one_loss(p, mb):
+            if resident:
+                p = arena_mod.tree_leafwise(table, p)
             return _loss(p, mb)
 
         if ga > 1:
@@ -141,6 +230,11 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
             plans = acc.plans_for(params)       # trace-time, cached
             table = acc.arena_for(params)       # {} when arenas are off
             slots = sched_mod.slots_for_step(acc.groups, step)
+            # per-leaf snapshot/Gram calls only see the non-packed leaves;
+            # with resident params that is the wrapper's leaf subtree
+            # (None at every packed path — compile-time pass-throughs)
+            p_leaf = (arena_mod.split_state(params)[1] if resident
+                      else params)
 
             # One cond per schedule group: group gi's leaves are written
             # only while gi records (its slot >= 0); other groups' leaves
@@ -157,7 +251,7 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
                         arenas, leaf = arena_mod.split_state(bufs)
                         arenas = arena_mod.record(arenas, params, slot,
                                                   table, acfg.dmd, group=gi)
-                        leaf = snap.record(leaf, params, slot, plans,
+                        leaf = snap.record(leaf, p_leaf, slot, plans,
                                            group=gi)
                         bufs = arena_mod.make_state(arenas, leaf)
                         if streaming:
@@ -166,7 +260,7 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
                                 arena_mod.update_grams(ag, arenas, slot,
                                                        acfg.dmd, table,
                                                        group=gi),
-                                snap.update_grams(lg, leaf, params, slot,
+                                snap.update_grams(lg, leaf, p_leaf, slot,
                                                   acfg.dmd, plans, group=gi))
                         return bufs, g
                     bufs = snap.record(bufs, params, slot, plans, group=gi)
@@ -187,7 +281,7 @@ def make_train_step(model, acfg, *, mesh=None, global_batch=None,
 
 
 def reset_opt_state_after_jump(opt, opt_state, params, plans, groups,
-                               n_groups):
+                               n_groups, arena=None):
     """Post-jump optimizer-moment reset.
 
     `groups` is the set of group indices whose moments should reset
@@ -200,6 +294,15 @@ def reset_opt_state_after_jump(opt, opt_state, params, plans, groups,
     other groups are accumulating mid-window. Fields that do not mirror
     the param pytree (scalar counters, empty states) are kept as-is in the
     masked case.
+
+    With arena-RESIDENT moments the masking unit is the BUCKET, not the
+    leaf: a bucket's key embeds its schedule group (core/arena.py), so
+    every segment of ``arena[key]`` belongs to the same group and a
+    whole-buffer swap for ``group in gset`` buckets is exactly the
+    group-masked reset — a leaf-granularity mask over the flat buffer
+    would either clobber other groups' segments or miss its own. `arena`
+    (the accelerator's bucket table) is required when the state is
+    resident; callers pass ``arena=acc.arena_for(params)``.
     """
     if groups is None or len(frozenset(groups)) >= n_groups:
         return opt.init(params)
@@ -207,15 +310,29 @@ def reset_opt_state_after_jump(opt, opt_state, params, plans, groups,
     pdef = jax.tree_util.tree_structure(params)
     gset = frozenset(int(g) for g in groups)
 
-    def merge(old_field, new_field):
-        if jax.tree_util.tree_structure(old_field) != pdef:
-            return old_field
+    def merge_leaf(old_field, new_field):
         return jax.tree_util.tree_map(
             lambda plan, o, n: n if (plan is not None and plan.group in gset)
             else o,
             plans, old_field, new_field, is_leaf=leafplan.is_plan_leaf)
 
-    if jax.tree_util.tree_structure(opt_state) == pdef:
+    def merge(old_field, new_field):
+        if arena_mod.is_arena_state(old_field):
+            if arena is None:
+                raise ValueError(
+                    "resident optimizer state but no bucket table — pass "
+                    "arena=acc.arena_for(params)")
+            ares_o, leaf_o = arena_mod.split_state(old_field)
+            ares_n, leaf_n = arena_mod.split_state(new_field)
+            ares = {k: (ares_n[k] if arena[k].group in gset else v)
+                    for k, v in ares_o.items()}
+            return arena_mod.make_state(ares, merge_leaf(leaf_o, leaf_n))
+        if jax.tree_util.tree_structure(old_field) != pdef:
+            return old_field
+        return merge_leaf(old_field, new_field)
+
+    if arena_mod.is_arena_state(opt_state) \
+            or jax.tree_util.tree_structure(opt_state) == pdef:
         return merge(opt_state, fresh)            # momentum-style state
     if isinstance(opt_state, tuple):              # NamedTuple of field trees
         return type(opt_state)(*(merge(o, n)
@@ -309,7 +426,8 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
             reset = acc.reset_groups(groups)
             if reset:
                 opt_state = reset_opt_state_after_jump(
-                    opt, state.opt_state, params, plans, reset, acc.n_groups)
+                    opt, state.opt_state, params, plans, reset, acc.n_groups,
+                    arena=acc.arena_for(params))
             new_state = TrainState(params, opt_state, state.step,
                                    state.dmd_buffers, state.dmd_gram,
                                    state.controller)
@@ -341,6 +459,15 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
         ctrl = state.controller
         jumped = tuple(range(acc.n_groups)) if groups is None \
             else tuple(groups)
+        # resident params: the gate forwards see per-leaf views, same
+        # in-trace expansion as the fused train step's one_loss
+        resident = arena_mod.is_arena_state(state.params)
+        table = acc.arena_for(state.params) if resident else None
+
+        def eval_loss(p):
+            if resident:
+                p = arena_mod.tree_leafwise(table, p)
+            return _loss(p, eval_batch)
 
         # Candidate jump at the adapted horizon, relax tempered by the
         # per-group effective scale. `relax` may be scalar or (n_groups,);
@@ -354,8 +481,8 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
                                       groups=groups, s_vec=s_vec,
                                       arena=acc.arena_for(state.params))
 
-        loss_pre = _loss(state.params, eval_batch)
-        loss_post = _loss(p_jump, eval_batch)
+        loss_pre = eval_loss(state.params)
+        loss_post = eval_loss(p_jump)
 
         reset = acc.reset_groups(groups)
 
@@ -363,7 +490,8 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
             if not reset:
                 return state.opt_state
             return reset_opt_state_after_jump(
-                opt, state.opt_state, params, plans, reset, acc.n_groups)
+                opt, state.opt_state, params, plans, reset, acc.n_groups,
+                arena=acc.arena_for(params))
 
         def accept_full(_):
             return p_jump, reset_moments(p_jump), \
@@ -378,7 +506,7 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
                 lambda a, b: (0.5 * a.astype(jnp.float32)
                               + 0.5 * b.astype(jnp.float32)).astype(a.dtype),
                 state.params, p_jump)
-            loss_half = _loss(p_half, eval_batch)
+            loss_half = eval_loss(p_half)
 
             def accept_half(_):
                 return p_half, reset_moments(p_half), \

@@ -30,6 +30,14 @@ Modes (argv[1]):
                               assert the cooldown/window phase re-derives
                               from the restored step, run to step 14 and
                               check the remaining gated jumps fire; CTRL_OK
+  resident_save <dir>         ARENA-RESIDENT fit (adam, arena_native on) on
+                              (2,2) for 6 steps with a sharded bucket;
+                              prints the params checksum
+  resident_restore <dir>      restore on the REMAPPED (4,2) mesh: the
+                              leaf-wise checkpoint re-places per-leaf
+                              against the new mesh, re-residentizes into
+                              the new mesh's buckets, and one more fit
+                              step runs on the resident state; RESIDENT_OK
 """
 import os
 import sys
@@ -564,6 +572,60 @@ def main():
             if hetero:
                 assert n_small > 0          # the m=3 group really exists
         print("GRAMS_OK", n_checked)
+    elif mode == "resident_save":
+        from repro.core import arena as arena_mod
+        from repro.train.step import resident_enabled, state_resident
+        ckpt = sys.argv[2]
+        acfg = small_acfg()                       # adam: resident-capable
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            assert resident_enabled(trainer.acc, acfg)
+            batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
+                       for s in range(100))
+            state = trainer.fit(batches, steps=6)
+            # fit de-residentizes at return; the bucket table it trained
+            # on contains at least one SHARDED bucket
+            assert not arena_mod.is_arena_state(state.params)
+            table = trainer.acc.arena_for(state.params)
+            assert any(b.lane_axes or b.sys_axes for b in table.values()), \
+                {k: (b.lane_axes, b.sys_axes) for k, b in table.items()}
+            # the resident layout really was live: re-residentize and pin
+            # bucket count + bit-exact round trip through the wrapper
+            res = state_resident(trainer.acc, acfg, state)
+            assert arena_mod.is_arena_state(res.params)
+            trainer.save(state, 6)
+        print("SAVED", f"{checksum(state.params):.6f}")
+    elif mode == "resident_restore":
+        from repro.core import arena as arena_mod
+        from repro.train.step import state_resident
+        ckpt = sys.argv[2]
+        acfg = small_acfg()
+        mesh = jax.make_mesh((4, 2), ("data", "model"))   # REMAPPED topology
+        model = LanguageModel(acfg.model, head_tp=True, chunk_k=16)
+        with mesh_context(mesh):
+            trainer = Trainer(model, acfg, mesh=mesh, checkpoint_dir=ckpt)
+            state = trainer.restore()
+            assert state is not None and int(state.step) == 6
+            print("RESTORED", f"{checksum(state.params):.6f}")
+            # the new mesh's bucket table also carries a sharded bucket,
+            # and the restored per-leaf state re-residentizes into it
+            table = trainer.acc.arena_for(state.params)
+            assert any(b.lane_axes or b.sys_axes for b in table.values())
+            res = state_resident(trainer.acc, acfg, state)
+            assert arena_mod.is_arena_state(res.params)
+            assert arena_mod.is_arena_state(res.opt_state.m)
+            back = trainer.acc.state_leafwise(res)
+            assert abs(checksum(back.params)
+                       - checksum(state.params)) < 1e-3
+            # one more fit step runs ON the resident layout
+            batches = (batch_for_step(0, s, 8, 16, acfg.model.vocab_size)
+                       for s in range(6, 100))
+            final = trainer.fit(batches, steps=7, state=state)
+            assert int(final.step) == 7
+            assert np.isfinite(checksum(final.params))
+        print("RESIDENT_OK", f"{checksum(final.params):.6f}")
     elif mode in ("ctrl_save", "ctrl_restore"):
         run_controller_preempt(mode, sys.argv[2:])
     elif mode == "sharded_kernels":

@@ -134,23 +134,28 @@ def test_segmented_kernels_match_reference(anchor_first):
         lane += p
     x, q = jnp.asarray(x), jnp.asarray(q)
     bs = np.asarray(block_sys, np.int32)
+    # the kernels take BLOCK-MAJOR inputs; the flat x/q stay around for the
+    # per-leaf oracle slices below (blocking is a pure relayout)
+    xb = x.reshape(m, n // block_n, block_n).transpose(1, 0, 2)
+    qb = q.reshape(n // block_n, block_n)
 
-    ref_row = ka.gram_row_ref(x, q, bs, 4, anchor_first=anchor_first,
+    ref_row = ka.gram_row_ref(xb, qb, bs, 4, anchor_first=anchor_first,
                               block_n=block_n)
-    pal_row = ka.gram_row_pallas(x, q, bs, 4, anchor_first=anchor_first,
+    pal_row = ka.gram_row_pallas(xb, qb, bs, 4, anchor_first=anchor_first,
                                  block_n=block_n, interpret=True)
     np.testing.assert_allclose(np.asarray(pal_row), np.asarray(ref_row),
                                rtol=1e-6, atol=1e-5)
 
-    ref_g = ka.gram_ref(x, bs, 4, anchor_first=anchor_first, block_n=block_n)
-    pal_g = ka.gram_pallas(x, bs, 4, anchor_first=anchor_first,
+    ref_g = ka.gram_ref(xb, bs, 4, anchor_first=anchor_first,
+                        block_n=block_n)
+    pal_g = ka.gram_pallas(xb, bs, 4, anchor_first=anchor_first,
                            block_n=block_n, interpret=True)
     np.testing.assert_allclose(np.asarray(pal_g), np.asarray(ref_g),
                                rtol=1e-6, atol=1e-5)
 
     c = jnp.asarray(rng.normal(size=(4, m)), jnp.float32)
-    ref_c = ka.combine_ref(x, c, bs, block_n=block_n)
-    pal_c = ka.combine_pallas(x, c, bs, block_n=block_n, interpret=True)
+    ref_c = ka.combine_ref(xb, c, bs, block_n=block_n)
+    pal_c = ka.combine_pallas(xb, c, bs, block_n=block_n, interpret=True)
     np.testing.assert_allclose(np.asarray(pal_c), np.asarray(ref_c),
                                rtol=1e-6, atol=1e-5)
 
@@ -175,9 +180,14 @@ def test_segmented_kernels_match_reference(anchor_first):
 # Arena vs per-leaf: bit-exact full jump cycles on integer trajectories
 # ---------------------------------------------------------------------------
 
-def _run_cycles(cfg, params, deltas, steps):
+def _run_cycles(cfg, params, deltas, steps, quantize=False):
     """record/update/jump `steps` steps through the accelerator API;
-    returns (params_after, buffers, grams)."""
+    returns (params_after, buffers, grams). ``quantize`` rounds the params
+    after every jump so SNAPSHOT VALUES stay integer across windows — the
+    exactness precondition of the bit-exact route contract (the streaming
+    row kernel contracts the RAW ring buffer via the part-anchor identity,
+    so integer per-step drifts alone no longer guarantee exact sums once a
+    jump emits full-mantissa params)."""
     acc = DMDAccelerator(cfg)
     bufs = acc.init(params)
     grams = acc.init_grams(bufs)
@@ -187,23 +197,31 @@ def _run_cycles(cfg, params, deltas, steps):
         bufs, grams = acc.record(bufs, p, acc.slots(t), grams)
         if acc.should_apply(t):
             p, _ = acc.apply(p, bufs, grams=grams, step=t)
+            if quantize:
+                p = jax.tree_util.tree_map(jnp.round, p)
     return acc, p, bufs, grams
 
 
 def test_arena_vs_perleaf_bitexact_full_cycles():
     """Two full jump cycles (window wrap + second jump) on integer-valued
-    drifts: Grams are exact in any summation order, so the two routes must
-    agree BIT-EXACTLY on every leaf — any offset/masking/segmentation slip
-    changes bits. Covers sizes off the 128-lane grid and a stacked leaf."""
+    trajectories: with ``quantize`` keeping the post-jump params integer,
+    every snapshot VALUE is integer, all Gram sums are exact in any
+    summation order (including the arena's part-anchor identity on the raw
+    buffer), and the two routes must agree BIT-EXACTLY on every leaf — any
+    offset/masking/segmentation slip changes bits. Covers sizes off the
+    128-lane grid and a stacked leaf. The unquantized cross-route bound
+    lives in the float-trajectory test below."""
     rng = np.random.default_rng(7)
     sizes = {"a": (7,), "b": (10, 13), "c": (333,), "d": (2, 5, 6)}
     params = _int_params(rng, sizes)
     deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
               for k, s in sizes.items()}
     cfg = _cfg()
-    acc_a, p_arena, bufs_a, grams_a = _run_cycles(cfg, params, deltas, 9)
+    acc_a, p_arena, bufs_a, grams_a = _run_cycles(cfg, params, deltas, 9,
+                                                  quantize=True)
     cfg_o = dataclasses.replace(cfg, arena=False)
-    acc_o, p_leaf, bufs_o, grams_o = _run_cycles(cfg_o, params, deltas, 9)
+    acc_o, p_leaf, bufs_o, grams_o = _run_cycles(cfg_o, params, deltas, 9,
+                                                 quantize=True)
 
     for k in sizes:
         np.testing.assert_array_equal(np.asarray(p_arena[k]),
@@ -422,7 +440,7 @@ def test_plan_table_shows_arena_columns():
 
 
 # ---------------------------------------------------------------------------
-# Eligibility partition (ISSUE 6 satellite): excluded buckets
+# Eligibility (ISSUE 7 tentpole): mean-anchor and sharded-stack buckets
 # ---------------------------------------------------------------------------
 
 def _audit_arena(cfg, acc, params, mesh=None):
@@ -437,37 +455,47 @@ def _audit_arena(cfg, acc, params, mesh=None):
     return [v for v in violations if v.severity == "error"], info
 
 
-def test_mean_anchor_leaves_absent_from_buckets_with_valid_plans():
-    """anchor=mean re-anchors every row — no fused arena kernel. Every
-    leaf must be ABSENT from every ArenaBucket yet still carry a valid
-    per-leaf plan (trains through the per-leaf route, never dropped);
-    the arena-layout audit pass agrees the partition is exact."""
+def test_mean_anchor_leaves_pack_and_match_perleaf():
+    """anchor=mean leaves PACK (ISSUE 7): the full-recompute arena Gram
+    kernel fuses the mean subtraction, so there is no per-leaf carve-out
+    anymore (streaming stays structurally off — the anchor moves every
+    record). The packed route must agree bit-exactly with the per-leaf
+    route on integer trajectories, and the layout audit stays clean."""
     from repro.core import leafplan
-    from repro.core.arena import arena_eligible
+    from repro.core.arena import arena_eligible, arena_paths
 
     cfg = _cfg(anchor="mean")
-    params = {"w": jnp.ones((16, 16)), "b": jnp.ones((48,))}
+    rng = np.random.default_rng(17)
+    sizes = {"w": (16, 16), "b": (48,)}
+    params = _int_params(rng, sizes)
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
     acc = DMDAccelerator(cfg)
-    assert acc.arena_for(params) == {}
-    plans = acc.plans_for(params)
-    entries = leafplan.plan_entries(plans)
-    assert len(entries) == 2
-    for p in entries:
-        assert not arena_eligible(p, cfg, None), p.path
-        assert p.route in ("pallas_flat", "pallas_shard_map",
-                           "dot_general"), p.route
-        assert p.m >= 2
+    assert not acc.streaming                     # mean: no one-pass row
+    table = acc.arena_for(params)
+    assert arena_paths(table) == frozenset({"/w", "/b"})
+    for p in leafplan.plan_entries(acc.plans_for(params)):
+        assert arena_eligible(p, cfg, None), p.path
     errors, info = _audit_arena(cfg, acc, params)
     assert errors == [], errors
-    assert info["n_packed"] == 0 and info["n_leaves"] == 2
+    assert info["n_packed"] == 2 and info["n_leaves"] == 2
+
+    acc_a, p_arena, _, _ = _run_cycles(cfg, params, deltas, 9)
+    _, p_leaf, _, _ = _run_cycles(
+        dataclasses.replace(cfg, arena=False), params, deltas, 9)
+    for k in sizes:
+        np.testing.assert_array_equal(np.asarray(p_arena[k]),
+                                      np.asarray(p_leaf[k]), err_msg=k)
 
 
-def test_sharded_stack_leaves_absent_from_buckets_with_valid_plans():
-    """A leaf whose STACK axis is device-sharded cannot pack (systems
-    would straddle shards): it must skip every bucket and keep a valid
-    per-leaf shard_map plan while its unsharded-stack neighbours still
-    pack. The mesh here is structural (axis names + sizes are all the
-    layout code reads) so the partition check runs without 8 devices."""
+def test_sharded_stack_leaf_gets_single_segment_sys_bucket():
+    """A leaf whose LEADING stack axis is device-sharded packs into its
+    own single-segment bucket (ISSUE 7): each device owns whole systems
+    (sys_axes), the Gram stack stays sharded over them, and shard-local
+    accounting (n_sys vs n_sys_global) is consistent. A NON-leading
+    sharded stack axis stays excluded (shard-major packing would
+    interleave the global system order). The mesh here is structural
+    (axis names + sizes are all the layout code reads)."""
     import numpy as _np
     from repro.core import leafplan
     from repro.core.arena import arena_eligible, arena_paths
@@ -487,16 +515,36 @@ def test_sharded_stack_leaves_absent_from_buckets_with_valid_plans():
                              stack_dims={"stacked": 1, "w": 0})
         table = acc.arena_for(params)
         packed = arena_paths(table)
-        assert "/stacked" not in packed          # sharded stack: excluded
-        assert "/w" in packed                    # neighbour still packs
+        assert "/stacked" in packed              # leading-dim shard packs
+        assert "/w" in packed
         plans = acc.plans_for(params)
         by_path = {p.path: p for p in leafplan.plan_entries(plans)}
         st = by_path["/stacked"]
-        assert not arena_eligible(st, cfg, mesh)
-        assert st.route == "pallas_shard_map" and st.m >= 2
+        assert arena_eligible(st, cfg, mesh)
         assert st.param_spec[0] is not None      # the stack axis IS sharded
+        sys_buckets = [b for b in table.values() if b.sys_axes]
+        assert len(sys_buckets) == 1
+        (b,) = sys_buckets
+        assert len(b.segments) == 1              # own single-segment bucket
+        assert b.sys_axes == ("data",) and b.sys_factor == 2
+        assert b.segments[0].n_sys == 2          # shard-LOCAL systems (4/2)
+        assert b.n_sys_global == 4
+        assert b.gram_spec() == __import__("jax").sharding.PartitionSpec(
+            "data", None, None)
         errors, info = _audit_arena(cfg, acc, params, mesh=mesh)
         assert errors == [], errors
-        assert info["n_packed"] == 1
+        assert info["n_packed"] == 2
+    finally:
+        set_rule_overrides(None)
+
+    # non-leading sharded stack dim: still excluded
+    set_rule_overrides([(r"deep", (None, "fsdp", None, "tp"))])
+    try:
+        cfg = _cfg()
+        params = {"deep": jnp.ones((3, 4, 16, 128))}
+        acc = DMDAccelerator(cfg, mesh=mesh, stack_dims={"deep": 2})
+        assert acc.arena_for(params) == {}
+        (pl,) = leafplan.plan_entries(acc.plans_for(params))
+        assert not arena_eligible(pl, cfg, mesh)
     finally:
         set_rule_overrides(None)

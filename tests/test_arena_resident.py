@@ -1,0 +1,317 @@
+"""Arena-native parameter residency (ISSUE 7, DESIGN.md §7).
+
+Covers the residency route contracts end-to-end through the real Trainer:
+
+  * three-route full-cycle equality — resident (arena_native=True) vs
+    pack-copy (arena_native=False) vs per-leaf (arena=False) must agree
+    on params, optimizer moments, snapshot buffers, Grams AND controller
+    state after full jump cycles. The trajectory is kept exactly dyadic
+    (integer batches, momentum with beta=lr=0.5) so every fp32 Gram sum
+    is exact in ANY summation order and the comparison is
+    assert_array_equal, not allclose — any view/offset/masking slip in
+    the residency layout changes bits;
+  * resident vs pack-copy on FLOAT trajectories with adam: the two
+    routes execute the identical elementwise math and the identical
+    segmented kernels on identical buffers, so they are bit-equal even
+    where per-leaf is not (exercises the NamedTuple opt-state residency);
+  * checkpoint interop in both directions: a checkpoint written mid-fit
+    by a RESIDENT run (state_leafwise on the live resident state)
+    restores into an arena=False run and vice versa — disk format is
+    leaf-wise either way, so pre-residency checkpoints load unchanged;
+  * the ISSUE 7 bugfix oracle: with RESIDENT moments, the post-jump
+    group-masked optimizer reset must mask on bucket ranges, not leaves —
+    pinned by a two-group staggered schedule where one group jumps while
+    the other is mid-window;
+  * tree_resident/tree_leafwise round-trip + pad-lane zeroing.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import (DMDConfig, DMDControllerConfig,
+                                OptimizerConfig, TrainConfig)
+from repro.core import DMDAccelerator
+from repro.core import arena as arena_mod
+from repro.core.schedule import DMDGroupRule
+from repro.train import Trainer
+from repro.train.step import RESIDENT_OPTIMIZERS, resident_enabled
+
+
+SIZES = {"w": (16, 13), "b": (7,), "v": (130,), "stack": (3, 5, 6)}
+
+
+class _DotModel:
+    """loss = sum_leaf <params[k], batch[k]>: the gradient IS the batch
+    tensor, independent of params — integer batches give integer grads,
+    so momentum(beta=0.5, lr=0.5) keeps every snapshot exactly dyadic
+    and all fp32 Gram sums exact in any summation order."""
+
+    def init(self, key):
+        rng = np.random.default_rng(0)
+        return {k: jnp.asarray(rng.integers(-4, 5, size=s), jnp.float32)
+                for k, s in SIZES.items()}
+
+    def loss(self, params, batch):
+        loss = sum(jnp.vdot(params[k], batch[k]) for k in SIZES)
+        return loss, None
+
+    def param_stack_dims(self):
+        return {"w": 0, "b": 0, "v": 0, "stack": 1}
+
+
+def _int_batches(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [{k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+             for k, s in SIZES.items()} for _ in range(n)]
+
+
+def _float_batches(n, seed=2):
+    rng = np.random.default_rng(seed)
+    return [{k: jnp.asarray(rng.normal(size=s), jnp.float32)
+             for k, s in SIZES.items()} for _ in range(n)]
+
+
+def _acfg(optimizer, *, native=True, arena=True, controller=False,
+          groups=(), ckpt="", ckpt_every=0):
+    acfg = get_config("pollutant-mlp")
+    return dataclasses.replace(
+        acfg,
+        dmd=DMDConfig(m=4, s=8, tol=1e-6, warmup_steps=2, cooldown_steps=0,
+                      arena=arena, arena_native=native, groups=groups,
+                      controller=DMDControllerConfig(enabled=controller,
+                                                     eval_rows=0)),
+        optimizer=optimizer,
+        parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
+                                     remat="none"),
+        train=TrainConfig(global_batch=8, seq_len=1, checkpoint_dir=ckpt,
+                          checkpoint_every=ckpt_every))
+
+
+def _fit(acfg, batches, steps, eval_batch=None, state=None):
+    trainer = Trainer(_DotModel(), acfg)
+    state = trainer.fit(iter(batches), steps=steps, state=state,
+                        eval_batch=eval_batch)
+    return trainer, state
+
+
+def _assert_trees_equal(a, b, msg):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), (msg, len(la), len(lb))
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg}[{i}]")
+
+
+def test_three_route_full_cycle_bitexact():
+    """Resident vs pack-copy vs per-leaf through Trainer.fit with the
+    loss-gated controller on. Through the FIRST complete gated cycle
+    every snapshot is exactly dyadic, so params, momentum moments,
+    buffers, Grams and controller counters must be bit-equal on all
+    three routes. The continuation through a SECOND cycle (whose
+    snapshots carry the jump's full-mantissa output) stays bit-equal
+    between resident and pack-copy — identical ops in identical order —
+    while per-leaf is pinned at the fp32 summation-order noise floor
+    (the same bound the PR-5 float-trajectory oracle documents)."""
+    batches = _int_batches(16)
+    eval_batch = _int_batches(1, seed=9)[0]
+    opt = OptimizerConfig(name="momentum", lr=0.5, b1=0.5, grad_clip=0.0)
+    routes = {
+        "resident": _acfg(opt, native=True, controller=True),
+        "packed": _acfg(opt, native=False, controller=True),
+        "per_leaf": _acfg(opt, arena=False, controller=True),
+    }
+    runs = {}
+    for name, acfg in routes.items():
+        trainer, state = _fit(acfg, batches, 6, eval_batch=eval_batch)
+        if name == "resident":
+            assert resident_enabled(trainer.acc, acfg)
+        # fit returns the unresident layout; unpack arenas for comparison
+        assert not arena_mod.is_arena_state(state.params)
+        runs[name] = (trainer, state)
+
+    ref_tr, ref_st = runs["resident"]
+    ref = ref_tr.acc.state_leafwise(ref_st)
+    # the first gated jump fired (otherwise the test pins nothing)
+    assert int(np.asarray(ref.controller.accepts).sum()
+               + np.asarray(ref.controller.scaled).sum()
+               + np.asarray(ref.controller.rejects).sum()) > 0
+    for other in ("packed", "per_leaf"):
+        tr, raw = runs[other]
+        st = tr.acc.state_leafwise(raw)
+        _assert_trees_equal(ref.params, st.params, f"params:{other}")
+        _assert_trees_equal(ref.opt_state, st.opt_state, f"moments:{other}")
+        _assert_trees_equal(ref.dmd_buffers, st.dmd_buffers,
+                            f"buffers:{other}")
+        _assert_trees_equal(ref.dmd_gram, st.dmd_gram, f"grams:{other}")
+        _assert_trees_equal(ref.controller, st.controller, f"ctrl:{other}")
+
+    # second cycle: resume each run to step 12 (second gated jump at 11)
+    finals = {}
+    for name in routes:
+        trainer, state = runs[name]
+        state = trainer.fit(iter(batches[6:]), steps=12, state=state,
+                            eval_batch=eval_batch)
+        finals[name] = trainer.acc.state_leafwise(state)
+    ref = finals["resident"]
+    _assert_trees_equal(ref.params, finals["packed"].params,
+                        "params:packed-cycle2")
+    _assert_trees_equal(ref.opt_state, finals["packed"].opt_state,
+                        "moments:packed-cycle2")
+    _assert_trees_equal(ref.dmd_gram, finals["packed"].dmd_gram,
+                        "grams:packed-cycle2")
+    _assert_trees_equal(ref.controller, finals["packed"].controller,
+                        "ctrl:packed-cycle2")
+    for x, y in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(finals["per_leaf"].params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_resident_vs_packed_adam_float_bitexact():
+    """On arbitrary float trajectories the resident and pack-copy routes
+    run the same elementwise ops and the same segmented kernels on the
+    same buffer bits, so adam params/moments/buffers/Grams are bit-equal
+    (per-leaf is excluded here: its Gram summation order differs)."""
+    batches = _float_batches(14)
+    opt = OptimizerConfig(name="adam", lr=1e-2, grad_clip=0.0)
+    tr_r, st_r = _fit(_acfg(opt, native=True), batches, 10)
+    tr_p, st_p = _fit(_acfg(opt, native=False), batches, 10)
+    lr, lp = tr_r.acc.state_leafwise(st_r), tr_p.acc.state_leafwise(st_p)
+    _assert_trees_equal(lr.params, lp.params, "params")
+    _assert_trees_equal(lr.opt_state, lp.opt_state, "adam-moments")
+    _assert_trees_equal(lr.dmd_buffers, lp.dmd_buffers, "buffers")
+    _assert_trees_equal(lr.dmd_gram, lp.dmd_gram, "grams")
+
+
+def test_checkpoint_interop_resident_both_directions(tmp_path):
+    """A checkpoint written MID-FIT by a resident run (the live state is
+    in the wrapper layout when Trainer.save fires) restores into an
+    arena=False run, and a per-leaf checkpoint restores into a resident
+    run — both continuations land bit-equal with the uninterrupted
+    reference run of their target route."""
+    batches = _int_batches(20)
+    opt = OptimizerConfig(name="momentum", lr=0.5, b1=0.5, grad_clip=0.0)
+
+    # uninterrupted references, one per target route: a continuation is
+    # compared against ITS OWN route's straight-through run (across
+    # routes the post-jump Gram summation orders differ at fp32 ulp —
+    # the three-route test above pins that boundary)
+    tr_ol, st_ol = _fit(_acfg(opt, arena=False), batches, 16)
+    oracle_leaf = tr_ol.acc.state_leafwise(st_ol)
+    tr_or, st_or = _fit(_acfg(opt, native=True), batches, 16)
+    oracle_res = tr_or.acc.state_leafwise(st_or)
+
+    # resident run saves at step 5 mid-fit (the live state is resident
+    # when Trainer.save fires) -> per-leaf run resumes
+    dir_a = str(tmp_path / "resident_writes")
+    _fit(_acfg(opt, native=True, ckpt=dir_a, ckpt_every=5), batches, 8)
+    tr_b = Trainer(_DotModel(), _acfg(opt, arena=False, ckpt=dir_a))
+    st_b = tr_b.restore()
+    assert st_b is not None and int(st_b.step) == 5
+    st_b = tr_b.fit(iter(batches[5:]), steps=16, state=st_b)
+    _assert_trees_equal(oracle_leaf.params, st_b.params, "res->leaf params")
+    _assert_trees_equal(oracle_leaf.opt_state, st_b.opt_state,
+                        "res->leaf mom")
+    _assert_trees_equal(oracle_leaf.dmd_buffers, st_b.dmd_buffers,
+                        "res->leaf bufs")
+    _assert_trees_equal(oracle_leaf.dmd_gram, st_b.dmd_gram,
+                        "res->leaf grams")
+
+    # per-leaf run saves -> resident run resumes (pre-residency format)
+    dir_c = str(tmp_path / "leaf_writes")
+    _fit(_acfg(opt, arena=False, ckpt=dir_c, ckpt_every=5), batches, 8)
+    acfg_d = _acfg(opt, native=True, ckpt=dir_c)
+    tr_d = Trainer(_DotModel(), acfg_d)
+    st_d = tr_d.restore()
+    assert st_d is not None and int(st_d.step) == 5
+    assert arena_mod.is_arena_state(st_d.dmd_buffers)   # re-arenaized
+    st_d = tr_d.fit(iter(batches[5:]), steps=16, state=st_d)
+    ld = tr_d.acc.state_leafwise(st_d)
+    _assert_trees_equal(oracle_res.params, ld.params, "leaf->res params")
+    _assert_trees_equal(oracle_res.opt_state, ld.opt_state,
+                        "leaf->res mom")
+    _assert_trees_equal(oracle_res.dmd_buffers, ld.dmd_buffers,
+                        "leaf->res bufs")
+    _assert_trees_equal(oracle_res.dmd_gram, ld.dmd_gram,
+                        "leaf->res grams")
+
+
+def test_staggered_moment_reset_masks_bucket_ranges():
+    """ISSUE 7 bugfix oracle: two groups on staggered phases, adam. When
+    the default group jumps at step 5 the vector group (phase 2) is
+    mid-window: the masked post-jump reset must zero ONLY the jumped
+    group's moments. With resident moments the mask unit is the bucket
+    range — a leaf-granularity slip either clobbers the other group's
+    segments or misses its own; bit-compared against the pack-copy
+    route's leaf-masked reset."""
+    groups = (DMDGroupRule(name="vecs", path_regex="/b|/v", phase=2),)
+    batches = _float_batches(8)
+    opt = OptimizerConfig(name="adam", lr=1e-2, grad_clip=0.0)
+    # steps 0..5: default group (w, stack) jumps at 5; vecs mid-window
+    tr_r, st_r = _fit(_acfg(opt, native=True, groups=groups), batches, 6)
+    tr_p, st_p = _fit(_acfg(opt, native=False, groups=groups), batches, 6)
+    assert len(tr_r.acc.groups) == 2
+    assert tr_r.acc.apply_groups(5) and 1 not in tr_r.acc.apply_groups(5)
+
+    mu_r = st_r.opt_state.m
+    mu_p = st_p.opt_state.m
+    _assert_trees_equal(mu_r, mu_p, "mu")
+    _assert_trees_equal(st_r.opt_state.v, st_p.opt_state.v, "nu")
+    _assert_trees_equal(st_r.params, st_p.params, "params")
+    # jumped group's moments are freshly reset, the staggered group's are
+    # mid-accumulation — the mask really is group-scoped
+    for k in ("w", "stack"):
+        assert float(jnp.abs(mu_r[k]).max()) == 0.0, k
+    for k in ("b", "v"):
+        assert float(jnp.abs(mu_r[k]).max()) > 0.0, k
+
+
+def test_tree_resident_leafwise_roundtrip():
+    """Pack/unpack round-trips bit-exactly, pad lanes are zero, and the
+    wrapper marks every packed path None in the leaf subtree."""
+    rng = np.random.default_rng(3)
+    params = {k: jnp.asarray(rng.normal(size=s), jnp.float32)
+              for k, s in SIZES.items()}
+    acc = DMDAccelerator(DMDConfig(m=4, s=8, warmup_steps=0,
+                                   cooldown_steps=0),
+                         stack_dims=_DotModel().param_stack_dims())
+    table = acc.arena_for(params)
+    assert table
+    res = arena_mod.tree_resident(table, params)
+    assert arena_mod.is_arena_state(res)
+    arenas, leaf = arena_mod.split_state(res)
+    assert all(x is None for x in jax.tree_util.tree_leaves(
+        leaf, is_leaf=lambda x: x is None))
+    for key, buf in arenas.items():
+        b = table[key]
+        assert buf.shape == (b.n_lanes,)
+        mask = np.ones(b.n_lanes, bool)
+        for seg in b.segments:
+            flat = np.asarray(buf[seg.lane_start:
+                                  seg.lane_start + seg.lanes])
+            for s in range(seg.n_sys):
+                lo = s * seg.seg_lanes
+                mask[seg.lane_start + lo:
+                     seg.lane_start + lo + seg.flat_local] = False
+        assert np.all(np.asarray(buf)[mask] == 0.0)     # pad lanes zero
+    back = arena_mod.tree_leafwise(table, res)
+    for k in SIZES:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(params[k]), err_msg=k)
+
+
+def test_resident_optimizer_gate():
+    """Non-elementwise optimizers must NOT residentize (adafactor reads
+    trailing-dim structure a flat buffer destroys)."""
+    assert "adafactor" not in RESIDENT_OPTIMIZERS
+    opt = OptimizerConfig(name="adafactor", lr=1e-2)
+    acfg = _acfg(opt, native=True)
+    trainer = Trainer(_DotModel(), acfg)
+    assert not resident_enabled(trainer.acc, acfg)
+    state = trainer.fit(iter(_float_batches(4)), steps=3)
+    assert not arena_mod.is_arena_state(state.params)
+    assert arena_mod.is_arena_state(state.dmd_buffers)  # arenas still on

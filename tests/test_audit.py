@@ -27,7 +27,7 @@ def test_clean_reduced_mlp_audit_is_green():
     assert {r.name for r in report.results} == {
         "donation-alias", "collective-budget", "trace-budget",
         "dtype-flow", "host-callback-in-hot-loop", "arena-layout",
-        "schedule-conflict"}
+        "arena-residency", "schedule-conflict"}
 
 
 def test_drop_donation_bites():
@@ -54,6 +54,17 @@ def test_overlap_groups_bites():
                for v in report.violations)
 
 
+def test_force_pack_bites():
+    """Re-packing resident params inside record_update must trip the
+    arena-residency pass: the bucket-sized 1-D concatenate the resident
+    record exists to delete reappears in the traced program."""
+    report = run_audit("pollutant-mlp", reduced=True, mutate="force-pack",
+                       passes=["arena-residency"])
+    assert _failed(report) == {"arena-residency"}, report.render()
+    assert any("concatenate/gather" in v.detail
+               for v in report.violations)
+
+
 def test_force_allgather_needs_mesh():
     with pytest.raises(Exception, match="mesh"):
         run_audit("pollutant-mlp", reduced=True, mutate="force-allgather",
@@ -62,11 +73,13 @@ def test_force_allgather_needs_mesh():
 
 def test_mutation_registry_is_complete():
     assert list_mutations() == ["drop-donation", "force-allgather",
-                                "misalign-arena", "overlap-groups"]
+                                "force-pack", "misalign-arena",
+                                "overlap-groups"]
     for name in list_mutations():
         m = get_mutation(name)
         assert m.expect_fail in ("donation-alias", "collective-budget",
-                                 "arena-layout", "schedule-conflict")
+                                 "arena-layout", "arena-residency",
+                                 "schedule-conflict")
 
 
 @pytest.mark.slow

@@ -92,6 +92,24 @@ def test_controller_preempt_restore_on_remapped_mesh(tmp_path, variant,
 
 
 @pytest.mark.slow
+def test_resident_restore_on_remapped_mesh(tmp_path):
+    """ISSUE 7: a run whose params live arena-RESIDENT (adam,
+    arena_native on) checkpoints mid-training on a (2,2) mesh — the
+    on-disk format is leaf-wise — and restores on the REMAPPED (4,2)
+    mesh, where the per-leaf elastic re-placement rebuilds the resident
+    sharded buckets for the NEW topology and training continues on the
+    resident layout. The params checksum survives the save/remap/restore
+    round trip."""
+    ckpt = str(tmp_path / "ckpt_resident")
+    out_save = run_worker("resident_save", ckpt)
+    out_restore = run_worker("resident_restore", ckpt)
+    assert "RESIDENT_OK" in out_restore
+    saved = float(_parse("SAVED", out_save)[0])
+    restored = float(_parse("RESTORED", out_restore)[0])
+    assert abs(saved - restored) / max(abs(saved), 1.0) < 1e-5
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("variant", ["keep", "zero", "hetero"])
 def test_gram_restore_on_remapped_mesh(tmp_path, variant):
     """A streaming-era checkpoint (grams carried), a zeroed-gram /

@@ -9,15 +9,18 @@ and compares against repro/audit/pins.py (keys "deep-mlp-24x32" and
 routes them through the pass — bump procedure is in pins.py / DESIGN.md §8.
 
 The packed-arena route (DESIGN.md §7) replaced the O(leaves) per-leaf
-record/gram fan-out with O(buckets) segmented passes; these ceilings sit
-between the measured arena-route counts (with ~25% slack for innocuous
-refactors) and the per-leaf route's counts — e.g. the 24-layer-MLP fused
-step traces 2906 equations per-leaf vs 1731 packed (the remainder is the
-model's own forward+backward+adam, which the arena cannot shrink), and
-the reduced tinyllama step 1137 vs 870. If a change
-pushes the count past the pin, either the change reintroduced a per-leaf
-unroll (fix it) or it legitimately grew the program (re-measure and bump
-the pin in the SAME commit, with the reason)."""
+record/gram fan-out with O(buckets) segmented passes, and arena-native
+residency (dmd.arena_native) then removed the pack concatenate from the
+record arm entirely — the fused step records with one dynamic_update_slice
+per bucket. The ceilings sit between the measured resident counts (with
+slack for innocuous refactors) and the pack-copy route's counts — e.g. the
+24-layer-MLP fused step traces 2906 equations per-leaf vs 1731 pack-copy
+vs 1143 resident (the remainder is the model's own forward+backward+adam,
+which the arena cannot shrink), and the reduced tinyllama step 1137 vs 870
+vs 723. If a change pushes the count past the pin, either the change
+reintroduced a per-leaf unroll or the pack-copy record (fix it) or it
+legitimately grew the program (re-measure and bump the pin in the SAME
+commit, with the reason)."""
 import dataclasses
 
 import jax
@@ -55,11 +58,14 @@ def test_deep_mlp_train_step_trace_pinned():
         dmd=DMDConfig(m=6, s=10, warmup_steps=2, cooldown_steps=1),
         optimizer=OptimizerConfig(name="adam", lr=1e-3),
         train=TrainConfig(global_batch=8, seq_len=1))
-    step = make_train_step(model, acfg, loss_fn=lambda p, b: model.loss(
-        p, b)[0])
-    params = model.init(jax.random.PRNGKey(0))
     from repro.core.accelerator import DMDAccelerator
     acc = DMDAccelerator(acfg.dmd)
+    # share the accelerator with the step: a resident state only carries
+    # flat buckets, so the step's acc must hold the plan/bucket tables
+    # built from the leafwise params (exactly what Trainer does)
+    step = make_train_step(model, acfg, loss_fn=lambda p, b: model.loss(
+        p, b)[0], acc=acc)
+    params = model.init(jax.random.PRNGKey(0))
     bufs = acc.init(params)
     state = TrainState(params, jax.eval_shape(
         lambda p: p, params), jnp.zeros((), jnp.int32), bufs,
@@ -69,15 +75,19 @@ def test_deep_mlp_train_step_trace_pinned():
     from repro.optim import make_optimizer
     opt = make_optimizer(acfg.optimizer)
     state = state._replace(opt_state=opt.init(params))
+    # trace over the layout training actually runs: resident buckets
+    # (train/loop.py applies the same conversion at fit() entry)
+    from repro.train.step import state_resident
+    state = state_resident(acc, acfg, state)
     jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
-    # measured 1731 on the arena route vs 2906 per-leaf (the fixed cost is
-    # the 24-layer forward+backward+adam); the ceiling in pins.py sits
-    # below the per-leaf count
+    # measured 1143 resident vs 1731 pack-copy vs 2906 per-leaf (the fixed
+    # cost is the 24-layer forward+backward+adam); the ceiling in pins.py
+    # sits below the pack-copy count so a residency regression fails first
     ctx = adhoc_context("deep-mlp-24x32", acfg,
                         {"train_step": jaxpr_target("train_step", jx)})
     violations, info = trace_budget(ctx)
     assert violations == [], violations
-    assert info["train_step.pin"] == {"eqns": 2200}  # pinned, not skipped
+    assert info["train_step.pin"] == {"eqns": 1500}  # pinned, not skipped
 
 
 def test_transformer_train_step_trace_pinned():
@@ -104,12 +114,14 @@ def test_transformer_train_step_trace_pinned():
                        bufs, acc.init_grams(bufs))
     batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
              "labels": jnp.zeros((4, 16), jnp.int32)}
+    from repro.train.step import state_resident
+    state = state_resident(acc, acfg, state)
     jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
-    # measured 870 on the arena route vs 1137 per-leaf; the ceiling in
-    # pins.py sits below the per-leaf count so a route regression fails
+    # measured 723 resident vs 870 pack-copy vs 1137 per-leaf; the ceiling
+    # in pins.py sits below the pack-copy count so a route regression fails
     # before any slack is eaten by legitimate model-side growth
     ctx = adhoc_context("tinyllama-1.1b-reduced", acfg,
                         {"train_step": jaxpr_target("train_step", jx)})
     violations, info = trace_budget(ctx)
     assert violations == [], violations
-    assert info["train_step.pin"]["eqns"] == 1100
+    assert info["train_step.pin"]["eqns"] == 850
