@@ -79,16 +79,21 @@ def main():
     ap.add_argument("--out", default=".",
                     help="directory for the BENCH_<suite>.json files")
     args = ap.parse_args()
-    from benchmarks.paper_benches import (arena_bench, controller,
-                                          fig3_sensitivity, fig4_curves,
-                                          sec3_overhead, sharded_gram,
-                                          staggered_jump, streaming_gram)
+    from benchmarks.paper_benches import (arena_bench, bucket_dmd,
+                                          controller, fig3_sensitivity,
+                                          fig4_curves, sec3_overhead,
+                                          sharded_gram, staggered_jump,
+                                          streaming_gram)
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
 
     suites = [
         ("arena", (lambda: arena_bench(n_mlp_layers=12, width=128, reps=5))
          if args.quick else arena_bench),
+        ("bucket_dmd", (lambda: bucket_dmd(n_mlp_layers=12, width=128,
+                                           reps=5, fig_steps=300,
+                                           lm_steps=40))
+         if args.quick else bucket_dmd),
         ("sec3_overhead", sec3_overhead),
         ("streaming_gram", lambda: streaming_gram(
             n=1_000_000 if args.quick else 4_000_000)),

@@ -15,6 +15,9 @@ exits nonzero while the clean build stays green:
   force-pack       expand resident params leaf-wise inside record_update
                    so the PR-5 pack-copy concatenate reappears
                    -> arena-residency fails (bucket-sized 1-D gather)
+  force-leaf-solves bucket-scope build whose dmd_step still batches one
+                   coefficient system per leaf -> solve-budget fails
+                   (eigh/callback rows exceed the one-per-bucket budget)
   overlap-groups   add two match-everything group rules with distinct
                    phases -> schedule-conflict fails (overlap; and if the
                    residues still collide, the stagger check too)
@@ -161,6 +164,55 @@ _register(Mutation(
         "route resurfaces)",
     expect_fail="arena-residency",
     wrap_fns=_force_pack_fns))
+
+
+def _bucket_scope_config(acfg):
+    return dataclasses.replace(
+        acfg, dmd=dataclasses.replace(acfg.dmd, scope="bucket"))
+
+
+def _force_leaf_solves_fns(acc, fns, mesh):
+    import jax
+
+    from repro.core.accelerator import _none_like, jump_tree
+    from repro.train.state import TrainState
+
+    # The silent-fallback defect in one seam: the build is bucket-scope
+    # (budget = one solve per bucket) but the jump program still batches
+    # one coefficient system per LEAF. Grams pass as None so the jump
+    # recomputes them from the buffers with the leaf-scope block tables —
+    # the state's (1, m, m) bucket Grams never shape-constrain the trace.
+    # Only the ungated build mutates: the gated variant's donation pass
+    # pins an EXACT whole-state alias table this plain-jump stand-in
+    # cannot reproduce, and one tripped target is all the lane needs.
+    if acc.controller_on:
+        return fns
+    leaf_cfg = dataclasses.replace(acc.cfg, scope="leaf")
+
+    def dmd_step(state, relax, *extra, groups=None):
+        plans = acc.plans_for(state.params)
+        params, mean_rank = jump_tree(
+            leaf_cfg, plans, state.params, state.dmd_buffers,
+            _none_like(state.dmd_buffers), relax, groups=groups,
+            arena=acc.arena_for(state.params))
+        new_state = TrainState(params, state.opt_state, state.step,
+                               state.dmd_buffers, state.dmd_gram,
+                               state.controller)
+        return new_state, {"mean_rank": mean_rank}
+
+    out = dict(fns)
+    out["dmd_step"] = jax.jit(dmd_step, static_argnames=("groups",),
+                              donate_argnums=(0,))
+    return out
+
+
+_register(Mutation(
+    name="force-leaf-solves",
+    doc="bucket-scope build whose jump still batches one coefficient "
+        "system per leaf (the silent per-leaf-solve fallback)",
+    expect_fail="solve-budget",
+    config=_bucket_scope_config,
+    wrap_fns=_force_leaf_solves_fns))
 
 
 def _overlap_groups(acfg):

@@ -7,6 +7,8 @@ a stable name. The registry order below is the report order:
   donation-alias            dropped donate_argnums / buffer-shaped copies
   collective-budget         analytic psum budget + buffer-sized all-gather ban
   trace-budget              per-target eqn/launch ceilings (repro.audit.pins)
+  solve-budget              batched coefficient-solve rows per jump within the
+                            scope budget (bucket scope: one per bucket)
   dtype-flow                silent fp32<->bf16 casts on Gram/buffer tensors
   host-callback-in-hot-loop pure/io_callback in a jitted step (eig whitelist)
   arena-layout              offset-table / alignment / eligibility invariants
@@ -217,6 +219,88 @@ def trace_budget(ctx):
                 "trace-budget", name,
                 f"{launches} launch-class ops > pinned ceiling "
                 f"{pin['launches']} for {ctx.config_key}"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# solve-budget
+# ---------------------------------------------------------------------------
+
+# Targets that trace the jump's coefficient solves. The fused train_step
+# never solves (record + streaming Gram only) and stays out of scope.
+_SOLVE_TARGETS = ("dmd_step", "dmd_step_gated")
+
+
+def solve_budget_rows(ctx) -> int:
+    """Analytic per-jump solve budget: how many dmd_coefficients systems
+    one full jump (every group) may batch under ``cfg.scope``. Leaf scope
+    solves one system per packed system plus one per unpacked per-leaf
+    system; bucket scope collapses every bucket-scoped bucket to ONE
+    shared Koopman operator (DESIGN.md §9), so its contribution is
+    ``gram_lead(scope)`` — 1 per bucket (sys-sharded buckets stay
+    per-system)."""
+    from repro.core.arena import arena_paths
+    from repro.core.leafplan import plan_entries
+
+    scope = getattr(ctx.cfg, "scope", "leaf")
+    total = sum(b.gram_lead(scope) for b in ctx.arena.values())
+    packed = arena_paths(ctx.arena)
+    for p in plan_entries(ctx.plans):
+        if p.path in packed:
+            continue
+        total += _prod(p.shape[:p.stack_dims]) if p.stack_dims else 1
+    return total
+
+
+def _batch_rows(aval) -> int:
+    shape = getattr(aval, "shape", ())
+    return _prod(shape[:-2]) if len(shape) >= 2 else 1
+
+
+@register_pass(
+    "solve-budget",
+    "batched coefficient-solve rows (POD eigh / eig host-callback) per "
+    "jump within the dmd.scope budget — bucket scope: one per bucket")
+def solve_budget(ctx):
+    """Counts the BATCH rows of the solve primitives in the traced jump,
+    not the equation count: dmd_coefficients runs one eigh over the
+    (n, m, m) Gram stack (the POD basis both modes share) and, in eig
+    mode, one pure_callback over the (n, r, r) Atilde stack — ``n`` IS
+    the number of systems solved and the eig callback's host batch. A
+    silent fallback to per-leaf solves under ``scope="bucket"`` keeps the
+    eqn count identical and only the rows give it away."""
+    from repro import trace
+
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    budget = solve_budget_rows(ctx)
+    info["solve_budget_rows"] = budget
+    info["scope"] = getattr(ctx.cfg, "scope", "leaf")
+
+    def eigh_rows(eqn) -> int:
+        return _batch_rows(eqn.invars[0].aval) \
+            if str(eqn.primitive) == "eigh" else 0
+
+    def callback_rows(eqn) -> int:
+        return _batch_rows(eqn.invars[-1].aval) \
+            if "callback" in str(eqn.primitive) else 0
+
+    for name in _SOLVE_TARGETS:
+        t = ctx.targets.get(name)
+        if t is None:
+            continue
+        ne = trace.sum_eqns(t.jaxpr, eigh_rows)
+        nc = trace.sum_eqns(t.jaxpr, callback_rows)
+        info[f"{name}.eigh_rows"] = ne
+        info[f"{name}.callback_rows"] = nc
+        for kind, n in (("POD eigh", ne), ("eig host-callback", nc)):
+            if n > budget:
+                vs.append(Violation(
+                    "solve-budget", name,
+                    f"{n} {kind} rows > per-jump solve budget {budget} "
+                    f"(scope={info['scope']}): the jump batches more "
+                    "coefficient systems than the scope allows — a "
+                    "bucket-scoped bucket fell back to per-leaf solves"))
     return vs, info
 
 

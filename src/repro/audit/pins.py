@@ -57,6 +57,18 @@ TRACE_PINS: Dict[str, Dict[str, Dict[str, int]]] = {
     "deep-mlp-24x32": {
         "train_step": {"eqns": 1500},
     },
+    # Bucket-scope Koopman DMD (dmd.scope="bucket", DESIGN.md §9) on the
+    # same reduced tinyllama build (tests/test_trace_size.py): train_step
+    # is eqn-identical to leaf scope (the data passes only swap the static
+    # block->system table) and the jump shrinks slightly. Eqn pins alone
+    # CANNOT catch a silent fallback to per-leaf solves — the batched
+    # eigh is one equation either way (21 rows leaf vs 2 rows == n_buckets
+    # bucket here); the solve-budget pass owns that guard and the same
+    # test routes the jump through it.
+    "tinyllama-1.1b-reduced-bucket": {
+        "train_step": {"eqns": 850},        # measured 723 (== leaf scope)
+        "dmd_step": {"eqns": 430},          # measured 297 (leaf scope: 309)
+    },
 }
 
 

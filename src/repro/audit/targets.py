@@ -94,7 +94,8 @@ class AuditContext:
         from repro.core import arena as arena_mod
         from repro.core import leafplan, schedule as sched_mod
         return {"plans": leafplan.plan_records(self.plans),
-                "arena": arena_mod.layout_table(self.arena),
+                "arena": arena_mod.layout_table(
+                    self.arena, scope=getattr(self.cfg, "scope", "leaf")),
                 "groups": sched_mod.schedule_records(self.groups)}
 
 

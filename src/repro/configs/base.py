@@ -195,6 +195,31 @@ class DMDConfig:
                                     # Residency only engages for optimizers
                                     # whose moments are elementwise
                                     # (train/step.py::RESIDENT_OPTIMIZERS).
+    scope: str = "leaf"             # leaf | bucket — the DMD system
+                                    # granularity (DESIGN.md §9). "leaf"
+                                    # (default) fits one operator per system
+                                    # (one per leaf / stacked layer) — the
+                                    # bit-exact legacy route. "bucket" fits
+                                    # ONE shared Koopman operator per arena
+                                    # bucket over the concatenated bucket
+                                    # state: the bucket Gram is the
+                                    # segment-SUM of the per-system Grams
+                                    # (pad lanes are zero, every segment
+                                    # shares the bucket's slot schedule, so
+                                    # the sum IS the concatenated-state
+                                    # Gram), the jump solves n_buckets
+                                    # systems per group instead of n_leaves
+                                    # (eig host-callback batches shrink
+                                    # identically), and the combine
+                                    # broadcasts one coefficient vector per
+                                    # bucket. Cross-layer modes become
+                                    # expressible (Turjeman et al.;
+                                    # Manojlović et al., PAPERS.md).
+                                    # System-sharded buckets (sys_axes) stay
+                                    # per-system either way — collapsing
+                                    # them would need a cross-shard psum
+                                    # over the stack axis. Checkpoints stay
+                                    # leaf-wise on disk in both scopes.
     kernel_route: str = "auto"      # auto | pallas_flat | pallas_shard_map |
                                     # dot_general: force the per-leaf kernel
                                     # route in core/leafplan.py. "auto" picks

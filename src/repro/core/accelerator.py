@@ -47,7 +47,20 @@ columns (group / m / phase):
 adapted horizon lives under; `energy` shows the controller-mode
 cumulative-energy rank target, "-" while the tol mask rules; `arena` /
 `off` show each leaf's packed-bucket assignment and lane offset —
-core/arena.py, DESIGN.md §7 — "-" for leaves kept on the per-leaf route.)
+core/arena.py, DESIGN.md §7 — "-" for leaves kept on the per-leaf route;
+`scope` shows the leaf's DMD granularity under cfg.scope — "bucket" when
+its bucket fits ONE shared Koopman operator over the concatenated bucket
+state, "leaf" otherwise — DESIGN.md §9.)
+
+Bucket-scope Koopman DMD (cfg.scope="bucket", DESIGN.md §9): each arena
+bucket becomes ONE DMD system — the streaming update writes the (m, m)
+segment-summed bucket Gram directly (same segmented kernels, collapsed
+block table), the jump solves n_buckets coefficient systems per group
+instead of n_leaves (eig host-callback batches shrink identically), and
+the combine broadcasts one coefficient row per bucket. `spectrum_table()`
+renders the per-bucket Koopman eigenvalue magnitudes / mode decay rates
+as a convergence diagnostic (comparable across scopes — leaf scope
+segment-sums its Grams first). Default "leaf" is bit-exact legacy.
 
 Packed arenas (core/arena.py, DESIGN.md §7): with cfg.arena (default on)
 all compatible leaves of a schedule group are packed into contiguous
@@ -329,6 +342,14 @@ class DMDAccelerator:
         return self._plans
 
     @property
+    def scope(self) -> str:
+        """The DMD system granularity (DESIGN.md §9): "leaf" (default,
+        bit-exact legacy — one operator per leaf/stacked layer) or
+        "bucket" (one shared Koopman operator per arena bucket; the jump's
+        solve batch is n_buckets, not n_leaves)."""
+        return getattr(self.cfg, "scope", "leaf")
+
+    @property
     def arena_on(self) -> bool:
         """Packed-arena route active? (core/arena.py, DESIGN.md §7).
         Off (``dmd.arena=False``) = the per-leaf route everywhere — the
@@ -359,14 +380,77 @@ class DMDAccelerator:
         """Audited dispatch-table dump per selected leaf: kernel route,
         schedule group / m / s / phase / energy, stack dims, shapes, the
         packed-arena assignment (`arena` = bucket key, `off` = the leaf's
-        lane offset in the bucket — "-" for per-leaf-route leaves), and the
-        PartitionSpec / psum axes. Needs the plans built — pass `params`
-        on first use."""
+        lane offset in the bucket — "-" for per-leaf-route leaves), the
+        leaf's DMD `scope` ("bucket" when its bucket fits one shared
+        Koopman operator under cfg.scope — DESIGN.md §9; "leaf"
+        otherwise), and the PartitionSpec / psum axes. Needs the plans
+        built — pass `params` on first use."""
         if params is not None:
             self.plans_for(params)
         return leafplan.plan_table(
             self._plans, self._arena_table(),
-            native=bool(getattr(self.cfg, "arena_native", True)))
+            native=bool(getattr(self.cfg, "arena_native", True)),
+            scope=self.scope)
+
+    def spectrum_table(self, buffers: PyTree,
+                       grams: Optional[PyTree] = None) -> str:
+        """Per-bucket Koopman spectrum dump — the convergence diagnostic
+        (DESIGN.md §9): for every arena bucket, the DMD eigenvalue
+        magnitudes and per-step mode decay rates of the operator the NEXT
+        jump would fit, computed host-side from the carried (or recomputed)
+        Gram via core/dmd.py::dmd_eigenvalues_from_gram. ``|lambda| < 1``
+        modes decay (the bucket's trajectory is settling — a candidate for
+        the controller's per-group exclusion), ``~ 1`` drift, ``> 1``
+        grow. In bucket scope each row is the bucket's single shared
+        operator; in leaf scope the bucket's per-system Grams are
+        segment-summed first (the identical operator bucket scope would
+        fit), so the diagnostic is comparable across scopes. Off the hot
+        path — pulls O(m^2) Grams per bucket to host."""
+        import numpy as np
+
+        from repro.kernels import arena as ka
+
+        if self._plans is None:
+            raise ValueError("spectrum_table before init: no plan table yet")
+        table = self._arena_table()
+        rows = [("bucket", "scope", "m", "rank", "|lam|max", "|lam|min",
+                 "decay/step", "eigs")]
+        agrams = (arena_mod.split_state(grams)[0]
+                  if arena_mod.is_arena_state(grams) else None)
+        arenas = (arena_mod.split_state(buffers)[0]
+                  if arena_mod.is_arena_state(buffers) else {})
+        for key in sorted(table):
+            b = table[key]
+            g = agrams.get(key) if agrams is not None else None
+            if g is None:
+                g = ka.gram(arenas[key], b.scope_block_sys(self.scope),
+                            b.scope_n_sys(self.scope),
+                            anchor_first=self.cfg.anchor == "first",
+                            anchor_mean=self.cfg.anchor == "mean",
+                            block_n=b.block_n, mesh=b.mesh,
+                            lane_axes=b.lane_axes, sys_axes=b.sys_axes)
+            # diagnostic table, not a step fn: the sync is the point
+            g = np.asarray(jax.device_get(g), np.float64)  # lint: allow-host-sync
+            if not b.bucket_scoped(self.scope):
+                # leaf scope: sum the per-system Grams — the concatenated-
+                # state operator bucket scope would fit (exact identity)
+                g = g.sum(axis=0, keepdims=True)
+            lam = dmd.dmd_eigenvalues_from_gram(g[0], tol=self.cfg.tol)
+            mag = np.abs(lam)
+            scope = "bucket" if b.bucket_scoped(self.scope) else "leaf"
+            if mag.size == 0:
+                rows.append((key, scope, str(b.m), "0", "-", "-", "-", "-"))
+                continue
+            # decay/step: slowest mode's per-step magnitude ratio — how
+            # fast the bucket's dominant dynamics die out (1.0 = drift)
+            top = np.sort(mag)[::-1][:4]
+            rows.append((key, scope, str(b.m), str(mag.size),
+                         f"{mag.max():.4f}", f"{mag.min():.4f}",
+                         f"{mag.max():.4f}",
+                         " ".join(f"{v:.3f}" for v in top)))
+        widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+        return "\n".join("  ".join(v.ljust(w) for v, w in zip(r, widths))
+                         for r in rows)
 
     # ---- schedule ---------------------------------------------------------
     # Per-group cycle after warmup+phase: [cooldown unrecorded steps]
@@ -459,7 +543,7 @@ class DMDAccelerator:
                        for l in jax.tree_util.tree_leaves(buffers))
         return arena_mod.make_state(
             arena_mod.init_arena_grams(self._arena_table(),
-                                       abstract=abstract),
+                                       scope=self.scope, abstract=abstract),
             snap.init_grams(leaf, self.cfg, self._plans))
 
     def record(self, buffers: PyTree, params: PyTree, slot,
@@ -544,7 +628,11 @@ class DMDAccelerator:
         grams = state.dmd_gram
         if arena_mod.is_arena_state(grams):
             agrams, lgrams = arena_mod.split_state(grams)
-            g_by_path = arena_mod.grams_leafwise(table, agrams)
+            # bucket scope: the (1, m, m) summed Grams cannot split per
+            # leaf — grams_leafwise recomputes the per-system stacks from
+            # the snapshot buffers, keeping the disk format leaf-wise
+            g_by_path = arena_mod.grams_leafwise(table, agrams,
+                                                 cfg=self.cfg, arenas=arenas)
             grams = jax.tree_util.tree_map_with_path(
                 fill(g_by_path), lgrams, is_leaf=lambda x: x is None)
         return state._replace(dmd_buffers=bufs, dmd_gram=grams)
@@ -581,7 +669,8 @@ class DMDAccelerator:
         grams = state.dmd_gram
         if grams is not None and self.streaming:
             grams = arena_mod.make_state(
-                arena_mod.grams_from_leafwise(table, by_path_of(grams)),
+                arena_mod.grams_from_leafwise(table, by_path_of(grams),
+                                              scope=self.scope),
                 strip(grams))
         return state._replace(dmd_buffers=bufs, dmd_gram=grams)
 

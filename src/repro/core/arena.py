@@ -192,6 +192,39 @@ class ArenaBucket:
             s.seg_lanes // self.block_n) for s in self.segments]
         return np.concatenate(parts) if parts else np.zeros(0, np.int32)
 
+    # ---- dmd.scope (DESIGN.md §9) -----------------------------------------
+    def bucket_scoped(self, scope: str) -> bool:
+        """True when this bucket carries ONE shared Koopman system under
+        ``scope="bucket"``. System-sharded buckets (``sys_axes``) stay
+        per-system in either scope: each shard owns whole systems, and
+        collapsing them into one would need a cross-shard psum over the
+        stack axis that the lane-psum kernel contract does not emit."""
+        if scope not in ("leaf", "bucket"):
+            raise ValueError(f"unknown dmd.scope {scope!r}")
+        return scope == "bucket" and not self.sys_axes
+
+    def gram_lead(self, scope: str) -> int:
+        """Leading dim of the carried Gram stack (and the bucket's share of
+        the batched coefficient solve) under ``scope``."""
+        return 1 if self.bucket_scoped(scope) else self.n_sys_global
+
+    def scope_block_sys(self, scope: str) -> np.ndarray:
+        """Block -> system table the kernels walk under ``scope``. Bucket
+        scope collapses every block onto system 0: pad lanes are zero and
+        all segments share the bucket's slot schedule, so the EXISTING
+        segmented kernels then compute exactly the concatenated-bucket-state
+        Gram (= the segment-SUM of the per-system Grams) in gram_row/gram,
+        and broadcast the single coefficient row across every block in
+        combine — the fused segment-summed reduction needs no new kernel."""
+        if self.bucket_scoped(scope):
+            return np.zeros(self.n_blocks_local, np.int32)
+        return self.block_sys()
+
+    def scope_n_sys(self, scope: str) -> int:
+        """Shard-local system count the segmented kernels see under
+        ``scope`` (their output's leading dim)."""
+        return 1 if self.bucket_scoped(scope) else self.n_sys
+
     def lane_spec(self) -> P:
         """Spec of the FLAT 1-D lane axis (pack/unpack rows, jump blend):
         system-sharded buckets are sys-major so the flat lane dim shards
@@ -341,16 +374,20 @@ def arena_paths(table: Dict[str, ArenaBucket]) -> frozenset:
     return frozenset(s.path for b in table.values() for s in b.segments)
 
 
-def layout_table(table: Dict[str, ArenaBucket]) -> list:
+def layout_table(table: Dict[str, ArenaBucket],
+                 scope: str = "leaf") -> list:
     """JSON-able rows of the packed-arena layout — the static-audit export
     consumed by ``repro.audit`` (arena-layout pass) and the AUDIT_*.json
     artifact: one dict per bucket carrying the offset/length table the
-    segmented kernels index by."""
+    segmented kernels index by. ``scope`` stamps each bucket's effective
+    DMD granularity and solve share (``n_solve = gram_lead(scope)``)."""
     out = []
     for key in sorted(table):
         b = table[key]
         out.append({
             "key": b.key, "group": b.group, "m": b.m,
+            "scope": "bucket" if b.bucket_scoped(scope) else "leaf",
+            "n_solve": b.gram_lead(scope),
             "block_n": b.block_n, "n_sys": b.n_sys,
             "n_sys_global": b.n_sys_global,
             "n_lanes_local": b.n_lanes_local, "n_lanes": b.n_lanes,
@@ -394,11 +431,13 @@ def init_arena_buffers(table: Dict[str, ArenaBucket], cfg,
     return out
 
 
-def init_arena_grams(table: Dict[str, ArenaBucket], abstract: bool = False
-                     ) -> Dict[str, Any]:
+def init_arena_grams(table: Dict[str, ArenaBucket], scope: str = "leaf",
+                     abstract: bool = False) -> Dict[str, Any]:
+    """Per-bucket Gram stacks: (n_sys_global, m, m) in leaf scope, the
+    single (1, m, m) shared-operator Gram in bucket scope (DESIGN.md §9)."""
     out = {}
     for key, b in table.items():
-        shape = (b.n_sys_global, b.m, b.m)
+        shape = (b.gram_lead(scope), b.m, b.m)
         out[key] = (jax.ShapeDtypeStruct(shape, jnp.float32) if abstract
                     else jnp.zeros(shape, jnp.float32))
     return out
@@ -575,9 +614,16 @@ def update_grams(agrams: Dict[str, jnp.ndarray],
     """Streaming-Gram maintenance over whole buckets: ONE segmented
     gram_row launch per bucket emits every system's row, then one masked
     row+column write per bucket (set_gram_row batches over systems). The
-    just-written arena row doubles as the rhs, so no second pack pass."""
+    just-written arena row doubles as the rhs, so no second pack pass.
+
+    Under ``cfg.scope="bucket"`` the same launch runs with the collapsed
+    block table (``scope_block_sys``): the kernel's in-place segment
+    accumulation then sums every block's partial into ONE (m,) row — the
+    fused segment-summed reduction that writes the (m, m) bucket Gram
+    directly instead of n_sys per-system Grams."""
     from repro.kernels import arena as ka
 
+    scope = getattr(cfg, "scope", "leaf")
     out = dict(agrams)
     for key, g in agrams.items():
         b = table[key]
@@ -590,7 +636,8 @@ def update_grams(agrams: Dict[str, jnp.ndarray],
         sv = si if si is not None else jnp.maximum(s, 0)
         buf = arenas[key]
         q = jax.lax.dynamic_index_in_dim(buf, sv, 1, keepdims=False)
-        row = ka.gram_row(buf, q, b.block_sys(), b.n_sys,
+        row = ka.gram_row(buf, q, b.scope_block_sys(scope),
+                          b.scope_n_sys(scope),
                           anchor_first=cfg.anchor == "first",
                           block_n=b.block_n, mesh=b.mesh,
                           lane_axes=b.lane_axes, sys_axes=b.sys_axes)
@@ -620,9 +667,17 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
     per-leaf arrays. Missing/None ``agrams`` entries trigger the one-launch
     full Gram recompute (the streaming_gram=False A/B path — also the only
     Gram path for ``anchor=mean`` buckets, whose mean subtraction is fused
-    into the kernel)."""
+    into the kernel).
+
+    Under ``cfg.scope="bucket"`` (DESIGN.md §9) each bucket contributes ONE
+    shared-operator system to the group's batched solve (gram_lead == 1):
+    the solve batch shrinks from n_leaves to n_buckets (eig host-callback
+    rows shrink identically), and the combine broadcasts the bucket's
+    single coefficient row across all its blocks via the collapsed
+    ``scope_block_sys`` table."""
     from repro.kernels import arena as ka
 
+    scope = getattr(cfg, "scope", "leaf")
     by_path = None if resident else _params_by_path(params)
     per_group = getattr(relax, "ndim", 0) == 1
     updates: Dict[str, jnp.ndarray] = {}
@@ -642,7 +697,8 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
         for b in buckets:
             g = agrams.get(b.key) if agrams is not None else None
             if g is None:
-                g = ka.gram(arenas[b.key], b.block_sys(), b.n_sys,
+                g = ka.gram(arenas[b.key], b.scope_block_sys(scope),
+                            b.scope_n_sys(scope),
                             anchor_first=cfg.anchor == "first",
                             anchor_mean=cfg.anchor == "mean",
                             block_n=b.block_n, mesh=b.mesh,
@@ -659,14 +715,25 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
             s_dyn=sd)
         ofs = 0
         for b in buckets:
-            cb = jax.lax.slice_in_dim(c, ofs, ofs + b.n_sys_global, axis=0)
-            rb = jax.lax.slice_in_dim(info["rank"], ofs,
-                                      ofs + b.n_sys_global, axis=0)
-            ofs += b.n_sys_global
+            lead = b.gram_lead(scope)
+            cb = jax.lax.slice_in_dim(c, ofs, ofs + lead, axis=0)
+            rb = jax.lax.slice_in_dim(info["rank"], ofs, ofs + lead, axis=0)
+            ofs += lead
+
+            def seg_rank(seg, b=b, rb=rb):
+                # bucket scope: one shared operator — every segment reports
+                # the bucket's single rank
+                if b.bucket_scoped(scope):
+                    return jnp.mean(rb.astype(jnp.float32))
+                return jnp.mean(jax.lax.slice_in_dim(
+                    rb, seg.sys_start * b.sys_factor,
+                    (seg.sys_start + seg.n_sys) * b.sys_factor, axis=0
+                ).astype(jnp.float32))
+
             buf = arenas[b.key]
-            flat = ka.combine(buf, cb, b.block_sys(), block_n=b.block_n,
-                              mesh=b.mesh, lane_axes=b.lane_axes,
-                              sys_axes=b.sys_axes)
+            flat = ka.combine(buf, cb, b.scope_block_sys(scope),
+                              block_n=b.block_n, mesh=b.mesh,
+                              lane_axes=b.lane_axes, sys_axes=b.sys_axes)
             # Same last line of defense as the per-leaf route: a non-finite
             # BUFFER poisons the combine even under c = e_last (0*inf=NaN);
             # never leave params less finite than the last snapshot.
@@ -676,18 +743,12 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
                 updates[b.key] = flat.astype(
                     jnp.dtype(b.segments[0].param_dtype))
                 for seg in b.segments:
-                    ranks.append(jnp.mean(jax.lax.slice_in_dim(
-                        rb, seg.sys_start * b.sys_factor,
-                        (seg.sys_start + seg.n_sys) * b.sys_factor, axis=0
-                    ).astype(jnp.float32)))
+                    ranks.append(seg_rank(seg))
                 continue
             for seg, leaf in zip(b.segments, _unpack_row(b, flat)):
                 p = by_path[seg.path]
                 updates[seg.path] = leaf.astype(p.dtype)
-                ranks.append(jnp.mean(jax.lax.slice_in_dim(
-                    rb, seg.sys_start * b.sys_factor,
-                    (seg.sys_start + seg.n_sys) * b.sys_factor, axis=0
-                ).astype(jnp.float32)))
+                ranks.append(seg_rank(seg))
     return updates, ranks
 
 
@@ -711,11 +772,40 @@ def buffers_leafwise(table: Dict[str, ArenaBucket],
 
 
 def grams_leafwise(table: Dict[str, ArenaBucket],
-                   agrams: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
-    """{path: (stack..., m, m) Gram} per arena'd leaf (checkpoint save)."""
+                   agrams: Dict[str, jnp.ndarray], cfg=None,
+                   arenas: Optional[Dict[str, jnp.ndarray]] = None
+                   ) -> Dict[str, Any]:
+    """{path: (stack..., m, m) Gram} per arena'd leaf (checkpoint save).
+
+    The on-disk format is ALWAYS leaf-wise, in both scopes. A bucket-scoped
+    (1, m, m) summed Gram cannot be split back per leaf, so those buckets
+    recompute the per-system Gram stack from the snapshot buffers (one
+    segmented ``ka.gram`` launch per bucket, off the hot path) and slice
+    that — ``grams_from_leafwise`` sums it back to the identical bucket
+    Gram on a bucket-scope restore (pad lanes are zero, segments share the
+    slot schedule, so sum-of-per-system == concatenated-state exactly).
+    Mid-window anchor="first" rows recomputed against the CURRENT anchor
+    may differ from streamed values that used the then-current anchor —
+    the same staleness class snapshots.recompute_grams already repairs on
+    restore. ``cfg`` + ``arenas`` are only needed when a bucket is
+    bucket-scoped (leaf-scope callers may omit them)."""
+    from repro.kernels import arena as ka
+
+    scope = getattr(cfg, "scope", "leaf") if cfg is not None else "leaf"
     out = {}
     for key, g in agrams.items():
         b = table[key]
+        if b.bucket_scoped(scope):
+            if arenas is None or cfg is None:
+                raise ValueError(
+                    "bucket-scoped Grams need the snapshot buffers to "
+                    "rebuild the leaf-wise checkpoint form — pass cfg and "
+                    "arenas")
+            g = ka.gram(arenas[key], b.block_sys(), b.n_sys,
+                        anchor_first=cfg.anchor == "first",
+                        anchor_mean=cfg.anchor == "mean",
+                        block_n=b.block_n, mesh=b.mesh,
+                        lane_axes=b.lane_axes, sys_axes=b.sys_axes)
         for seg in b.segments:
             sub = jax.lax.slice_in_dim(
                 g, seg.sys_start * b.sys_factor,
@@ -751,11 +841,19 @@ def buffers_from_leafwise(table: Dict[str, ArenaBucket],
 
 
 def grams_from_leafwise(table: Dict[str, ArenaBucket],
-                        by_path: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+                        by_path: Dict[str, Any], scope: str = "leaf"
+                        ) -> Dict[str, jnp.ndarray]:
+    """Inverse of grams_leafwise. Bucket-scoped buckets SUM the restored
+    per-system Grams into the (1, m, m) shared-operator Gram — an exact
+    identity (zero pads, shared slot schedule), so leaf-scope checkpoints
+    restore into bucket scope and vice versa, remapped meshes included."""
     out = {}
     for key, b in table.items():
         parts = [jnp.asarray(by_path[s.path], jnp.float32
                              ).reshape(s.n_sys * b.sys_factor, b.m, b.m)
                  for s in b.segments]
-        out[key] = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        g = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        if b.bucket_scoped(scope):
+            g = jnp.sum(g, axis=0, keepdims=True)
+        out[key] = g
     return out

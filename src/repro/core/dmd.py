@@ -516,6 +516,28 @@ def dmd_extrapolate(snapshots: jnp.ndarray, *, s: int, tol: float = 1e-10,
     return jnp.where(jnp.isfinite(w), w, snapshots[-1].astype(w.dtype)), info
 
 
+def dmd_eigenvalues_from_gram(gram: np.ndarray, *,
+                              tol: float = 1e-10) -> np.ndarray:
+    """Spectral diagnostics (host) from an (m, m) Gram alone: the Koopman
+    eigenvalues of the reduced operator the next jump would fit. This is
+    the Gram-side half of ``dmd_eigenvalues`` factored out so the carried
+    streaming Gram (per-system or segment-summed bucket scope) feeds the
+    spectrum diagnostic without touching the O(m*n) snapshot data
+    (DMDAccelerator.spectrum_table, DESIGN.md §9). The Gram must already
+    be in the anchored form the caller maintains."""
+    g_np = np.asarray(gram, np.float64)
+    g_lag, g_cross = g_np[:-1, :-1], g_np[:-1, 1:]
+    lam, v = np.linalg.eigh(g_lag)
+    sig = np.sqrt(np.maximum(lam, 0.0))
+    mask = sig > tol * max(sig.max(), 1e-300)
+    if not mask.any():
+        return np.zeros(0, np.complex128)
+    inv = np.where(mask, 1.0 / np.where(mask, sig, 1.0), 0.0)
+    atilde = (inv[:, None] * (v.T @ g_cross @ v)) * inv[None, :]
+    atilde = atilde[np.ix_(mask, mask)]
+    return np.linalg.eigvals(atilde)
+
+
 def dmd_eigenvalues(snapshots: jnp.ndarray, *, tol: float = 1e-10,
                     anchor: str = "none") -> np.ndarray:
     """Spectral diagnostics (host): DMD eigenvalues of a snapshot trajectory."""
@@ -524,12 +546,4 @@ def dmd_eigenvalues(snapshots: jnp.ndarray, *, tol: float = 1e-10,
         s_np = s_np - s_np[:1]
     elif anchor == "mean":
         s_np = s_np - s_np.mean(axis=0, keepdims=True)
-    gram = s_np @ s_np.T
-    g_lag, g_cross = gram[:-1, :-1], gram[:-1, 1:]
-    lam, v = np.linalg.eigh(g_lag)
-    sig = np.sqrt(np.maximum(lam, 0.0))
-    mask = sig > tol * max(sig.max(), 1e-300)
-    inv = np.where(mask, 1.0 / np.where(mask, sig, 1.0), 0.0)
-    atilde = (inv[:, None] * (v.T @ g_cross @ v)) * inv[None, :]
-    atilde = atilde[np.ix_(mask, mask)]
-    return np.linalg.eigvals(atilde)
+    return dmd_eigenvalues_from_gram(s_np @ s_np.T, tol=tol)

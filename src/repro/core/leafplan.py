@@ -282,7 +282,7 @@ def plan_records(plans: PyTree) -> List[dict]:
 
 
 def plan_table(plans: PyTree, arena: Optional[dict] = None,
-               native: bool = False) -> str:
+               native: bool = False, scope: str = "leaf") -> str:
     """Human-readable audit dump of the whole dispatch table (kernel route
     + schedule group / window / horizon / phase per selected leaf; the
     `energy` column is the group's controller-mode cumulative-energy rank
@@ -295,17 +295,21 @@ def plan_table(plans: PyTree, arena: Optional[dict] = None,
     accelerator) fills the `resident` column: "y" for packed leaves whose
     params live IN the bucket buffer during Trainer.fit (DESIGN.md §7),
     "n" for packed-but-copied (the PR-5 pack route), "-" for per-leaf
-    leaves."""
+    leaves. `scope` (cfg.dmd.scope) fills the `scope` column: "bucket"
+    for leaves whose bucket fits ONE shared Koopman operator over the
+    concatenated bucket state (DESIGN.md §9), "leaf" for per-system
+    leaves (including sys-sharded buckets, which never collapse)."""
     seg_of = {}
     for b in (arena or {}).values():
+        sc = "bucket" if b.bucket_scoped(scope) else "leaf"
         for s in b.segments:
-            seg_of[s.path] = (b.key, s.lane_start)
+            seg_of[s.path] = (b.key, s.lane_start, sc)
     rows = [("path", "route", "group", "m", "s", "phase", "energy", "stack",
              "shape", "flat_n", "block_n", "arena", "off", "resident",
-             "spec", "psum")]
+             "scope", "spec", "psum")]
     for p in plan_entries(plans):
         sched = p.sched
-        akey, aoff = seg_of.get(p.path, ("-", "-"))
+        akey, aoff, asc = seg_of.get(p.path, ("-", "-", "leaf"))
         res = "-" if akey == "-" else ("y" if native else "n")
         rows.append((p.path, p.route,
                      sched.name if sched is not None else str(p.group),
@@ -316,7 +320,7 @@ def plan_table(plans: PyTree, arena: Optional[dict] = None,
                       if sched is not None and sched.energy > 0 else "-"),
                      str(p.stack_dims),
                      "x".join(map(str, p.shape)), str(p.flat_size),
-                     str(p.block_n), akey, str(aoff), res,
+                     str(p.block_n), akey, str(aoff), res, asc,
                      str(p.param_spec), ",".join(p.psum_axes()) or "-"))
     widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
     lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()

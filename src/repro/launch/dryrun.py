@@ -52,10 +52,11 @@ def scan_trip_counts(model: LanguageModel):
 
 def build_step(acfg, shape, mesh, scan_layers: bool = True):
     """Returns (fn, example_args, in_shardings, model, donate, info) for
-    one cell; ``info`` is a dict of cell metadata (currently the train
-    cell's packed-arena bucket count, DESIGN.md §7 — None for serving
-    cells)."""
-    info = {"arena_buckets": None}
+    one cell; ``info`` is a dict of cell metadata (the train cell's
+    packed-arena bucket count, DESIGN.md §7, plus the dmd.scope and the
+    number of coefficient solves one jump costs under it, DESIGN.md §9 —
+    None for serving cells)."""
+    info = {"arena_buckets": None, "dmd_scope": None, "jump_solves": None}
     mc = acfg.model
     model = LanguageModel(mc, chunk_k=min(1024, shape.seq_len),
                           remat=acfg.parallel.remat, scan_layers=scan_layers,
@@ -85,7 +86,13 @@ def build_step(acfg, shape, mesh, scan_layers: bool = True):
                                           arena=acc.arena_for(params))
         step = make_train_step(model, acfg, mesh=mesh,
                                global_batch=shape.global_batch, acc=acc)
-        info["arena_buckets"] = len(acc.arena_for(params))
+        table = acc.arena_for(params)
+        info["arena_buckets"] = len(table)
+        info["dmd_scope"] = acc.scope
+        # bucket scope: one dmd_coefficients system per bucket, not per
+        # leaf — this is the batched-solve row count a full jump traces
+        info["jump_solves"] = sum(
+            b.gram_lead(acc.scope) for b in table.values())
         # third arg = the step index (the per-group DMD slot vector is
         # derived from it in-trace — train/step.py)
         args = (state, batch, jax.ShapeDtypeStruct((), jnp.int32))
@@ -198,6 +205,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
                 # packed-arena audit (DESIGN.md §7): how many bucket
                 # launches the DMD data passes cost per recorded step
                 "dmd_arena_buckets": info["arena_buckets"],
+                # bucket-scope audit (DESIGN.md §9): which Koopman scope
+                # the cell trains under and how many coefficient solves
+                # (batched eig callback rows) one full jump costs
+                "dmd_scope": info["dmd_scope"],
+                "dmd_jump_solves": info["jump_solves"],
             })
             print(f"[ok] {arch} {shape_name} {mesh_kind}: "
                   f"lower {t_lower:.0f}s compile {t_compile:.0f}s "

@@ -33,6 +33,24 @@ def count_eqns(jaxpr, pred: Optional[Callable] = None) -> int:
     return n
 
 
+def sum_eqns(jaxpr, weight: Callable) -> int:
+    """Sum ``weight(eqn) -> int`` over every equation, recursing exactly
+    like count_eqns. Used where the budget lives in an aval's BATCH dim,
+    not the equation count — e.g. one batched eigh over an (n, m, m) Gram
+    stack is one equation but n coefficient solves (DESIGN.md §9)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += int(weight(eqn))
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):                    # ClosedJaxpr
+                n += sum_eqns(v.jaxpr, weight)
+            elif isinstance(v, (list, tuple)):
+                for vv in v:
+                    if hasattr(vv, "jaxpr"):
+                        n += sum_eqns(vv.jaxpr, weight)
+    return n
+
+
 def count_launch_ops(jaxpr) -> int:
     """Kernel-launch proxy: equations whose primitive is a data-pass op
     (see LAUNCH_PRIMS)."""

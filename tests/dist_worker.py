@@ -373,6 +373,40 @@ def run_arena_sharded():
                        for b in jax.tree_util.tree_leaves(bufs["__arena__"]))
         assert max_ag < smallest, (max_ag, smallest)
         print("ARENA_AG_MAX_BYTES", max_ag, "SMALLEST_BUF", smallest)
+
+        # Bucket scope on LANE-SHARDED buckets (DESIGN.md §9): the same
+        # trajectory under scope="bucket" — each lane-sharded bucket's
+        # (1, m, m) Gram must equal the leaf-scope Gram stack summed over
+        # systems (the segment-sum identity, with the shard-local partial
+        # rows psum'd over the SAME lane axes), and the jump stays finite.
+        # The record+update HLO keeps the no-buffer-sized-all-gather ban.
+        acc_bk = DMDAccelerator(_dc.replace(cfg, scope="bucket"), mesh=mesh,
+                                stack_dims=stack_dims)
+        bufs_bk, grams_bk, newp_bk, _ = run(acc_bk)
+        err_bg = 0.0
+        for key in sorted(table):
+            b_ = table[key]
+            gb = grams_bk["__arena__"][key]
+            gl = grams["__arena__"][key]
+            if b_.bucket_scoped("bucket"):
+                assert gb.shape == (1, m, m), (key, gb.shape)
+                ref = jnp.sum(gl, axis=0, keepdims=True)
+            else:                       # sys-sharded carve-out: per-system
+                assert gb.shape == gl.shape, (key, gb.shape)
+                ref = gl
+            err_bg = max(err_bg, float(jnp.max(jnp.abs(gb - ref)))
+                         / max(float(jnp.max(jnp.abs(ref))), 1.0))
+        for x in jax.tree_util.tree_leaves(newp_bk):
+            assert bool(jnp.isfinite(x).all())
+        hlo_bk = jax.jit(
+            lambda b, g, p, t: acc_bk.record(b, p, t, g)).lower(
+            bufs_bk, grams_bk, params,
+            jnp.asarray(acc_bk.slots(2))).compile().as_text()
+        max_ag_bk = max_allgather_bytes(hlo_bk)
+        assert max_ag_bk < smallest, (max_ag_bk, smallest)
+        print("ARENA_BUCKET_GRAM_ERR", f"{err_bg:.2e}")
+        print("ARENA_BUCKET_AG_MAX_BYTES", max_ag_bk,
+              "SMALLEST_BUF", smallest)
     print("ARENA_SHARDED_OK")
 
 

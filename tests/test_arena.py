@@ -440,6 +440,251 @@ def test_plan_table_shows_arena_columns():
 
 
 # ---------------------------------------------------------------------------
+# Bucket-scope Koopman DMD (ISSUE 8 tentpole, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def test_bucket_scope_single_system_bucket_bitexact_leaf():
+    """A single-segment single-system bucket is the degenerate case where
+    the two scopes are the SAME program: the collapsed block->system table
+    is already all zeros and n_sys is already 1, so bucket scope must be
+    bit-exact with leaf scope — params, buffers, and Grams."""
+    rng = np.random.default_rng(23)
+    sizes = {"w": (8, 25)}
+    params = _int_params(rng, sizes)
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg()
+    acc_l, p_l, bufs_l, grams_l = _run_cycles(cfg, params, deltas, 9,
+                                              quantize=True)
+    acc_b, p_b, bufs_b, grams_b = _run_cycles(
+        dataclasses.replace(cfg, scope="bucket"), params, deltas, 9,
+        quantize=True)
+    (b,) = acc_b.arena_for(params).values()
+    assert b.bucket_scoped("bucket") and b.n_sys == 1
+    np.testing.assert_array_equal(np.asarray(p_b["w"]), np.asarray(p_l["w"]))
+    for key in bufs_l["__arena__"]:
+        np.testing.assert_array_equal(
+            np.asarray(bufs_b["__arena__"][key]),
+            np.asarray(bufs_l["__arena__"][key]), err_msg=key)
+        np.testing.assert_array_equal(
+            np.asarray(grams_b["__arena__"][key]),
+            np.asarray(grams_l["__arena__"][key]), err_msg=key)
+
+
+def test_bucket_scope_gram_is_segment_sum_across_wraps():
+    """The streaming bucket Gram under scope="bucket" IS the segment-sum
+    of the per-segment Grams (pad lanes are zero and all segments share
+    one slot schedule, DESIGN.md §9): after the ring wraps, the (1, m, m)
+    bucket Gram equals both (a) the leaf-scope run's Gram stack summed
+    over systems and (b) a dot_general oracle on the anchored leaf-wise
+    snapshots. Integer trajectories make every fp32 sum exact in any
+    association order, so (a) is bit-exact. 8 steps with m=4 wraps the
+    ring once and ends at a window-complete point, where the streaming
+    Gram equals the full anchored recompute (the §2 invariant) and the
+    oracle (b) is well-defined."""
+    rng = np.random.default_rng(29)
+    sizes = {"a": (7,), "b": (10, 13), "c": (333,), "d": (2, 5, 6)}
+    params = _int_params(rng, sizes)
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg()
+    acc_l, p_l, bufs_l, grams_l = _run_cycles(cfg, params, deltas, 8,
+                                              quantize=True)
+    acc_b, p_b, bufs_b, grams_b = _run_cycles(
+        dataclasses.replace(cfg, scope="bucket"), params, deltas, 8,
+        quantize=True)
+
+    (key,) = grams_b["__arena__"]
+    gb = np.asarray(grams_b["__arena__"][key])
+    assert gb.shape == (1, cfg.m, cfg.m)
+    # (a) segment-sum of the leaf-scope Gram stack, bit-exact
+    gl = np.asarray(grams_l["__arena__"][key]).sum(axis=0, keepdims=True)
+    np.testing.assert_array_equal(gb, gl)
+
+    # (b) dot_general oracle over the anchored leaf-wise snapshots: the
+    # concatenated-bucket-state Gram. Buffers are scope-independent, so
+    # the bucket run's leaf-wise view supplies the snapshot matrix.
+    from repro.train.state import TrainState
+    lw = acc_b.state_leafwise(TrainState(
+        p_b, None, jnp.zeros((), jnp.int32), bufs_b, grams_b))
+    rows = []
+    for k in sorted(sizes):
+        x = np.asarray(lw.dmd_buffers[k], np.float32)
+        x = x.reshape(cfg.m, -1)                  # (m, flat leaf)
+        rows.append(x - x[0])                     # anchor="first"
+    d = np.concatenate(rows, axis=1)              # (m, sum of lanes)
+    np.testing.assert_array_equal(gb[0], d @ d.T)
+
+
+def test_bucket_scope_bf16_gram_upcast_false_segment_sum():
+    """bf16 snapshot storage with gram_upcast=False under bucket scope:
+    the (1, m, m) Gram stays fp32 and still equals the segment-sum of the
+    leaf-scope Gram stack (same f32-accumulating block kernels, the only
+    change is the collapsed segment reduction) at fp32 ordering noise."""
+    rng = np.random.default_rng(31)
+    sizes = {"w": (24, 9), "v": (130,)}
+    params = {k: jnp.asarray(rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    deltas = {k: jnp.asarray(0.05 * rng.normal(size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg = _cfg(snapshot_dtype="bfloat16", gram_upcast=False, anchor="first",
+               tol=1e-3)
+    _, _, bufs_l, grams_l = _run_cycles(cfg, params, deltas, 4)
+    acc_b, p_b, bufs_b, grams_b = _run_cycles(
+        dataclasses.replace(cfg, scope="bucket"), params, deltas, 4)
+    for key, g in grams_b["__arena__"].items():
+        assert g.dtype == jnp.float32, key
+        assert g.shape[0] == 1, key
+        gl = np.asarray(grams_l["__arena__"][key], np.float32)
+        np.testing.assert_allclose(np.asarray(g)[0], gl.sum(axis=0),
+                                   rtol=1e-5, atol=1e-4, err_msg=key)
+    for k in sizes:
+        assert np.isfinite(np.asarray(p_b[k])).all(), k
+
+
+def test_bucket_scope_tables_and_spectrum():
+    """plan_table / layout_table grow a scope column, the bucket's solve
+    count collapses to 1, and spectrum_table renders one Koopman
+    eigenvalue row per bucket from the shared operator's Gram."""
+    rng = np.random.default_rng(37)
+    sizes = {"w": (16, 16), "b": (48,)}
+    params = _int_params(rng, sizes)
+    cfg = _cfg(scope="bucket")
+    acc = DMDAccelerator(cfg)
+    table = acc.arena_for(params)
+    (b,) = table.values()
+    assert b.gram_lead("bucket") == 1 and b.gram_lead("leaf") == b.n_sys
+    assert (b.scope_block_sys("bucket") == 0).all()
+    (rec,) = arena_mod.layout_table(table, scope="bucket")
+    assert rec["scope"] == "bucket" and rec["n_solve"] == 1
+    (rec_l,) = arena_mod.layout_table(table)          # default: leaf
+    assert rec_l["scope"] == "leaf" and rec_l["n_solve"] == b.n_sys
+    assert "scope" in acc.plan_table(params)
+
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
+    _, _, bufs, grams = _run_cycles(cfg, params, deltas, 4)
+    spec = acc.spectrum_table(bufs, grams)
+    assert "|lam|max" in spec and "decay/step" in spec
+    # leaf scope renders the SAME bucket-summed diagnostic (comparable)
+    acc_l = DMDAccelerator(_cfg())
+    acc_l.plans_for(params)
+    _, _, bufs_l, grams_l = _run_cycles(_cfg(), params, deltas, 4)
+    spec_l = acc_l.spectrum_table(bufs_l, grams_l)
+    assert "|lam|max" in spec_l
+
+    with pytest.raises(ValueError):
+        DMDAccelerator(_cfg()).spectrum_table(bufs)
+
+
+def test_bucket_scope_unknown_scope_raises():
+    params = {"w": jnp.ones((16, 16))}
+    acc = DMDAccelerator(_cfg())
+    (b,) = acc.arena_for(params).values()
+    with pytest.raises(ValueError, match="scope"):
+        b.bucket_scoped("global")
+
+
+def test_checkpoint_interop_bucket_and_leaf_scope(tmp_path):
+    """Checkpoints stay leaf-wise on disk in BOTH scopes (DESIGN.md §9):
+    a bucket-scope run's checkpoint restores bit-exactly into a leaf-scope
+    run (per-leaf Grams recomputed from the buffers at save), and a
+    leaf-scope checkpoint restores into a bucket-scope run (leaf Grams
+    segment-summed at arenaize) — integer trajectories, exact sums. Runs
+    to a window-complete point (8 steps, m=4): the bucket-scope save
+    RECOMPUTES the leaf-wise Grams from the buffers, which matches the
+    streaming Gram exactly there (mid-window the streaming rows carry the
+    previous window's products and the Trainer rebuilds Grams on restore
+    anyway — snapshots.recompute_grams)."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.train.state import TrainState
+
+    rng = np.random.default_rng(41)
+    sizes = {"a": (40,), "b": (10, 13), "c": (333,)}
+    params = _int_params(rng, sizes)
+    deltas = {k: jnp.asarray(rng.integers(-2, 3, size=s), jnp.float32)
+              for k, s in sizes.items()}
+    cfg_b = _cfg(scope="bucket")
+    cfg_l = _cfg()
+    acc_b, p_b, bufs_b, grams_b = _run_cycles(cfg_b, params, deltas, 8,
+                                              quantize=True)
+    acc_l, p_l, bufs_l, grams_l = _run_cycles(cfg_l, params, deltas, 8,
+                                              quantize=True)
+
+    # bucket-scope save -> leaf-scope restore: the leaf-wise Grams on disk
+    # must equal the leaf-scope run's (buffers are scope-independent and
+    # the integer sums are exact)
+    st_b = TrainState(p_b, None, jnp.asarray(8, jnp.int32), bufs_b, grams_b)
+    save_checkpoint(tmp_path / "bucket", acc_b.state_leafwise(st_b), 8)
+    acc_t = DMDAccelerator(cfg_l)
+    bufs_t = acc_t.init(params)
+    st_t = TrainState(params, None, jnp.asarray(0, jnp.int32), bufs_t,
+                      acc_t.init_grams(bufs_t))
+    back = restore_checkpoint(tmp_path / "bucket",
+                              acc_t.state_leafwise(st_t))
+    packed = acc_t.state_arenaize(back)
+    for key in grams_l["__arena__"]:
+        np.testing.assert_array_equal(
+            np.asarray(packed.dmd_gram["__arena__"][key]),
+            np.asarray(grams_l["__arena__"][key]), err_msg=key)
+        np.testing.assert_array_equal(
+            np.asarray(packed.dmd_buffers["__arena__"][key]),
+            np.asarray(bufs_l["__arena__"][key]), err_msg=key)
+
+    # leaf-scope save -> bucket-scope restore: arenaize segment-sums the
+    # leaf-wise Grams into the (1, m, m) bucket stack
+    st_l = TrainState(p_l, None, jnp.asarray(8, jnp.int32), bufs_l, grams_l)
+    save_checkpoint(tmp_path / "leaf", acc_l.state_leafwise(st_l), 8)
+    acc_r = DMDAccelerator(cfg_b)
+    bufs_r = acc_r.init(params)
+    st_r = TrainState(params, None, jnp.asarray(0, jnp.int32), bufs_r,
+                      acc_r.init_grams(bufs_r))
+    rback = restore_checkpoint(tmp_path / "leaf",
+                               acc_r.state_leafwise(st_r))
+    rpacked = acc_r.state_arenaize(rback)
+    for key in grams_b["__arena__"]:
+        g = rpacked.dmd_gram["__arena__"][key]
+        assert g.shape[0] == 1, key
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(grams_b["__arena__"][key]),
+            err_msg=key)
+
+
+def test_bucket_scope_sys_sharded_bucket_stays_per_system():
+    """The carve-out: a system-sharded bucket (sys_axes nonempty) keeps
+    per-system operators even under scope="bucket" — collapsing it would
+    need a cross-shard psum over the sys axes the kernels never emit."""
+    import numpy as _np
+    from repro.distributed.sharding import set_rule_overrides
+
+    class _FakeMesh:
+        axis_names = ("data", "model")
+        devices = _np.empty((2, 4))
+
+    set_rule_overrides([(r"stacked", ("fsdp", None, "tp"))])
+    try:
+        cfg = _cfg(scope="bucket")
+        params = {"stacked": jnp.ones((4, 64, 128)),
+                  "w": jnp.ones((64, 128))}
+        acc = DMDAccelerator(cfg, mesh=_FakeMesh(),
+                             stack_dims={"stacked": 1, "w": 0})
+        table = acc.arena_for(params)
+        sys_b = [b for b in table.values() if b.sys_axes]
+        lane_b = [b for b in table.values() if not b.sys_axes]
+        assert sys_b and lane_b
+        for b in sys_b:
+            assert not b.bucket_scoped("bucket")
+            assert b.gram_lead("bucket") == b.n_sys_global
+            np.testing.assert_array_equal(b.scope_block_sys("bucket"),
+                                          b.block_sys())
+        for b in lane_b:
+            assert b.bucket_scoped("bucket")
+            assert b.gram_lead("bucket") == 1
+    finally:
+        set_rule_overrides(None)
+
+
+# ---------------------------------------------------------------------------
 # Eligibility (ISSUE 7 tentpole): mean-anchor and sharded-stack buckets
 # ---------------------------------------------------------------------------
 

@@ -26,8 +26,8 @@ def test_clean_reduced_mlp_audit_is_green():
     assert report.ok, report.render()
     assert {r.name for r in report.results} == {
         "donation-alias", "collective-budget", "trace-budget",
-        "dtype-flow", "host-callback-in-hot-loop", "arena-layout",
-        "arena-residency", "schedule-conflict"}
+        "solve-budget", "dtype-flow", "host-callback-in-hot-loop",
+        "arena-layout", "arena-residency", "schedule-conflict"}
 
 
 def test_drop_donation_bites():
@@ -71,15 +71,26 @@ def test_force_allgather_needs_mesh():
                   passes=["collective-budget"])
 
 
+def test_force_leaf_solves_bites():
+    """A bucket-scope build whose jump still batches one coefficient
+    system per leaf must trip the solve-budget pass: the eigh/callback
+    batch rows exceed the one-solve-per-bucket budget (DESIGN.md §9)."""
+    report = run_audit("pollutant-mlp", reduced=True,
+                       mutate="force-leaf-solves", passes=["solve-budget"])
+    assert _failed(report) == {"solve-budget"}, report.render()
+    assert any("per-jump solve budget" in v.detail
+               for v in report.violations)
+
+
 def test_mutation_registry_is_complete():
     assert list_mutations() == ["drop-donation", "force-allgather",
-                                "force-pack", "misalign-arena",
-                                "overlap-groups"]
+                                "force-leaf-solves", "force-pack",
+                                "misalign-arena", "overlap-groups"]
     for name in list_mutations():
         m = get_mutation(name)
         assert m.expect_fail in ("donation-alias", "collective-budget",
-                                 "arena-layout", "arena-residency",
-                                 "schedule-conflict")
+                                 "solve-budget", "arena-layout",
+                                 "arena-residency", "schedule-conflict")
 
 
 @pytest.mark.slow

@@ -43,6 +43,13 @@ def test_sharded_arena_buckets_match_perleaf_oracle():
     ag = next(l.split() for l in out.splitlines()
               if l.startswith("ARENA_AG_MAX_BYTES"))
     assert int(ag[1]) < int(ag[3])
+    # bucket scope on the same sharded build (DESIGN.md §9): segment-sum
+    # Gram identity across shards + the all-gather ban
+    assert float(next(l.split()[1] for l in out.splitlines()
+                      if l.startswith("ARENA_BUCKET_GRAM_ERR"))) < 1e-5
+    bag = next(l.split() for l in out.splitlines()
+               if l.startswith("ARENA_BUCKET_AG_MAX_BYTES"))
+    assert int(bag[1]) < int(bag[3])
 
 
 def test_shard_map_kernels_match_oracle_and_no_allgather():

@@ -125,3 +125,77 @@ def test_transformer_train_step_trace_pinned():
     violations, info = trace_budget(ctx)
     assert violations == [], violations
     assert info["train_step.pin"]["eqns"] == 850
+
+
+def test_transformer_bucket_scope_trace_and_solve_budget_pinned():
+    """The same reduced tinyllama under dmd.scope="bucket" (DESIGN.md §9):
+    the fused step stays eqn-identical (pinned under the
+    "tinyllama-1.1b-reduced-bucket" key) and — the guard eqn counts cannot
+    provide, since the batched eigh is ONE equation in either scope — the
+    jump's solve ROWS collapse to n_buckets, enforced by the solve-budget
+    pass. The leaf-scope jump jaxpr run against the bucket-scope budget
+    must FAIL the same pass (the silent-fallback defect is detectable)."""
+    from repro.audit.passes import solve_budget
+    from repro.train.step import make_dmd_step
+
+    def build(scope):
+        acfg = get_config("tinyllama-1.1b")
+        mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64,
+                     vocab_size=128, n_heads=2, n_kv_heads=1, head_dim=16)
+        acfg = dataclasses.replace(
+            acfg, model=mc,
+            dmd=DMDConfig(m=4, s=10, warmup_steps=4, cooldown_steps=2,
+                          scope=scope),
+            optimizer=OptimizerConfig(name="adam", lr=3e-3),
+            parallel=dataclasses.replace(acfg.parallel, grad_accum=1,
+                                         remat="none"),
+            train=TrainConfig(global_batch=4, seq_len=16))
+        model = LanguageModel(mc, head_tp=False, chunk_k=16)
+        from repro.core.accelerator import DMDAccelerator
+        acc = DMDAccelerator(acfg.dmd, stack_dims=model.param_stack_dims())
+        step = make_train_step(model, acfg, acc=acc)
+        params = model.init(jax.random.PRNGKey(0))
+        from repro.optim import make_optimizer
+        opt = make_optimizer(acfg.optimizer)
+        bufs = acc.init(params)
+        state = TrainState(params, opt.init(params),
+                           jnp.zeros((), jnp.int32), bufs,
+                           acc.init_grams(bufs))
+        batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
+                 "labels": jnp.zeros((4, 16), jnp.int32)}
+        from repro.train.step import state_resident
+        state = state_resident(acc, acfg, state)
+        jx = jax.make_jaxpr(step)(state, batch, jnp.asarray(5, jnp.int32))
+        dstep = make_dmd_step(acfg, acc=acc, model=model)
+        relax = jnp.ones((acc.n_groups,), jnp.float32)
+        jd = jax.make_jaxpr(lambda st, r: dstep(st, r, groups=None))(
+            state, relax)
+        return acfg, acc, params, jx, jd
+
+    acfg, acc, params, jx, jd = build("bucket")
+    ctx = adhoc_context(
+        "tinyllama-1.1b-reduced-bucket", acfg,
+        {"train_step": jaxpr_target("train_step", jx),
+         "dmd_step": jaxpr_target("dmd_step", jd)},
+        plans=acc.plans_for(params), arena=acc.arena_for(params))
+    violations, info = trace_budget(ctx)
+    assert violations == [], violations
+    assert info["train_step.pin"]["eqns"] == 850   # pinned, not skipped
+    assert info["dmd_step.pin"]["eqns"] == 430
+    sv, sinfo = solve_budget(ctx)
+    assert sv == [], sv
+    # the whole point: one batched solve row per bucket (measured 2 here
+    # vs 21 under leaf scope), budget == sum of gram_lead over the table
+    assert sinfo["solve_budget_rows"] == len(acc.arena_for(params))
+    assert sinfo["dmd_step.eigh_rows"] == sinfo["solve_budget_rows"]
+
+    # leaf-scope jump traced into the bucket-scope context: rows explode
+    # past the budget and the pass must bite
+    _, _, _, _, jd_leaf = build("leaf")
+    ctx_bad = adhoc_context(
+        "tinyllama-1.1b-reduced-bucket", acfg,
+        {"dmd_step": jaxpr_target("dmd_step", jd_leaf)},
+        plans=acc.plans_for(params), arena=acc.arena_for(params))
+    bad_v, bad_info = solve_budget(ctx_bad)
+    assert bad_v, bad_info
+    assert any("per-jump solve budget" in v.detail for v in bad_v)
