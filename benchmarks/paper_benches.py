@@ -100,21 +100,97 @@ def fig3_sensitivity(ms=(6, 10, 14), ss=(10, 30, 55), steps=450) -> List[str]:
     return rows
 
 
+def _train_gated(sizes, X, Y, Xval, Yval, Xte, Yte, steps, m=14, s=55,
+                 lr=1e-3):
+    """The validation-gated controller run for fig4 (ISSUE 9): same train
+    rows and step count as `_train`, but jumps are ridge-shrinkable and
+    gated on a DISJOINT validation fold of the SAME teacher (never the
+    training rows, never the test set). Returns (curve, outcome_counts)."""
+    from repro.configs.base import (ArchConfig, ModelConfig, ParallelConfig,
+                                    TrainConfig)
+    from repro.train import Trainer
+
+    dmd = DMDConfig(
+        m=m, s=s, tol=1e-4, warmup_steps=100, cooldown_steps=10,
+        controller=DMDControllerConfig(
+            enabled=True, eval_rows=0, val_gate=True,
+            shrink_levels=(0.5, 0.25), meta_lr=0.05))
+    acfg = ArchConfig(
+        model=ModelConfig(name="pollutant-mlp", family="mlp"), dmd=dmd,
+        optimizer=OptimizerConfig(name="adam", lr=lr),
+        parallel=ParallelConfig(grad_accum=1),
+        train=TrainConfig(global_batch=int(X.shape[0]), seq_len=1),
+        shapes=())
+    trainer = Trainer(_MLPModel(sizes), acfg,
+                      val_batch={"x": Xval, "y": Yval})
+    outcomes = {0: 0, 1: 0, 2: 0}
+
+    def on_m(t, metrics):
+        if "ctrl_outcome" in metrics:
+            outcomes[int(metrics["ctrl_outcome"])] += 1
+
+    batches = iter(lambda: {"x": X, "y": Y}, None)
+    state, curve = trainer.init_state(), []
+    # fit in segments so the curve samples (params at step t) line up with
+    # `_train`'s post-update, post-jump sampling points
+    for t in range(steps):
+        if t % 50 == 0 or t == steps - 1:
+            state = trainer.fit(batches, t + 1, state=state, on_metrics=on_m)
+            curve.append((t, float(mse_loss(state.params, X, Y)),
+                          float(mse_loss(state.params, Xte, Yte))))
+    return curve, outcomes
+
+
 def fig4_curves(steps=600) -> List[str]:
-    """Paper Fig 4: MSE vs epoch, DMD vs baseline (train & test)."""
-    X, Y = _synthetic_regression()
-    Xte, Yte = _synthetic_regression(seed=7, n=150)
+    """Paper Fig 4: MSE vs epoch (train & test) — baseline, the paper's
+    ungated DMD schedule, and the ISSUE 9 validation-gated controller run,
+    all at EQUAL step count.
+
+    ONE teacher generates every split: 600 train rows, a 150-row validation
+    fold (the gate batch) and a 150-row held-out TEST fold, all disjoint.
+    The old bench drew its "test set" from a DIFFERENT teacher seed — an
+    unrelated function, so every run's test MSE rose monotonically with
+    training and the train/test comparison measured distance from an
+    unrelated task, not generalization. Final rows report SIGNED deltas vs
+    baseline with explicit WINS/LOSES labels — the old
+    `fig4_final_ratio,test,0.97x` row formatted a test REGRESSION in the
+    same higher-is-better style as the train speedup, hiding the gap this
+    bench exists to expose. The committed BENCH_fig4.json feeds the
+    deterministic CI guard: gated final test MSE <= baseline at equal
+    steps AND train ratio >= 1.5x.
+    """
+    Xall, Yall = _synthetic_regression(n=900)
+    X, Y = Xall[:600], Yall[:600]
+    Xval, Yval = Xall[600:750], Yall[600:750]
+    Xte, Yte = Xall[750:], Yall[750:]
     sizes = (6, 40, 200, Y.shape[1])
     base, _ = _train(DMDConfig(enabled=False), sizes, X, Y, Xte, Yte, steps)
-    dmd, jumps = _train(DMDConfig(m=14, s=55, tol=1e-4, warmup_steps=100,
-                                  cooldown_steps=10),
-                        sizes, X, Y, Xte, Yte, steps)
-    rows = ["fig4,step,baseline_train,baseline_test,dmd_train,dmd_test"]
-    for (t, btr, bte), (_, dtr, dte) in zip(base, dmd):
-        rows.append(f"fig4,{t},{btr:.5e},{bte:.5e},{dtr:.5e},{dte:.5e}")
-    ratio = base[-1][1] / max(dmd[-1][1], 1e-30)
-    rows.append(f"fig4_final_ratio,train,{ratio:.2f}x,test,"
-                f"{base[-1][2] / max(dmd[-1][2], 1e-30):.2f}x")
+    dmd, _ = _train(DMDConfig(m=14, s=55, tol=1e-4, warmup_steps=100,
+                              cooldown_steps=10),
+                    sizes, X, Y, Xte, Yte, steps)
+    gated, outcomes = _train_gated(sizes, X, Y, Xval, Yval, Xte, Yte, steps)
+    rows = ["fig4,step,baseline_train,baseline_test,dmd_train,dmd_test,"
+            "gated_train,gated_test"]
+    for (t, btr, bte), (_, dtr, dte), (_, gtr, gte) in zip(base, dmd, gated):
+        rows.append(f"fig4,{t},{btr:.5e},{bte:.5e},{dtr:.5e},{dte:.5e},"
+                    f"{gtr:.5e},{gte:.5e}")
+
+    def final_rows(name, run):
+        out = []
+        for split, idx in (("train", 1), ("test", 2)):
+            b, v = base[-1][idx], run[-1][idx]
+            delta = (v - b) / max(b, 1e-30)
+            verdict = "WINS" if v <= b else "LOSES"
+            out.append(f"fig4_final,{split},{name},{v:.5e},baseline,"
+                       f"{b:.5e},delta,{delta:+.1%},{name}_{verdict}")
+        return out
+
+    rows += final_rows("dmd", dmd) + final_rows("gated", gated)
+    rows.append(f"fig4_final_ratio,train,"
+                f"{base[-1][1] / max(dmd[-1][1], 1e-30):.2f}x,gated_train,"
+                f"{base[-1][1] / max(gated[-1][1], 1e-30):.2f}x")
+    rows.append(f"fig4_gate_outcomes,accepts,{outcomes[2]},scaled,"
+                f"{outcomes[1]},rejects,{outcomes[0]}")
     return rows
 
 

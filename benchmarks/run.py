@@ -59,6 +59,14 @@ def bench_kernels() -> list:
     return rows
 
 
+def losing_rows(rows: list) -> list:
+    """Rows that report a LOSING direction (ISSUE 9): suites mark a metric
+    that regressed vs its baseline with an explicit ``_LOSES`` token (e.g.
+    fig4's signed-delta final rows). Surfacing them here keeps a regression
+    from hiding inside a wall of higher-is-better ratios."""
+    return [r for r in rows if "_LOSES" in r]
+
+
 def write_suite(out_dir: Path, suite: str, rows: list, wall_s: float,
                 quick: bool) -> None:
     path = out_dir / f"BENCH_{suite}.json"
@@ -118,8 +126,14 @@ def main():
         t0 = time.time()
         rows = fn()
         write_suite(out_dir, suite, rows, time.time() - t0, args.quick)
+        for r in losing_rows(rows):
+            print(f"# LOSING DIRECTION [{suite}]: {r}")
         all_rows += rows
     print("\n".join(all_rows))
+    losers = losing_rows(all_rows)
+    if losers:
+        print(f"\n# {len(losers)} metric(s) in a LOSING direction — "
+              "see rows above")
     print(f"\n# total bench wall: {time.time() - t_total:.0f}s")
 
 

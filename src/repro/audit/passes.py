@@ -643,6 +643,56 @@ def schedule_conflict(ctx):
             vs.append(Violation(
                 "schedule-conflict", where,
                 f"energy={g.energy} outside [0, 1]"))
+        ridge = float(getattr(g, "ridge", 0.0))
+        if not (ridge >= 0.0 and math.isfinite(ridge)):
+            vs.append(Violation(
+                "schedule-conflict", where,
+                f"ridge={ridge} must be finite and >= 0"))
+
+    # Controller-key clamps (ISSUE 9): the gated step trusts these at
+    # trace time — an unsatisfiable gate or an empty/out-of-range shrink
+    # ladder is a config bug the first jump would hit at runtime.
+    ccfg = getattr(ctx.cfg, "controller", None)
+    if ccfg is not None and getattr(ccfg, "enabled", False):
+        rmax = float(getattr(ccfg, "ridge_max", 0.0))
+        levels = tuple(getattr(ccfg, "shrink_levels", (0.5,)) or ())
+        info["controller"] = {
+            "accept_tol": float(ccfg.accept_tol), "ridge_max": rmax,
+            "shrink_levels": [float(f) for f in levels],
+            "meta_lr": float(getattr(ccfg, "meta_lr", 0.0)),
+            "val_gate": bool(getattr(ccfg, "val_gate", False)),
+        }
+        if float(ccfg.accept_tol) <= -1.0:
+            vs.append(Violation(
+                "schedule-conflict", "controller",
+                f"accept_tol={ccfg.accept_tol} <= -1: the gate can never "
+                "accept a positive-loss jump (every round rolls back)"))
+        if not levels:
+            vs.append(Violation(
+                "schedule-conflict", "controller",
+                "shrink_levels is empty: the SCALED branch has no rungs"))
+        for f in levels:
+            if not 0.0 < float(f) < 1.0:
+                vs.append(Violation(
+                    "schedule-conflict", "controller",
+                    f"shrink_levels entry {f} outside (0, 1)"))
+        if not (rmax >= 0.0 and math.isfinite(rmax)):
+            vs.append(Violation(
+                "schedule-conflict", "controller",
+                f"ridge_max={rmax} must be finite and >= 0"))
+        mlr = float(getattr(ccfg, "meta_lr", 0.0))
+        if not (0.0 <= mlr <= 1.0):
+            vs.append(Violation(
+                "schedule-conflict", "controller",
+                f"meta_lr={mlr} outside [0, 1] (EMA step)"))
+        for g in groups:
+            ridge = float(getattr(g, "ridge", 0.0))
+            if rmax > 0 and ridge > rmax:
+                vs.append(Violation(
+                    "schedule-conflict", f"group[{g.index}:{g.name}]",
+                    f"ridge={ridge} above controller.ridge_max={rmax}: the "
+                    "meta-tuner would clamp it down on the first round",
+                    severity="warning"))
 
     # Overlapping non-exclude rules: first-match-wins makes the second
     # rule dead for every shared leaf — a config bug, not a tiebreak.

@@ -121,22 +121,57 @@ class DMDControllerConfig:
     """
     enabled: bool = False
     eval_rows: int = 32             # held-out microbatch rows for the gate
-                                    # (0 = use the full eval batch)
-    accept_tol: float = 0.0         # accept iff loss_post <= loss_pre *
-                                    # (1 + accept_tol); small positive values
-                                    # tolerate noise-level regressions
+                                    # (0 = use the full eval batch; clamped
+                                    # to the actual eval-batch size — never
+                                    # slices past it)
+    accept_tol: float = 1e-3        # accept iff loss_post <= loss_pre *
+                                    # (1 + accept_tol). The old 0.0 default
+                                    # rejected noise-level TIES: with small
+                                    # eval_rows the gate loss carries fp32
+                                    # sampling noise and a jump that changed
+                                    # nothing real flapped to REJECT. A small
+                                    # positive tol tolerates noise-level
+                                    # regressions (ISSUE 9).
+    val_gate: bool = False          # gate on the trainer's persistent
+                                    # validation split (disjoint from the
+                                    # training stream) even when the caller
+                                    # hands fit() an eval_batch. False keeps
+                                    # the caller's batch — the PR-8 pinned
+                                    # path. Either way the gate NEVER falls
+                                    # back to drawing from the training
+                                    # iterator (train/loop.py).
     grow: float = 1.5               # s_eff multiplier on consecutive full
                                     # accepts (capped at the group's s)
     shrink: float = 0.5             # s_eff multiplier on a rejected jump
     s_min: float = 1.0              # lower bound for the adapted horizon
     relax_floor: float = 0.125      # lower bound for the effective relax
-                                    # scale (halved on every scale-back)
+                                    # scale (scaled down on every scale-back)
     gain_ema: float = 0.8           # EMA decay of the per-jump relative gain
                                     # (loss_pre - loss_final) / loss_pre
     energy: float = 0.995           # target cumulative-energy fraction for
                                     # the POD rank (replaces the global tol
                                     # noise floor while the controller is on;
                                     # per-group override: DMDGroupRule.energy)
+    ridge: float = 0.0              # base Tikhonov shrinkage of the jump
+                                    # solve, RELATIVE to sigma_max^2
+                                    # (core/dmd.py::_ridge_inv_sigma);
+                                    # 0 = the bit-exact legacy solve.
+                                    # Per-group override: DMDGroupRule.ridge.
+    ridge_max: float = 0.1          # clamp for the meta-tuned per-group
+                                    # ridge_eff (controller state)
+    shrink_levels: Tuple[float, ...] = (0.5,)
+                                    # SCALED-branch relax line search: blend
+                                    # fractions tried in order (each blends
+                                    # level*jump + (1-level)*current) after a
+                                    # rejected full jump. The default (0.5,)
+                                    # is the PR-4 single blind halving —
+                                    # bit-exact with the PR-8 gated path.
+    meta_lr: float = 0.0            # > 0 (matpow mode only): after each gate
+                                    # round, backprop the gate-batch loss
+                                    # through the differentiable jump and EMA
+                                    # each jumped group's relax/ridge knobs
+                                    # toward the descent direction (Weiner &
+                                    # Semaan, PAPERS.md). 0 = off (bit-exact).
 
 
 @dataclass(frozen=True)
@@ -147,6 +182,9 @@ class DMDConfig:
     tol: float = 1e-4               # singular-value filter sigma_r/sigma_0 > tol
                                     # (paper: 1e-10 with float64; 1e-4 is the
                                     # fp32 Gram noise floor — see dmd.py)
+    atol: float = 0.0               # ABSOLUTE sigma floor joined to the
+                                    # relative tol/energy mask (pymor-style
+                                    # atol/rtol truncation, dmd.py); 0 = off
     warmup_steps: int = 100         # plain steps before the first snapshot window
     cooldown_steps: int = 10        # unrecorded steps after each jump: lets the
                                     # optimizer moments re-adapt so the next

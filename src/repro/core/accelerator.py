@@ -137,15 +137,17 @@ class LeafJump:
 
 
 def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax,
-                  s_dyn=None):
+                  s_dyn=None, ridge_dyn=None):
     """One leaf of the DMD jump: coefficients from `gram` (the carried
     streaming Gram; recomputed from the buffer when None) + one combine
     pass, both kernel-routed by the leaf's plan. The extrapolation horizon
     `s` is the leaf's GROUP horizon (plan.sched.s) — mixed-window groups
     jump different distances; in controller mode `s_dyn` (a traced scalar,
     the group's adapted horizon) replaces it, with plan.sched.s as the
-    static cap, and the group's energy target replaces the tol mask. Shared
-    by DMDAccelerator.apply and train.step.make_dmd_step."""
+    static cap, the group's energy target replaces the tol mask, and
+    `ridge_dyn` (traced, the controller's meta-tuned shrinkage) overrides
+    the group's static ridge. Shared by DMDAccelerator.apply and
+    train.step.make_dmd_step."""
     from repro.kernels import ops, sharded
 
     nstack = plan.stack_dims
@@ -161,11 +163,13 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax,
                                    upcast=cfg.gram_upcast)
     s = plan.sched.s if plan.sched is not None else cfg.s
     energy = plan.sched.energy if plan.sched is not None else 0.0
+    ridge = plan.sched.ridge if plan.sched is not None else 0.0
     c, info = dmd.dmd_coefficients(
         gram, s=s, tol=cfg.tol, mode=cfg.mode,
         clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor,
         affine=cfg.affine, trust_region=cfg.trust_region, relax=relax,
-        energy=energy, s_dyn=s_dyn)
+        energy=energy, s_dyn=s_dyn, atol=getattr(cfg, "atol", 0.0),
+        ridge=ridge, ridge_dyn=ridge_dyn)
     if plan.route == "pallas_shard_map":
         w = sharded.combine(buf, c, plan)
     elif plan.route == "pallas_flat":
@@ -182,7 +186,8 @@ def dmd_leaf_jump(cfg, plan: leafplan.LeafPlan, p, buf, gram, relax,
 
 def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
               grams: PyTree, relax, groups: Optional[Sequence[int]] = None,
-              s_vec=None, arena=None) -> Tuple[PyTree, jnp.ndarray]:
+              s_vec=None, arena=None,
+              ridge_vec=None) -> Tuple[PyTree, jnp.ndarray]:
     """Whole-pytree DMD jump keyed by the plan table: returns (new_params,
     mean_rank). Excluded leaves (plan None) pass through untouched.
 
@@ -194,6 +199,9 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
     ``plan.group`` (each group anneals on its own round counter). `s_vec`
     (controller mode) is a traced per-group (n_groups,) int vector of
     adapted horizons — None keeps each group's static configured s.
+    `ridge_vec` (controller mode) is a traced per-group (n_groups,) float
+    vector of meta-tuned ridge shrinkages — None keeps each group's static
+    schedule ridge.
 
     `arena` (the accelerator's bucket table, core/arena.py) serves every
     arena'd leaf through the packed route: one batched coefficient solve
@@ -230,7 +238,7 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
                          if arena_mod.is_arena_state(grams) else (None, grams))
         arena_updates, ranks = arena_mod.jump(
             cfg, arena, params, arenas, agrams, relax, groups=gset,
-            s_vec=s_vec, resident=resident)
+            s_vec=s_vec, resident=resident, ridge_vec=ridge_vec)
         ranks = list(ranks)
 
     def one(plan, p, buf, g):
@@ -240,7 +248,9 @@ def jump_tree(cfg, plans: PyTree, params: PyTree, buffers: PyTree,
             return p
         r = relax[plan.group] if per_group else relax
         sd = None if s_vec is None else s_vec[plan.group]
-        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, r, s_dyn=sd)
+        rd = None if ridge_vec is None else ridge_vec[plan.group]
+        w, rank = dmd_leaf_jump(cfg, plan, p, buf, g, r, s_dyn=sd,
+                                ridge_dyn=rd)
         return LeafJump(w, rank)
 
     out = jax.tree_util.tree_map(one, plans, params, buffers, grams,

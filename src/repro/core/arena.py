@@ -653,7 +653,7 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
          arenas: Dict[str, jnp.ndarray],
          agrams: Optional[Dict[str, jnp.ndarray]], relax,
          groups: Optional[frozenset] = None, s_vec=None,
-         resident: bool = False
+         resident: bool = False, ridge_vec=None
          ) -> Tuple[Dict[str, jnp.ndarray], List[jnp.ndarray]]:
     """DMD jump over every arena'd leaf of the jumping groups.
 
@@ -708,11 +708,13 @@ def jump(cfg, table: Dict[str, ArenaBucket], params: PyTree,
         sched = buckets[0].sched
         r = relax[gi] if per_group else relax
         sd = None if s_vec is None else s_vec[gi]
+        rd = None if ridge_vec is None else ridge_vec[gi]
         c, info = dmd_math.dmd_coefficients(
             gcat, s=sched.s, tol=cfg.tol, mode=cfg.mode,
             clamp_eigs=cfg.clamp_eigs, anchor=cfg.anchor, affine=cfg.affine,
             trust_region=cfg.trust_region, relax=r, energy=sched.energy,
-            s_dyn=sd)
+            s_dyn=sd, atol=getattr(cfg, "atol", 0.0),
+            ridge=getattr(sched, "ridge", 0.0), ridge_dyn=rd)
         ofs = 0
         for b in buckets:
             lead = b.gram_lead(scope)

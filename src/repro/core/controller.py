@@ -11,23 +11,36 @@ extrapolation (Weiner & Semaan 2023).
 Mechanism (all of it inside the jitted DMD step — train/step.py):
 
   * **Gate.** At a group's jump step, evaluate a held-out microbatch loss at
-    the pre-jump and jumped params. Three outcomes:
+    the pre-jump and jumped params. The gate batch is a VALIDATION batch
+    disjoint from the training stream (train/loop.py carves a persistent
+    split at trainer init — a gate scored on training rows happily accepts
+    train-overfit jumps, the ISSUE 9 generalization bug). Three outcomes:
       - ACCEPT  (loss_post <= loss_pre * (1 + accept_tol)): keep the jump.
-      - SCALED  : halve the effective relax and re-blend — the midpoint
-        (w_pre + w_jump) / 2 IS the halved-relax jump, because relax enters
-        the coefficients linearly; one extra forward decides it.
+      - SCALED  : a small in-trace shrinkage line search — try the
+        configured ``shrink_levels`` blend fractions in order; the blend
+        level*w_jump + (1-level)*w_pre IS the level-scaled-relax jump,
+        because relax enters the coefficients linearly, so each rung costs
+        one forward and ZERO extra solves (the Gram/eigh are shared).
+        The default (0.5,) is the legacy single blind halving.
       - REJECT  : bit-exact rollback — params and optimizer moments are the
         donated pre-jump buffers passed straight through (the snapshot
         buffers and Gram were never touched by the jump), and the group
         re-enters its scheduled cooldown because the schedule is pure
         step-index arithmetic.
+  * **Meta-tuning.** (``meta_lr > 0``, matpow mode) After each gate round
+    the gate loss is backpropagated through the differentiable jump wrt the
+    per-group relax scale and ridge shrinkage; ``meta_update`` EMAs
+    relax_eff / ridge_eff toward the descent direction (Weiner & Semaan,
+    PAPERS.md). ridge_eff feeds dmd_coefficients' ``ridge_dyn`` — a
+    Tikhonov term that pulls overfit jumps back toward the anchor.
   * **Adaptation.** Per-group counters (accepts / rejects / scale-backs), a
     consecutive-full-accept streak, and an EMA of the per-jump relative gain
     drive two knobs: the effective horizon s_eff grows multiplicatively on
     consecutive accepts and shrinks on rejects, clamped into
     [s_min, configured s] (the static cap sizes the unrolled matrix-power
     chain — core/schedule.py's dynamic-s round math); the effective relax
-    scale halves on every scale-back and recovers toward 1 on full accepts.
+    scale multiplies by the realized line-search level on every scale-back
+    and recovers toward 1 on full accepts.
   * **Rank.** While the controller is on, the POD truncation is
     energy-based per group (GroupSchedule.energy -> dmd_coefficients'
     cumulative-energy mask) instead of the global tol noise floor.
@@ -60,32 +73,39 @@ OUTCOME_NAMES = ("reject", "scaled", "accept")
 class ControllerState(NamedTuple):
     """Per-group controller state, all (n_groups,) arrays."""
     accepts: jnp.ndarray      # int32: jumps kept at full strength
-    scaled: jnp.ndarray       # int32: jumps kept after a relax halving
+    scaled: jnp.ndarray       # int32: jumps kept after a relax scale-back
     rejects: jnp.ndarray      # int32: jumps rolled back
     streak: jnp.ndarray       # int32: consecutive FULL accepts
     gain_ema: jnp.ndarray     # fp32: EMA of (loss_pre - loss_final)/loss_pre
     s_eff: jnp.ndarray        # fp32: adapted horizon (<= configured s)
     relax_eff: jnp.ndarray    # fp32: effective relax scale in (0, 1]
+    ridge_eff: jnp.ndarray    # fp32: meta-tuned Tikhonov shrinkage in
+                              # [0, ccfg.ridge_max] (core/dmd.py ridge_dyn);
+                              # absent from older checkpoints — restore
+                              # keeps the template init (forward-compat)
 
 
 def init_state(groups: Sequence[sched_mod.GroupSchedule],
                abstract: bool = False) -> ControllerState:
     """Fresh controller state: zero counters, s_eff at each group's
-    configured cap, relax scale 1. `abstract=True` returns ShapeDtypeStruct
-    leaves (the dry-run path allocates nothing)."""
+    configured cap, relax scale 1, ridge at each group's schedule base.
+    `abstract=True` returns ShapeDtypeStruct leaves (the dry-run path
+    allocates nothing)."""
     import jax
     n = len(groups)
     if abstract:
         i = jax.ShapeDtypeStruct((n,), jnp.int32)
         f = jax.ShapeDtypeStruct((n,), jnp.float32)
-        return ControllerState(i, i, i, i, f, f, f)
+        return ControllerState(i, i, i, i, f, f, f, f)
     # distinct arrays per field: donated TrainStates may not alias buffers
     zi = lambda: jnp.zeros((n,), jnp.int32)
     return ControllerState(
         accepts=zi(), scaled=zi(), rejects=zi(), streak=zi(),
         gain_ema=jnp.zeros((n,), jnp.float32),
         s_eff=jnp.asarray(sched_mod.s_caps(groups)),
-        relax_eff=jnp.ones((n,), jnp.float32))
+        relax_eff=jnp.ones((n,), jnp.float32),
+        ridge_eff=jnp.asarray([getattr(g, "ridge", 0.0) for g in groups],
+                              jnp.float32))
 
 
 def effective_s(state: ControllerState,
@@ -106,8 +126,8 @@ def gate_outcome(loss_pre, loss_candidate, accept_tol: float):
 
 def update_on_jump(state: ControllerState, jumped: Tuple[int, ...],
                    outcome, gain, ccfg,
-                   groups: Sequence[sched_mod.GroupSchedule]
-                   ) -> ControllerState:
+                   groups: Sequence[sched_mod.GroupSchedule],
+                   level=0.5) -> ControllerState:
     """Fold one gate decision into the per-group state.
 
     `jumped` is the STATIC tuple of group indices whose window closed this
@@ -115,7 +135,10 @@ def update_on_jump(state: ControllerState, jumped: Tuple[int, ...],
     single gate decision — the gate evaluates the combined update).
     `outcome` is the traced scalar {REJECT, SCALED, ACCEPT}; `gain` the
     traced relative improvement of the final (kept) params on the eval
-    batch. Non-jumped groups pass through untouched.
+    batch. `level` (traced scalar) is the blend fraction the SCALED branch
+    actually kept — the winning rung of the shrinkage line search
+    (train/step.py); the default 0.5 is the single-halving legacy value.
+    Non-jumped groups pass through untouched.
     """
     n = len(groups)
     gmask = np.zeros((n,), bool)
@@ -144,9 +167,12 @@ def update_on_jump(state: ControllerState, jumped: Tuple[int, ...],
                       jnp.where(gmask & full & (streak >= 2), s_grown,
                                 state.s_eff))
 
-    r_halved = jnp.maximum(state.relax_eff * 0.5, ccfg.relax_floor)
+    # scale-back multiplies by the REALIZED line-search level (0.5 when the
+    # legacy single halving is the only rung)
+    r_scaled = jnp.maximum(
+        state.relax_eff * jnp.asarray(level, jnp.float32), ccfg.relax_floor)
     r_recovered = jnp.minimum(state.relax_eff * 2.0, 1.0)
-    relax_eff = jnp.where(gmask & half, r_halved,
+    relax_eff = jnp.where(gmask & half, r_scaled,
                           jnp.where(gmask & full, r_recovered,
                                     state.relax_eff))
 
@@ -156,14 +182,56 @@ def update_on_jump(state: ControllerState, jumped: Tuple[int, ...],
         state.gain_ema)
 
     return ControllerState(accepts, scaled, rejects, streak, gain_ema,
-                           s_eff, relax_eff)
+                           s_eff, relax_eff, state.ridge_eff)
+
+
+def meta_update(state: ControllerState, jumped: Tuple[int, ...],
+                g_relax, g_ridge, ccfg,
+                groups: Sequence[sched_mod.GroupSchedule]
+                ) -> ControllerState:
+    """Weiner & Semaan meta-tuning fold (DESIGN.md §5): after a gate round,
+    move each jumped group's relax/ridge knobs by an EMA step toward the
+    descent direction of the gate-batch loss, whose per-group gradients
+    `g_relax` / `g_ridge` come from backprop THROUGH the (matpow-mode,
+    differentiable) jump in train/step.py.
+
+    Sign-only rule: the raw gradient magnitudes depend on the loss scale
+    and the trajectory, so instead of a raw gradient step each knob EMAs
+    toward the boundary the gradient points at — relax toward
+    ``relax_floor`` when more jump hurts (g_relax > 0) and toward 1.0 when
+    it helps; ridge toward ``ridge_max`` when more jump hurts (g_ridge < 0
+    means more SHRINKAGE helps, since ridge opposes the jump) and toward
+    0.0 otherwise. ``meta_lr`` is the EMA step; non-finite gradients (e.g.
+    eigh's degenerate-eigenvalue JVP) leave the knobs untouched, as do
+    non-jumped groups.
+    """
+    n = len(groups)
+    gmask = np.zeros((n,), bool)
+    gmask[list(jumped)] = True
+    gmask = jnp.asarray(gmask)
+
+    lr = jnp.float32(ccfg.meta_lr)
+    g_relax = jnp.asarray(g_relax, jnp.float32)
+    g_ridge = jnp.asarray(g_ridge, jnp.float32)
+    relax_tgt = jnp.where(g_relax > 0, jnp.float32(ccfg.relax_floor),
+                          jnp.float32(1.0))
+    ridge_tgt = jnp.where(g_ridge > 0, jnp.float32(0.0),
+                          jnp.float32(ccfg.ridge_max))
+    relax_new = (1.0 - lr) * state.relax_eff + lr * relax_tgt
+    ridge_new = jnp.clip((1.0 - lr) * state.ridge_eff + lr * ridge_tgt,
+                         0.0, ccfg.ridge_max)
+    ok_relax = gmask & jnp.isfinite(g_relax)
+    ok_ridge = gmask & jnp.isfinite(g_ridge)
+    return state._replace(
+        relax_eff=jnp.where(ok_relax, relax_new, state.relax_eff),
+        ridge_eff=jnp.where(ok_ridge, ridge_new, state.ridge_eff))
 
 
 def summary(state: ControllerState,
             groups: Sequence[sched_mod.GroupSchedule]) -> str:
     """Host-side audit table (benches / logging)."""
     rows = [("group", "accepts", "scaled", "rejects", "streak",
-             "gain_ema", "s_eff", "relax_eff")]
+             "gain_ema", "s_eff", "relax_eff", "ridge_eff")]
     for g in groups:
         i = g.index
         rows.append((g.name, str(int(state.accepts[i])),
@@ -171,7 +239,8 @@ def summary(state: ControllerState,
                      str(int(state.streak[i])),
                      f"{float(state.gain_ema[i]):.4f}",
                      f"{float(state.s_eff[i]):.1f}",
-                     f"{float(state.relax_eff[i]):.3f}"))
+                     f"{float(state.relax_eff[i]):.3f}",
+                     f"{float(state.ridge_eff[i]):.4f}"))
     widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
     return "\n".join("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
                      for r in rows)

@@ -141,7 +141,8 @@ def set_gram_row(gram: jnp.ndarray, row: jnp.ndarray, slot) -> jnp.ndarray:
     return jnp.where(onehot[None, :], row[..., :, None], gram)
 
 
-def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float, energy: float = 0.0):
+def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float, energy: float = 0.0,
+                      atol: float = 0.0):
     """eigvals of G- (ascending; batched over leading dims) ->
     sigma, 1/sigma, mask.
 
@@ -154,6 +155,10 @@ def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float, energy: float = 0.0):
         own spectrum instead of a fixed constant (per-group target resolved
         in core/schedule.py). A small sigma floor (1e-6 * sigma_max) still
         guards the fp32 Gram noise tail.
+
+    ``atol > 0`` joins an ABSOLUTE sigma floor to either policy (pymor's
+    atol/rtol-truncated SVD idiom): modes below the floor are dropped no
+    matter how the relative mask scores them. 0 (default) is a no-op.
     """
     lam = jnp.maximum(eigvals, 0.0)
     sigma = jnp.sqrt(lam)
@@ -168,8 +173,27 @@ def _masked_inv_sigma(eigvals: jnp.ndarray, tol: float, energy: float = 0.0):
         mask = keep[..., ::-1] & (sigma > 1e-6 * jnp.maximum(smax, 1e-30))
     else:
         mask = sigma > tol * jnp.maximum(smax, 1e-30)
+    if atol and atol > 0:
+        mask = mask & (sigma > atol)
     inv = jnp.where(mask, 1.0 / jnp.where(mask, sigma, 1.0), 0.0)
     return sigma, inv, mask
+
+
+def _ridge_inv_sigma(sigma: jnp.ndarray, mask: jnp.ndarray, ridge):
+    """Tikhonov-shrunk pseudo-inverse factor: sigma / (sigma^2 + lambda).
+
+    ``lambda = ridge * sigma_max^2`` — the RELATIVE parameterization keeps
+    the solve scale-equivariant (doubling the snapshots doubles nothing in
+    the coefficients), mirroring the relative ``tol`` mask. At ridge -> 0
+    this approaches 1/sigma (callers keep the exact legacy expression for
+    the static ridge == 0 path, so that route stays bit-exact); as
+    ridge -> inf it approaches 0, the fitted dynamics vanish, and the
+    folded coefficients collapse onto the anchor snapshot. ``ridge`` may be
+    a traced scalar (the controller's meta-tuned per-group override).
+    """
+    smax = jnp.max(sigma, axis=-1, keepdims=True)
+    lam = jnp.maximum(jnp.asarray(ridge, jnp.float32), 0.0) * smax * smax
+    return jnp.where(mask, sigma / (sigma * sigma + lam), 0.0)
 
 
 def _matrix_power(a: jnp.ndarray, s: int) -> jnp.ndarray:
@@ -305,14 +329,16 @@ def _eig_power(atilde: jnp.ndarray, s, clamp_eigs: bool,
 @functools.partial(jax.jit, static_argnames=("s", "tol", "mode", "clamp_eigs",
                                              "keep_residual", "anchor",
                                              "affine", "trust_region",
-                                             "energy", "s_max"))
+                                             "energy", "s_max", "atol",
+                                             "ridge"))
 def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
                      mode: str = "matpow", clamp_eigs: bool = False,
                      keep_residual: bool = False, anchor: str = "none",
                      affine: bool = False, trust_region: float = 0.0,
                      relax: jnp.ndarray | float = 1.0,
                      energy: float = 0.0, s_max: int = None,
-                     s_dyn=None) -> Tuple[jnp.ndarray, dict]:
+                     s_dyn=None, atol: float = 0.0, ridge: float = 0.0,
+                     ridge_dyn=None) -> Tuple[jnp.ndarray, dict]:
     """Coefficient vector c (m,) such that w_extrapolated = S^T c.
 
     Args:
@@ -341,6 +367,18 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
       s_dyn: optional TRACED integer horizon in [1, s_max] (the controller's
          adapted per-group s). None (default) uses the static ``s`` — the
          bit-exact legacy path.
+      atol: absolute sigma floor joined to the relative tol/energy mask
+         (pymor's atol/rtol truncation). Static; 0 disables.
+      ridge: static Tikhonov shrinkage of the REGRESSION factor of the
+         reduced Koopman solve, relative to sigma_max^2 (see
+         _ridge_inv_sigma). Only Atilde's right inverse factor — the
+         least-squares solve against X — is shrunk; the projection factors
+         (b, c_main) keep the exact pseudo-inverse, so growing ridge pulls
+         the fitted dynamics (and hence the jump) toward the anchor without
+         distorting the POD basis. 0 (default) keeps the legacy expression
+         textually unchanged: bit-exact.
+      ridge_dyn: optional TRACED ridge override (the controller's meta-tuned
+         per-group value); takes precedence over the static ``ridge``.
 
     Returns:
       c: (m,) fp32 coefficients over snapshot rows.
@@ -368,12 +406,21 @@ def dmd_coefficients(gram: jnp.ndarray, *, s: int, tol: float = 1e-10,
     g_last = gram[..., :-1, -1]                  # X^T d_last
 
     eigvals, v = jnp.linalg.eigh(g_lag)          # ascending; batched
-    sigma, inv_sigma, mask = _masked_inv_sigma(eigvals, tol, energy)
+    sigma, inv_sigma, mask = _masked_inv_sigma(eigvals, tol, energy, atol)
     vt = jnp.swapaxes(v, -1, -2)
 
-    # Reduced Koopman, masked dims are zero rows/cols.
+    # Reduced Koopman, masked dims are zero rows/cols. The ridge shrinks
+    # ONLY the right (regression) factor — Atilde = U^T Z (X^+_ridge) U in
+    # Gram form — while the left factor stays the exact projection; with no
+    # ridge the legacy expression is reused untouched (bit-exact).
+    if ridge_dyn is not None:
+        inv_fit = _ridge_inv_sigma(sigma, mask, ridge_dyn)
+    elif ridge and ridge > 0:
+        inv_fit = _ridge_inv_sigma(sigma, mask, ridge)
+    else:
+        inv_fit = inv_sigma
     vt_c_v = vt @ g_cross @ v
-    atilde = (inv_sigma[..., :, None] * vt_c_v) * inv_sigma[..., None, :]
+    atilde = (inv_sigma[..., :, None] * vt_c_v) * inv_fit[..., None, :]
 
     cap = int(s if s_max is None else s_max)
     s_val = s if s_dyn is None else jnp.clip(
@@ -503,13 +550,15 @@ def dmd_extrapolate(snapshots: jnp.ndarray, *, s: int, tol: float = 1e-10,
                     mode: str = "matpow", clamp_eigs: bool = False,
                     keep_residual: bool = False, anchor: str = "none",
                     affine: bool = False, trust_region: float = 0.0,
-                    relax: float = 1.0) -> Tuple[jnp.ndarray, dict]:
+                    relax: float = 1.0, atol: float = 0.0,
+                    ridge: float = 0.0) -> Tuple[jnp.ndarray, dict]:
     """One-leaf convenience wrapper: snapshots (m, ...) -> extrapolated (...)."""
     gram = gram_matrix(snapshots, anchor=anchor)
     c, info = dmd_coefficients(gram, s=s, tol=tol, mode=mode,
                                clamp_eigs=clamp_eigs, anchor=anchor,
                                affine=affine, trust_region=trust_region,
-                               keep_residual=keep_residual, relax=relax)
+                               keep_residual=keep_residual, relax=relax,
+                               atol=atol, ridge=ridge)
     w = combine_snapshots(snapshots, c)
     # A non-finite snapshot poisons the combine even under the c = e_last
     # guard (0 * inf = NaN): never return less-finite than the last snapshot.

@@ -43,6 +43,7 @@ it agrees with the host-side ``GroupSchedule.slot`` for every step
 """
 from __future__ import annotations
 
+import math
 import re
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
@@ -92,6 +93,11 @@ class DMDGroupRule:
                                         # cumulative-energy rank target
                                         # (inherits cfg.controller.energy;
                                         # ignored while the controller is off)
+    ridge: Optional[float] = None       # controller mode only: this group's
+                                        # Tikhonov shrinkage of the jump
+                                        # solve, relative to sigma_max^2
+                                        # (inherits cfg.controller.ridge;
+                                        # ignored while the controller is off)
 
     def matches(self, path: str, ndim: int, size: int) -> bool:
         if self.path_regex and not re.search(self.path_regex, path):
@@ -125,6 +131,10 @@ class GroupSchedule:
                                 # cumulative-energy fraction instead of the
                                 # global tol (core/dmd.py). 0.0 keeps the
                                 # tol mask — bit-exact legacy behavior.
+    ridge: float = 0.0          # > 0 only in controller mode: base Tikhonov
+                                # shrinkage of this group's jump solve
+                                # (core/dmd.py::_ridge_inv_sigma). 0.0 keeps
+                                # the exact pseudo-inverse — bit-exact.
 
     @property
     def cycle(self) -> int:
@@ -188,6 +198,10 @@ def _validate(g: GroupSchedule) -> GroupSchedule:
     if not 0.0 <= g.energy <= 1.0:
         raise ValueError(
             f"group {g.name!r}: energy must be in [0, 1] (got {g.energy})")
+    if not (g.ridge >= 0.0 and math.isfinite(g.ridge)):
+        raise ValueError(
+            f"group {g.name!r}: ridge must be finite and >= 0 "
+            f"(got {g.ridge})")
     return g
 
 
@@ -199,17 +213,22 @@ def resolve_groups(cfg) -> Tuple[GroupSchedule, ...]:
     The energy-rank target resolves to 0.0 (tol mask — legacy) unless the
     jump controller is enabled, in which case each group inherits
     ``cfg.controller.energy`` overridable per rule — the "tol becomes a
-    per-group cumulative-energy fraction" switch (DESIGN.md §5).
+    per-group cumulative-energy fraction" switch (DESIGN.md §5). The
+    ridge shrinkage resolves the same way from ``cfg.controller.ridge``
+    (per-rule override: ``DMDGroupRule.ridge``); both stay 0.0 — bit-exact
+    legacy — while the controller is off.
     """
     reset_default = bool(getattr(cfg, "reset_opt_state", True))
     ccfg = getattr(cfg, "controller", None)
     ctrl_on = ccfg is not None and ccfg.enabled
     energy_default = float(ccfg.energy) if ctrl_on else 0.0
+    ridge_default = float(getattr(ccfg, "ridge", 0.0)) if ctrl_on else 0.0
     groups = [_validate(GroupSchedule(
         index=0, name="default", m=cfg.m, s=cfg.s,
         warmup_steps=cfg.warmup_steps, cooldown_steps=cfg.cooldown_steps,
         phase=0, relax=cfg.relax, anneal=cfg.anneal,
-        reset_opt=reset_default, energy=energy_default))]
+        reset_opt=reset_default, energy=energy_default,
+        ridge=ridge_default))]
     for rule in rules_for_config(cfg):
         if rule.exclude:
             continue
@@ -225,7 +244,9 @@ def resolve_groups(cfg) -> Tuple[GroupSchedule, ...]:
             anneal=pick(rule.anneal, cfg.anneal),
             reset_opt=pick(rule.reset_opt, reset_default),
             energy=(pick(rule.energy, energy_default)
-                    if ctrl_on else 0.0))))
+                    if ctrl_on else 0.0),
+            ridge=(pick(rule.ridge, ridge_default)
+                   if ctrl_on else 0.0))))
     return tuple(groups)
 
 
@@ -256,6 +277,7 @@ def schedule_records(groups: Sequence[GroupSchedule]) -> list:
         "warmup_steps": g.warmup_steps, "cooldown_steps": g.cooldown_steps,
         "phase": g.phase, "cycle": g.cycle, "relax": g.relax,
         "anneal": g.anneal, "reset_opt": g.reset_opt, "energy": g.energy,
+        "ridge": g.ridge,
         "jump_residue": (g.warmup_steps + g.phase + g.cycle - 1) % g.cycle,
     } for g in groups]
 

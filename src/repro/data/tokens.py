@@ -33,6 +33,27 @@ def batch_for_step(seed: int, step: int, global_batch: int, seq_len: int,
     return batch
 
 
+# Reserved stream offset for the validation split (ISSUE 9). The training
+# stream indexes batches by optimizer step, so every index a run can reach
+# is a TRAINING batch; the validation fold lives past 2^30 steps — disjoint
+# from any reachable training index, deterministic, and step-independent
+# (a preemption-exact resume sees the identical split).
+VAL_FOLD = 1 << 30
+
+
+def validation_batch(seed: int, global_batch: int, seq_len: int,
+                     vocab_size: int, *, index: int = 0,
+                     **kw) -> Dict[str, jnp.ndarray]:
+    """One deterministic validation batch DISJOINT from the training stream:
+    drawn at the reserved ``VAL_FOLD`` offset that ``batch_for_step``'s
+    step-indexed training stream never reaches. The jump controller's gate
+    scores on this split (train/loop.py) — gating on training rows accepts
+    train-overfit jumps. ``index`` selects among multiple validation
+    batches."""
+    return batch_for_step(seed, VAL_FOLD + index, global_batch, seq_len,
+                          vocab_size, **kw)
+
+
 def synthetic_lm_batches(seed: int, global_batch: int, seq_len: int,
                          vocab_size: int, *, start_step: int = 0,
                          **kw) -> Iterator[Dict[str, jnp.ndarray]]:

@@ -61,6 +61,31 @@ def input_specs(acfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
     return batch, specs
 
 
+def gate_batch_specs(batch: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpecs for the controller's gate/validation microbatch
+    (ISSUE 9): leading batch axis over the data axes when divisible,
+    everything else replicated — the same placement ``input_specs`` gives
+    training batches, but derived from a CONCRETE batch pytree (the
+    validation split is carved host-side at trainer init, not dry-run from
+    a ShapeConfig cell, and may be row-clamped by controller.eval_rows)."""
+    nb = _nbatch(mesh)
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return P()
+        b = ba if leaf.shape[0] % nb == 0 else None
+        return P(*((b,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def gate_batch_shardings(batch: PyTree, mesh: Mesh) -> PyTree:
+    """NamedShardings for the gate batch (see gate_batch_specs)."""
+    return shardings_of(gate_batch_specs(batch, mesh), mesh)
+
+
 # ---------------------------------------------------------------------------
 # Cache specs (decode / prefill cells)
 # ---------------------------------------------------------------------------

@@ -40,7 +40,8 @@ PyTree = Any
 class Trainer:
     def __init__(self, model, acfg, *, mesh=None, loss_fn=None,
                  checkpoint_dir: Optional[str] = None,
-                 fail_at_step: Optional[int] = None):
+                 fail_at_step: Optional[int] = None,
+                 val_batch: Optional[PyTree] = None):
         self.model = model
         self.acfg = acfg
         self.mesh = mesh
@@ -68,6 +69,42 @@ class Trainer:
                                               model=model, loss_fn=loss_fn),
                                 donate_argnums=(0,),
                                 static_argnames=("groups",))
+        # Persistent validation split for the jump controller's gate
+        # (ISSUE 9): carved ONCE at trainer init, NEVER drawn from the
+        # training iterator — a gate scored on training rows consumes a
+        # training batch (shifting the stream) and happily accepts
+        # train-overfit jumps. Callers may hand in their own split; token
+        # models get a deterministic carve from the reserved validation
+        # stream fold (repro.data.tokens.validation_batch).
+        self.val_batch = None
+        if self.controller_on:
+            self.val_batch = (val_batch if val_batch is not None
+                              else self._carve_val_batch())
+
+    def _carve_val_batch(self) -> Optional[PyTree]:
+        """Default validation split for vocab models (the synthetic LM
+        stream): one batch at the reserved VAL_FOLD stream offset, shaped
+        exactly like a training batch. Models without a vocab (e.g. the
+        bench MLP adapters) return None — those callers pass
+        ``Trainer(val_batch=...)`` or ``fit(eval_batch=...)`` explicitly."""
+        mc = getattr(self.model, "cfg", None)
+        vocab = getattr(mc, "vocab_size", None) if mc is not None else None
+        if not vocab:
+            return None
+        from repro.data.tokens import validation_batch
+        tc = self.acfg.train
+        kw = {}
+        if getattr(mc, "mrope_sections", None):
+            kw["mrope"] = True
+        if getattr(mc, "family", "") == "encdec":
+            kw["frames"] = (mc.encoder_seq_len, mc.d_model)
+        batch = validation_batch(tc.seed, tc.global_batch, tc.seq_len,
+                                 vocab, **kw)
+        if self.mesh is not None:
+            from repro.launch.inputs import gate_batch_shardings
+            batch = jax.device_put(batch,
+                                   gate_batch_shardings(batch, self.mesh))
+        return batch
 
     # -- state ---------------------------------------------------------------
     def init_state(self, key=None) -> TrainState:
@@ -150,11 +187,13 @@ class Trainer:
             log_every: int = 0, on_metrics: Optional[Callable] = None,
             eval_batch: Optional[PyTree] = None) -> TrainState:
         """`eval_batch` (controller mode only) is the held-out microbatch
-        the loss gate scores jumps on. None takes one batch off the
-        iterator before training starts — deterministic within a run, but a
-        PREEMPTION-exact resume should pass a step-independent batch (the
-        default eval batch is drawn at the stream's current position, which
-        differs after a restore). Sliced to controller.eval_rows rows."""
+        the loss gate scores jumps on. None falls back to the trainer's
+        persistent validation split (carved at init, disjoint from the
+        training stream and step-independent — a preemption-exact resume
+        sees the identical gate batch); with ``controller.val_gate=True``
+        the validation split is preferred even over an explicit
+        `eval_batch`. The gate NEVER draws from the training iterator.
+        Sliced to controller.eval_rows rows (clamped to the batch size)."""
         self._install_preempt_handler()
         resumed = self.restore(state)
         if resumed is not None:
@@ -171,10 +210,28 @@ class Trainer:
         ckpt_every = self.acfg.train.checkpoint_every
 
         if self.controller_on:
+            ccfg = self.acfg.dmd.controller
+            # The ISSUE 9 bugfix: the old fallback `eval_batch =
+            # next(batches)` consumed (and scored on) the next TRAINING
+            # batch — the gate then measured training-trajectory fit, not
+            # generalization, and the stream position shifted by one.
+            if getattr(ccfg, "val_gate", False) and self.val_batch is not None:
+                eval_batch = self.val_batch
+            elif eval_batch is None:
+                eval_batch = self.val_batch
             if eval_batch is None:
-                eval_batch = next(batches)
-            rows = self.acfg.dmd.controller.eval_rows
+                raise ValueError(
+                    "controller mode needs a gate batch disjoint from the "
+                    "training stream: pass fit(eval_batch=...) or "
+                    "Trainer(val_batch=...) (vocab models carve one "
+                    "automatically at init)")
+            rows = ccfg.eval_rows
             if rows:
+                # clamp to the actual batch size — eval_rows larger than
+                # the batch must not silently slice past it
+                n_rows = min(int(x.shape[0]) for x in
+                             jax.tree_util.tree_leaves(eval_batch))
+                rows = min(int(rows), n_rows)
                 eval_batch = jax.tree_util.tree_map(
                     lambda x: x[:rows], eval_batch)
 

@@ -390,11 +390,17 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
       * controller ON (cfg.controller.enabled): dmd_step(state, relax,
         eval_batch, groups=None) — the loss-gated jump
         (core/controller.py, DESIGN.md §5): one candidate jump at the
-        controller's adapted per-group horizon, then an in-trace gate on
-        the held-out `eval_batch` loss — accept / halve-the-relax re-blend /
-        reject with bit-exact rollback (pre-jump params and moments pass
-        through untouched; buffers, Gram, and the schedule's cooldown
-        arithmetic were never disturbed). Needs `model` or `loss_fn` for
+        controller's adapted per-group horizon (ridge-shrunk by the
+        meta-tuned per-group ridge when meta_lr > 0), then an in-trace
+        gate on the `eval_batch` loss — the caller must pass a VALIDATION
+        batch disjoint from the training stream (train/loop.py carves
+        one). Accept / shrinkage line search over cfg.controller
+        .shrink_levels (re-blends of the same solved jump — no extra
+        solves) / reject with bit-exact rollback (pre-jump params and
+        moments pass through untouched; buffers, Gram, and the schedule's
+        cooldown arithmetic were never disturbed). With meta_lr > 0 a
+        final backward through the jump meta-tunes relax_eff/ridge_eff
+        (core/controller.py::meta_update). Needs `model` or `loss_fn` for
         the gate forwards.
 
     `groups` is a STATIC tuple of schedule-group indices to jump (the
@@ -443,6 +449,20 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
         raise ValueError("controller mode needs `model` or `loss_fn` for "
                          "the gate's held-out-loss forwards")
     _loss = loss_fn or (lambda p, b: model.loss(p, b)[0])
+    levels = tuple(float(f) for f in
+                   (getattr(ccfg, "shrink_levels", (0.5,)) or (0.5,)))
+    for f in levels:
+        if not 0.0 < f < 1.0:
+            raise ValueError(f"controller shrink_levels must lie in (0, 1): "
+                             f"got {levels}")
+    # Meta-tuning differentiates THROUGH the jump: matpow is plain traced
+    # linear algebra, but eig mode routes the operator power through a host
+    # pure_callback with no JVP.
+    meta_on = float(getattr(ccfg, "meta_lr", 0.0)) > 0
+    if meta_on and cfg.mode != "matpow":
+        raise ValueError("controller meta-tuning (meta_lr > 0) needs "
+                         "dmd.mode='matpow' — the eig host callback is not "
+                         "differentiable")
 
     def gated_dmd_step(state: TrainState, relax, eval_batch,
                        groups: Optional[Sequence[int]] = None) -> tuple:
@@ -451,7 +471,7 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
             return state, {"mean_rank": zero, "ctrl_outcome":
                            jnp.zeros((), jnp.int32), "ctrl_loss_pre": zero,
                            "ctrl_loss_jump": zero, "ctrl_loss_kept": zero,
-                           "ctrl_gain": zero}
+                           "ctrl_gain": zero, "ctrl_level": zero}
         grams = state.dmd_gram
         if grams is None or not streaming_on:
             grams = _none_like(state.dmd_buffers)
@@ -471,15 +491,20 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
 
         # Candidate jump at the adapted horizon, relax tempered by the
         # per-group effective scale. `relax` may be scalar or (n_groups,);
-        # the product with relax_eff is always the per-group vector.
+        # the product with relax_eff is always the per-group vector. The
+        # meta-tuned ridge_eff only feeds the solve while meta-tuning is on
+        # (meta_lr > 0) — with it off the schedule's STATIC per-group ridge
+        # applies and the trace is unchanged from the pre-ridge path.
         s_vec = ctrl_mod.effective_s(ctrl, acc.groups, ccfg)
         relax_vec = jnp.broadcast_to(
             jnp.asarray(relax, jnp.float32),
             (acc.n_groups,)) * ctrl.relax_eff
+        ridge_vec = ctrl.ridge_eff if meta_on else None
+        table_full = acc.arena_for(state.params)
         p_jump, mean_rank = jump_tree(cfg, plans, state.params,
                                       state.dmd_buffers, grams, relax_vec,
                                       groups=groups, s_vec=s_vec,
-                                      arena=acc.arena_for(state.params))
+                                      arena=table_full, ridge_vec=ridge_vec)
 
         loss_pre = eval_loss(state.params)
         loss_post = eval_loss(p_jump)
@@ -495,51 +520,90 @@ def make_dmd_step(acfg, *, mesh=None, acc: Optional[DMDAccelerator] = None,
 
         def accept_full(_):
             return p_jump, reset_moments(p_jump), \
-                jnp.asarray(ctrl_mod.ACCEPT, jnp.int32), loss_post
+                jnp.asarray(ctrl_mod.ACCEPT, jnp.int32), loss_post, \
+                jnp.float32(levels[0])
 
-        def try_half(_):
-            # Halve the effective relax and re-blend: relax enters the
-            # coefficients linearly, so the midpoint IS the halved-relax
-            # jump — no second coefficient solve, one extra gate forward
-            # (paid only inside this branch).
-            p_half = jax.tree_util.tree_map(
-                lambda a, b: (0.5 * a.astype(jnp.float32)
-                              + 0.5 * b.astype(jnp.float32)).astype(a.dtype),
+        def blend(f):
+            # relax enters the coefficients linearly, so the blend
+            # f*w_jump + (1-f)*w_pre IS the f-scaled-relax jump — no second
+            # coefficient solve, one extra gate forward per tried rung
+            # (paid only inside its branch).
+            return jax.tree_util.tree_map(
+                lambda a, b: ((1.0 - f) * a.astype(jnp.float32)
+                              + f * b.astype(jnp.float32)).astype(a.dtype),
                 state.params, p_jump)
-            loss_half = eval_loss(p_half)
 
-            def accept_half(_):
-                return p_half, reset_moments(p_half), \
-                    jnp.asarray(ctrl_mod.SCALED, jnp.int32), loss_half
+        def reject(_):
+            # Bit-exact rollback: the donated pre-jump params and
+            # moments pass straight through; buffers / Gram / schedule
+            # cooldown were never touched by the jump.
+            return state.params, state.opt_state, \
+                jnp.asarray(ctrl_mod.REJECT, jnp.int32), loss_pre, \
+                jnp.float32(levels[0])
 
-            def reject(_):
-                # Bit-exact rollback: the donated pre-jump params and
-                # moments pass straight through; buffers / Gram / schedule
-                # cooldown were never touched by the jump.
-                return state.params, state.opt_state, \
-                    jnp.asarray(ctrl_mod.REJECT, jnp.int32), loss_pre
+        def try_levels(idx):
+            # Shrinkage line search (DESIGN.md §5): nested conds over the
+            # static shrink_levels ladder — each rung re-blends the SAME
+            # solved jump at a smaller fraction and keeps the first one the
+            # gate accepts; falling off the ladder is the rollback. The
+            # default single rung (0.5,) is the legacy blind halving.
+            if idx >= len(levels):
+                return reject
+            f = levels[idx]
 
-            return jax.lax.cond(
-                ctrl_mod.gate_outcome(loss_pre, loss_half, ccfg.accept_tol),
-                accept_half, reject, None)
+            def attempt(_):
+                p_lvl = blend(f)
+                loss_lvl = eval_loss(p_lvl)
 
-        params, opt_state, outcome, loss_final = jax.lax.cond(
+                def accept_lvl(_):
+                    return p_lvl, reset_moments(p_lvl), \
+                        jnp.asarray(ctrl_mod.SCALED, jnp.int32), loss_lvl, \
+                        jnp.float32(f)
+
+                return jax.lax.cond(
+                    ctrl_mod.gate_outcome(loss_pre, loss_lvl,
+                                          ccfg.accept_tol),
+                    accept_lvl, try_levels(idx + 1), None)
+
+            return attempt
+
+        params, opt_state, outcome, loss_final, level = jax.lax.cond(
             ctrl_mod.gate_outcome(loss_pre, loss_post, ccfg.accept_tol),
-            accept_full, try_half, None)
+            accept_full, try_levels(0), None)
 
         gain = (loss_pre - loss_final) / jnp.maximum(loss_pre, 1e-30)
         new_ctrl = ctrl_mod.update_on_jump(ctrl, jumped, outcome, gain,
-                                           ccfg, acc.groups)
+                                           ccfg, acc.groups, level=level)
+        if meta_on:
+            # Weiner & Semaan meta-tuning: the gate loss differentiated
+            # THROUGH the jump wrt a per-group relax scale (at 1) and the
+            # ridge knob; meta_update EMAs relax_eff/ridge_eff toward the
+            # descent direction. One extra backward per gate round — the
+            # Gram, eigh, and buffers are all shared with the candidate.
+            def meta_loss(knobs):
+                rscale, rknob = knobs
+                pv, _ = jump_tree(cfg, plans, state.params,
+                                  state.dmd_buffers, grams,
+                                  relax_vec * rscale, groups=groups,
+                                  s_vec=s_vec, arena=table_full,
+                                  ridge_vec=rknob)
+                return eval_loss(pv)
+
+            g_relax, g_ridge = jax.grad(meta_loss)(
+                (jnp.ones((acc.n_groups,), jnp.float32), ctrl.ridge_eff))
+            new_ctrl = ctrl_mod.meta_update(new_ctrl, jumped, g_relax,
+                                            g_ridge, ccfg, acc.groups)
         new_state = TrainState(params, opt_state, state.step,
                                state.dmd_buffers, state.dmd_gram, new_ctrl)
         # telemetry: `ctrl_loss_jump` is the FULL candidate's eval loss,
         # `ctrl_loss_kept` the loss of whatever was kept (== loss_jump on
-        # accept, the half-blend's loss on a scale-back, loss_pre on a
-        # rollback) — gain is computed from `kept`, so the pair is always
-        # self-consistent.
+        # accept, the winning blend's loss on a scale-back, loss_pre on a
+        # rollback), `ctrl_level` the realized line-search fraction — gain
+        # is computed from `kept`, so the trio is always self-consistent.
         return new_state, {"mean_rank": mean_rank, "ctrl_outcome": outcome,
                            "ctrl_loss_pre": loss_pre,
                            "ctrl_loss_jump": loss_post,
-                           "ctrl_loss_kept": loss_final, "ctrl_gain": gain}
+                           "ctrl_loss_kept": loss_final, "ctrl_gain": gain,
+                           "ctrl_level": level}
 
     return gated_dmd_step

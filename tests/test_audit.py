@@ -120,3 +120,50 @@ def test_cli_mesh_clean_and_force_allgather_bites(tmp_path):
     assert mutated.returncode != 0, mutated.stdout + mutated.stderr
     assert "all-gather" in mutated.stdout
     assert "[FAIL] collective-budget" in mutated.stdout
+
+
+def test_schedule_conflict_flags_bad_controller_keys():
+    """ISSUE 9: the schedule-conflict pass audits the NEW controller knobs —
+    an unsatisfiable gate (accept_tol <= -1), an out-of-range shrink
+    ladder, a negative ridge_max, and a non-EMA meta_lr each produce a
+    violation; the clean default config reports the knob table in info."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.audit.passes import schedule_conflict
+    from repro.audit.targets import adhoc_context
+    from repro.configs import get_config
+    from repro.configs.base import DMDConfig, DMDControllerConfig
+    from repro.core import DMDAccelerator
+    from repro.core.schedule import resolve_groups
+
+    def ctx_for(ccfg):
+        acfg = dataclasses.replace(
+            get_config("pollutant-mlp"),
+            dmd=DMDConfig(m=4, s=10, controller=ccfg))
+        acc = DMDAccelerator(acfg.dmd)
+        params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+        return adhoc_context("ctrl-audit", acfg, {},
+                             plans=acc.plans_for(params),
+                             groups=resolve_groups(acfg.dmd))
+
+    vs, info = schedule_conflict(ctx_for(DMDControllerConfig(enabled=True)))
+    assert vs == [], vs
+    # satellite: the DEFAULT accept_tol is a small positive band (0.0 let
+    # noise-level ties reject real jumps)
+    assert info["controller"]["accept_tol"] == pytest.approx(1e-3)
+    assert info["controller"]["shrink_levels"] == [0.5]
+
+    bad = DMDControllerConfig(enabled=True, accept_tol=-1.0,
+                              shrink_levels=(0.0, 1.5), meta_lr=2.0,
+                              ridge_max=-1.0)
+    vs, _ = schedule_conflict(ctx_for(bad))
+    details = " ".join(v.detail for v in vs)
+    for frag in ("accept_tol", "shrink_levels entry", "ridge_max",
+                 "meta_lr"):
+        assert frag in details, (frag, details)
+
+    # controller OFF: no controller block, no controller violations
+    vs, info = schedule_conflict(ctx_for(DMDControllerConfig()))
+    assert vs == [] and "controller" not in info

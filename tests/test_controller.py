@@ -192,3 +192,111 @@ def test_summary_renders():
     st = C.init_state(groups)
     out = C.summary(st, groups)
     assert "default" in out and "small" in out and "s_eff" in out
+
+
+# -- ISSUE 9: ridge knob, line-search level, meta-tuning ---------------------
+
+def _ridge_groups(ridge=0.02, rule_ridge=0.07, **ctrl_kw):
+    cfg = DMDConfig(m=6, s=20, warmup_steps=0, cooldown_steps=0,
+                    controller=DMDControllerConfig(enabled=True, ridge=ridge,
+                                                   **ctrl_kw),
+                    groups=(DMDGroupRule(name="small", max_ndim=1, m=4,
+                                         s=8, phase=3, ridge=rule_ridge),))
+    return sched.resolve_groups(cfg), cfg
+
+
+def test_init_state_ridge_eff_from_schedule():
+    """ridge_eff starts at each group's resolved schedule ridge (controller
+    default + per-rule override), and stays 0 when the controller is off."""
+    groups, _ = _ridge_groups()
+    st = C.init_state(groups)
+    np.testing.assert_allclose(np.asarray(st.ridge_eff), [0.02, 0.07])
+    off, _ = _groups()
+    np.testing.assert_array_equal(np.asarray(C.init_state(off).ridge_eff),
+                                  [0.0, 0.0])
+    # abstract state grew the matching 8th leaf
+    ab = C.init_state(groups, abstract=True)
+    assert ab.ridge_eff.shape == (2,)
+
+
+def test_update_on_jump_level_is_realized_shrinkage():
+    """SCALED folds the WINNING line-search rung into relax_eff — not a
+    hard-coded halving — and the default level reproduces the legacy 0.5."""
+    groups, _ = _groups()
+    ccfg = DMDControllerConfig(enabled=True, relax_floor=0.1)
+    st = C.init_state(groups)
+    st_q = C.update_on_jump(st, (0,), jnp.int32(C.SCALED), jnp.float32(0.0),
+                            ccfg, groups, level=jnp.float32(0.25))
+    assert float(st_q.relax_eff[0]) == pytest.approx(0.25)
+    st_d = C.update_on_jump(st, (0,), jnp.int32(C.SCALED), jnp.float32(0.0),
+                            ccfg, groups)
+    assert float(st_d.relax_eff[0]) == pytest.approx(0.5)
+    # floor still binds under a deep rung
+    st_f = C.update_on_jump(st_q, (0,), jnp.int32(C.SCALED),
+                            jnp.float32(0.0), ccfg, groups,
+                            level=jnp.float32(0.25))
+    assert float(st_f.relax_eff[0]) == pytest.approx(0.1)
+    # ridge_eff rides through update_on_jump untouched
+    np.testing.assert_array_equal(np.asarray(st_f.ridge_eff),
+                                  np.asarray(st.ridge_eff))
+
+
+def test_meta_update_sign_directions():
+    """The sign-only EMA rule: g_relax > 0 (more jump hurts the gate loss)
+    pulls relax toward the floor, g_relax < 0 toward 1; g_ridge < 0 (more
+    shrinkage helps) pulls ridge toward ridge_max, g_ridge > 0 toward 0."""
+    groups, _ = _ridge_groups(meta_lr=0.5, ridge_max=0.1, relax_floor=0.25)
+    ccfg = DMDControllerConfig(enabled=True, meta_lr=0.5, ridge_max=0.1,
+                               relax_floor=0.25, ridge=0.02)
+    st = C.init_state(groups)._replace(
+        relax_eff=jnp.asarray([0.8, 0.8], jnp.float32),
+        ridge_eff=jnp.asarray([0.02, 0.02], jnp.float32))
+
+    up = C.meta_update(st, (0,), jnp.asarray([1.0, 1.0], jnp.float32),
+                       jnp.asarray([1.0, 1.0], jnp.float32), ccfg, groups)
+    # relax: (1-lr)*0.8 + lr*0.25 ; ridge: (1-lr)*0.02 + lr*0.0
+    assert float(up.relax_eff[0]) == pytest.approx(0.525)
+    assert float(up.ridge_eff[0]) == pytest.approx(0.01)
+
+    dn = C.meta_update(st, (0,), jnp.asarray([-1.0, -1.0], jnp.float32),
+                       jnp.asarray([-1.0, -1.0], jnp.float32), ccfg, groups)
+    # relax toward 1.0 ; ridge toward ridge_max
+    assert float(dn.relax_eff[0]) == pytest.approx(0.9)
+    assert float(dn.ridge_eff[0]) == pytest.approx(0.06)
+
+    # non-jumped group 1 untouched in BOTH directions
+    for out in (up, dn):
+        assert float(out.relax_eff[1]) == pytest.approx(0.8)
+        assert float(out.ridge_eff[1]) == pytest.approx(0.02)
+
+
+def test_meta_update_finite_guard_and_clip():
+    """Non-finite gradients (eigh's degenerate-eigenvalue JVP) leave the
+    knobs untouched per-knob, and ridge never escapes [0, ridge_max]."""
+    groups, _ = _ridge_groups(meta_lr=1.0, ridge_max=0.1)
+    ccfg = DMDControllerConfig(enabled=True, meta_lr=1.0, ridge_max=0.1,
+                               relax_floor=0.25, ridge=0.02)
+    st = C.init_state(groups)._replace(
+        relax_eff=jnp.asarray([0.8, 0.8], jnp.float32),
+        ridge_eff=jnp.asarray([0.02, 0.02], jnp.float32))
+    out = C.meta_update(st, (0, 1),
+                        jnp.asarray([np.nan, -1.0], jnp.float32),
+                        jnp.asarray([-1.0, np.inf], jnp.float32),
+                        ccfg, groups)
+    # group 0: relax grad NaN -> untouched; ridge grad fine -> ridge_max
+    assert float(out.relax_eff[0]) == pytest.approx(0.8)
+    assert float(out.ridge_eff[0]) == pytest.approx(0.1)
+    # group 1: relax fine -> 1.0 (lr=1); ridge inf -> untouched
+    assert float(out.relax_eff[1]) == pytest.approx(1.0)
+    assert float(out.ridge_eff[1]) == pytest.approx(0.02)
+    # clip: a huge starting ridge is pulled back inside the band
+    st_hi = st._replace(ridge_eff=jnp.asarray([5.0, 5.0], jnp.float32))
+    hi = C.meta_update(st_hi, (0,), jnp.asarray([0.0, 0.0], jnp.float32),
+                       jnp.asarray([-1.0, -1.0], jnp.float32), ccfg, groups)
+    assert float(hi.ridge_eff[0]) <= 0.1 + 1e-7
+
+
+def test_summary_renders_ridge_column():
+    groups, _ = _ridge_groups()
+    out = C.summary(C.init_state(groups), groups)
+    assert "ridge_eff" in out and "0.0700" in out

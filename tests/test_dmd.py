@@ -485,3 +485,96 @@ def test_batched_stack_matches_per_layer_loop():
                                  affine=True, trust_region=2.0)
         np.testing.assert_allclose(np.asarray(w[l]), np.asarray(w_l),
                                    rtol=1e-4, atol=1e-4)
+
+
+# -- ISSUE 9: ridge-shrunk (Tikhonov) coefficient solve ----------------------
+
+def test_ridge_zero_is_bit_exact_legacy():
+    """ridge=0 must reuse the textual legacy expression: coefficients are
+    ARRAY-EQUAL (not merely close) to a call without the argument — the
+    bit-exactness pin for every pre-ridge run."""
+    S, _ = make_linear_traj()
+    g = gram_matrix(jnp.asarray(S, jnp.float32), anchor="first")
+    c0, i0 = dmd_coefficients(g, s=9, tol=1e-6, anchor="first", affine=True)
+    c1, i1 = dmd_coefficients(g, s=9, tol=1e-6, anchor="first", affine=True,
+                              ridge=0.0)
+    assert np.array_equal(np.asarray(c0), np.asarray(c1))
+    assert int(i0["rank"]) == int(i1["rank"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), ridge=st.floats(1e-6, 1e-1))
+def test_ridge_dyn_matches_static(seed, ridge):
+    """The traced ridge knob (ridge_dyn — the meta-tuned controller path)
+    computes the same shrinkage as the static compile-time ridge."""
+    S, _ = make_linear_traj(seed=seed)
+    g = gram_matrix(jnp.asarray(S, jnp.float32), anchor="first")
+    cs, _ = dmd_coefficients(g, s=9, tol=1e-6, anchor="first", affine=True,
+                             ridge=float(ridge))
+    cd, _ = dmd_coefficients(g, s=9, tol=1e-6, anchor="first", affine=True,
+                             ridge_dyn=jnp.float32(ridge))
+    np.testing.assert_allclose(np.asarray(cd), np.asarray(cs), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_ridge_infinity_collapses_onto_anchor():
+    """As ridge -> inf the regression factor -> 0, Atilde -> 0, and the
+    anchor fold sends c -> e_0: the extrapolation degenerates to "stay at
+    the anchor snapshot" instead of blowing up."""
+    S, _ = make_linear_traj()
+    g = gram_matrix(jnp.asarray(S, jnp.float32), anchor="first")
+    m = S.shape[0]
+    e0 = np.zeros(m, np.float32)
+    e0[0] = 1.0
+    c, _ = dmd_coefficients(g, s=9, tol=1e-6, anchor="first", affine=True,
+                            ridge=1e8)
+    np.testing.assert_allclose(np.asarray(c), e0, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), ridge=st.floats(0.0, 1.0))
+def test_ridge_finite_under_defective_grams(seed, ridge):
+    """Rank-deficient Grams with REPEATED eigenvalues (duplicated
+    snapshots — the defective case that NaNs the eigh JVP) never produce
+    non-finite coefficients in the forward ridge solve."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=32).astype(np.float32)
+    S = np.stack([w] * 4 + [2.0 * w] * 4)        # rank 1, eigvals repeat
+    g = gram_matrix(jnp.asarray(S), anchor="first")
+    c, _ = dmd_coefficients(g, s=20, tol=1e-6, anchor="first", affine=True,
+                            ridge=float(ridge))
+    assert bool(jnp.all(jnp.isfinite(c)))
+    # and the dynamic-knob path survives the same Gram
+    cd, _ = dmd_coefficients(g, s=20, tol=1e-6, anchor="first", affine=True,
+                             ridge_dyn=jnp.float32(ridge))
+    assert bool(jnp.all(jnp.isfinite(cd)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_ridge_ladder_walks_toward_anchor(seed):
+    """Increasing ridge pulls the extrapolation toward the anchor snapshot
+    (up to 1% fp32 slack per decade), collapsing onto it in the limit —
+    this direction is what makes the controller's pre-solved ridge ladder
+    a shrinkage line search rather than an arbitrary knob."""
+    S, _ = make_linear_traj(noise=0.05, seed=seed)
+    Sj = jnp.asarray(S, jnp.float32)
+    g = gram_matrix(Sj, anchor="first")
+    dists = []
+    for ridge in (0.0, 1e-3, 1e-2, 1e-1, 1.0, 10.0):
+        c, _ = dmd_coefficients(g, s=9, tol=1e-6, anchor="first",
+                                affine=True, ridge=ridge)
+        w = np.asarray(combine_snapshots(Sj, c))
+        dists.append(float(np.linalg.norm(w - S[0])))
+    assert all(b <= a * 1.01 + 1e-6 for a, b in zip(dists, dists[1:])), dists
+    assert dists[-1] <= 0.05 * dists[0] + 1e-6   # collapse in the limit
+
+
+def test_atol_truncation_drops_small_modes():
+    """pymor-style absolute floor: modes the relative tol keeps are dropped
+    once their sigma sits below atol."""
+    g = jnp.asarray(np.diag([1.0, 1e-2, 1e-8, 1e-8, 1e-8, 0.5]), jnp.float32)
+    _, info_rel = dmd_coefficients(g, s=5, tol=1e-10)
+    _, info_abs = dmd_coefficients(g, s=5, tol=1e-10, atol=1e-3)
+    assert int(info_rel["rank"]) == 5            # relative mask keeps all
+    assert int(info_abs["rank"]) == 2            # absolute floor bites

@@ -394,3 +394,156 @@ def test_restore_rebuilds_grams_from_pre_streaming_checkpoint(tmp_path):
     from repro.core.leafplan import is_plan_leaf
     jax.tree_util.tree_map(chk, plans, restored.dmd_buffers,
                            restored.dmd_gram, is_leaf=is_plan_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Validation-gated controller (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+class _CountingIter:
+    """Wraps the batch iterator and counts next() calls — the stream-position
+    probe for the gate-leak regression."""
+
+    def __init__(self, it):
+        self.it, self.n = it, 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        self.n += 1
+        return next(self.it)
+
+
+def test_gate_never_consumes_training_batches():
+    """Regression (ISSUE 9 tentpole bug): the old controller fallback drew
+    its gate batch via next(batches), consuming a TRAINING batch — the
+    stream position shifted by one and the gate scored on training data. A
+    gated fit with no explicit eval_batch must consume exactly `steps`
+    batches (gate rounds included) and gate on the init-carved validation
+    split instead."""
+    trainer, batches = _tiny_setup(dmd=True, controller=_ctrl_cfg())
+    assert trainer.val_batch is not None       # carved at init (vocab model)
+    wrapped = _CountingIter(batches)
+    outcomes = []
+
+    def on_m(s, m):
+        if "ctrl_outcome" in m:
+            outcomes.append(int(m["ctrl_outcome"]))
+    trainer.fit(wrapped, steps=16, on_metrics=on_m)
+    assert outcomes                            # the gate DID fire
+    assert wrapped.n == 16                     # ... without touching the stream
+
+
+def test_val_gate_rollback_oracle():
+    """ISSUE 9 satellite: the PR-4 forced-reject oracle through the NEW
+    validation-gate path — accept_tol=-1.0 with val_gate=True and NO
+    explicit eval_batch (the gate runs on the trainer's carved validation
+    split). Every jump must reject and the final TrainState must be
+    array-equal-IDENTICAL to a run that never dispatched a dmd_step."""
+    ctrl = _ctrl_cfg(accept_tol=-1.0, val_gate=True)
+    trainer, batches = _tiny_setup(dmd=True, controller=ctrl)
+    assert trainer.val_batch is not None
+    outcomes = []
+
+    def on_m(s, m):
+        if "ctrl_outcome" in m:
+            outcomes.append(int(m["ctrl_outcome"]))
+    state = trainer.fit(batches, steps=16, on_metrics=on_m)
+    assert outcomes and all(o == 0 for o in outcomes)
+    assert int(state.controller.rejects.sum()) == len(outcomes)
+
+    oracle, _ = _tiny_setup(dmd=True, controller=ctrl)
+    o_state = oracle.init_state()
+    batches2 = synthetic_lm_batches(0, 4, 16, oracle.model.cfg.vocab_size)
+    for t in range(16):
+        o_state, _ = oracle.train_step(o_state, next(batches2),
+                                       jnp.asarray(t, jnp.int32))
+    for name, a_tree, b_tree in (
+            ("params", state.params, o_state.params),
+            ("opt_state", state.opt_state, o_state.opt_state),
+            ("dmd_buffers", state.dmd_buffers, o_state.dmd_buffers),
+            ("dmd_gram", state.dmd_gram, o_state.dmd_gram)):
+        for a, b in zip(jax.tree_util.tree_leaves(a_tree),
+                        jax.tree_util.tree_leaves(b_tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+def test_val_gate_prefers_validation_split():
+    """val_gate=True must gate on the carved validation split even when the
+    caller hands fit() a DIFFERENT eval_batch: the run with a decoy batch
+    and the run with none are bit-identical."""
+    ctrl = _ctrl_cfg(val_gate=True)
+    trainer_a, batches_a = _tiny_setup(dmd=True, controller=ctrl)
+    decoy = _eval_batch_for(trainer_a)         # stream offset 10^6 != fold
+    state_a = trainer_a.fit(batches_a, steps=16, eval_batch=decoy)
+
+    trainer_b, batches_b = _tiny_setup(dmd=True, controller=ctrl)
+    state_b = trainer_b.fit(batches_b, steps=16)
+
+    for a, b in zip(jax.tree_util.tree_leaves(state_a.params),
+                    jax.tree_util.tree_leaves(state_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(state_a.controller.accepts),
+        np.asarray(state_b.controller.accepts))
+
+
+def test_controller_without_gate_batch_raises():
+    """No carved split AND no explicit eval_batch must be a loud error —
+    never a silent draw from the training iterator (the old leak)."""
+    trainer, batches = _tiny_setup(dmd=True, controller=_ctrl_cfg())
+    trainer.val_batch = None                   # simulate a vocab-less model
+    with pytest.raises(ValueError, match="gate batch"):
+        trainer.fit(batches, steps=10)
+
+
+def test_eval_rows_clamped_to_batch_size():
+    """eval_rows far past the actual batch size clamps instead of slicing
+    into nothing; the gate still fires and the run stays finite."""
+    ctrl = _ctrl_cfg(eval_rows=999)            # batch has 4 rows
+    trainer, batches = _tiny_setup(dmd=True, controller=ctrl)
+    outcomes = []
+
+    def on_m(s, m):
+        if "ctrl_outcome" in m:
+            outcomes.append(int(m["ctrl_outcome"]))
+    state = trainer.fit(batches, steps=16, on_metrics=on_m)
+    assert outcomes
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_meta_tuning_moves_knobs_and_stays_finite():
+    """meta_lr > 0 (matpow mode): after gated jumps the per-group
+    relax_eff/ridge_eff have been EMA'd somewhere INSIDE their bands and
+    the trajectory stays finite; with meta off they sit exactly at their
+    init values (ridge_eff == schedule ridge, relax only moved by
+    accept/scale dynamics)."""
+    ctrl = _ctrl_cfg(val_gate=True, meta_lr=0.25, ridge_max=0.1)
+    trainer, batches = _tiny_setup(dmd=True, controller=ctrl)
+    state = trainer.fit(batches, steps=16)
+    ctrl_st = state.controller
+    r = np.asarray(ctrl_st.ridge_eff)
+    assert np.all(np.isfinite(r)) and np.all(r >= 0.0) and np.all(r <= 0.1)
+    assert np.all(np.isfinite(np.asarray(ctrl_st.relax_eff)))
+    # meta actually moved the jumped group's ridge off its init (init is
+    # the schedule ridge = 0.0 here; EMA toward 0 keeps it 0 ONLY if every
+    # gradient said "less ridge" — either way the run recorded jumps)
+    assert int(ctrl_st.accepts.sum() + ctrl_st.scaled.sum()
+               + ctrl_st.rejects.sum()) > 0
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_shrink_levels_validation():
+    """Bad shrink ladders fail at BUILD time, not mid-run."""
+    from repro.train.step import make_dmd_step
+    ctrl = _ctrl_cfg(shrink_levels=(0.5, 1.5))
+    trainer, _ = _tiny_setup(dmd=True)         # plain trainer for acc/model
+    acfg = dataclasses.replace(
+        trainer.acfg, dmd=dataclasses.replace(trainer.acfg.dmd,
+                                              controller=ctrl))
+    with pytest.raises(ValueError, match="shrink_levels"):
+        make_dmd_step(acfg, model=trainer.model)
