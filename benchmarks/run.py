@@ -92,6 +92,7 @@ def main():
                                           fig4_curves, sec3_overhead,
                                           sharded_gram, staggered_jump,
                                           streaming_gram)
+    from benchmarks.serving import serve_bench
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
 
@@ -112,6 +113,8 @@ def main():
         ("controller", (lambda: controller(
             steps=300, sizes=(6, 40, 80, 200))) if args.quick
          else controller),
+        ("serve", (lambda: serve_bench(n_requests=12, new_tokens=12))
+         if args.quick else serve_bench),
         ("kernels", bench_kernels),
         ("fig3", (lambda: fig3_sensitivity(ms=(6, 14), ss=(10, 55),
                                            steps=300))

@@ -1,0 +1,136 @@
+"""Serving-engine benchmark (BENCH_serve.json, DESIGN.md §10).
+
+  serve_bench   frozen-weights pump vs a pump taking live DMD weight
+                hot-swaps mid-serve: steady-state tokens/sec, p50/p99
+                per-decode-step latency, swap count, dropped requests,
+                steady-state recompiles. The committed BENCH_serve.json
+                feeds the deterministic CI guard: hot-swap tokens/sec
+                >= 0.9x frozen, p99 decode-step latency <= 1.5x frozen,
+                >= 3 swaps landed, zero dropped requests, zero
+                steady-state recompiles.
+
+Both pumps run the identical request trace on the identical engine
+config and are timed the same way (engine.sync() after every step, so a
+"step" is dispatch + device completion); the ONLY difference is the
+swap_weights() calls landing between decode steps. Per-step walls
+exclude the swap itself (the publish path is off the decode critical
+path by construction); end-to-end tokens/sec includes it — that is the
+throughput a client sees across a swap.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _engine_setup():
+    from repro.configs import get_config, reduced
+    from repro.models.transformer import LanguageModel
+    from repro.serve import ServeConfig, ServeEngine
+
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=2, d_model=64, d_ff=128,
+                 vocab_size=256, n_heads=2, n_kv_heads=2, head_dim=32)
+    model = LanguageModel(mc, head_tp=False, chunk_k=16, scan_layers=False)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = ServeConfig(n_slots=8, prompt_buckets=(8, 16),
+                      batch_buckets=(1, 2, 4), max_new_tokens=64)
+    return model, params, cfg, ServeEngine(model, params, cfg)
+
+
+def _pump(engine, prompts, new_tokens, swap_sources=(), swap_every=0):
+    """Serve the full trace; returns (walls_per_step_s, total_wall_s)."""
+    for p in prompts:
+        engine.submit(p, max_new_tokens=new_tokens)
+    walls, results, versions = [], [], iter(swap_sources)
+    t_all = time.perf_counter()
+    step = 0
+    while engine.queue_len or engine.active_slots:
+        t0 = time.perf_counter()
+        results += engine.step()
+        engine.sync()
+        walls.append(time.perf_counter() - t0)
+        step += 1
+        if swap_every and step % swap_every == 0:
+            nxt = next(versions, None)
+            if nxt is not None:
+                version, params = nxt
+                engine.swap_weights(params, version=version)
+    return walls, time.perf_counter() - t_all, results
+
+
+def serve_bench(n_requests=24, new_tokens=24, n_swaps=3) -> List[str]:
+    """Frozen vs hot-swap pump on the identical request trace."""
+    model, params, cfg, warm_engine = _engine_setup()
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, model.cfg.vocab_size,
+                                 size=rng.integers(2, cfg.prompt_buckets[-1]
+                                                   + 1)))
+               for _ in range(n_requests)]
+
+    def fresh():
+        from repro.serve import ServeEngine
+        eng = ServeEngine(model, params, cfg)
+        # warm every (prompt, batch) bucket + insert + decode, then freeze
+        for wave in ([3] * 4, [12] * 4, [5] * 2, [9] * 2, [4], [10]):
+            for n in wave:
+                eng.submit(list(range(1, n + 1)), max_new_tokens=2)
+            eng.run_until_drained()
+        eng.mark_steady()
+        for k in eng.stats:
+            if k not in ("compiles", "steady_compiles"):
+                eng.stats[k] = 0
+        return eng
+
+    # swap sources: perturbed weights standing in for DMD-jumped params
+    swaps = [(10 * (i + 1),
+              jax.tree_util.tree_map(lambda l, i=i: l * (1 + 1e-3 * (i + 1)),
+                                     params))
+             for i in range(n_swaps)]
+
+    frozen = fresh()
+    fw, f_total, f_res = _pump(frozen, prompts, new_tokens)
+    hot = fresh()
+    # land every swap while requests are in flight: total decode steps is
+    # ~ n_requests/n_slots waves * new_tokens; spread swaps over the
+    # first half so none degenerate into a post-drain no-op
+    n_steps_est = max(len(fw), n_swaps * 2)
+    every = max(1, n_steps_est // (2 * n_swaps))
+    hw, h_total, h_res = _pump(hot, prompts, new_tokens,
+                               swap_sources=swaps, swap_every=every)
+
+    tok_f = frozen.stats["tokens_emitted"] / f_total
+    tok_h = hot.stats["tokens_emitted"] / h_total
+    tok_ratio = tok_h / tok_f
+    p99_ratio = float(np.percentile(hw, 99) / np.percentile(fw, 99))
+
+    rows = ["serve,pump,tok_s,p50_ms,p99_ms,decode_steps,swaps,dropped,"
+            "steady_compiles"]
+    for name, eng, walls, total in (("frozen", frozen, fw, f_total),
+                                    ("hotswap", hot, hw, h_total)):
+        rows.append(
+            f"serve,{name},{eng.stats['tokens_emitted'] / total:.1f},"
+            f"{np.percentile(walls, 50) * 1e3:.2f},"
+            f"{np.percentile(walls, 99) * 1e3:.2f},{len(walls)},"
+            f"{eng.stats['swaps']},{eng.stats['dropped']},"
+            f"{eng.stats['steady_compiles']}")
+    ok = (tok_ratio >= 0.9 and p99_ratio <= 1.5
+          and hot.stats["swaps"] >= n_swaps and hot.stats["dropped"] == 0
+          and hot.stats["steady_compiles"] == 0)
+    rows.append(f"serve_final,tok_s_ratio,{tok_ratio:.3f},p99_ratio,"
+                f"{p99_ratio:.3f},swaps,{hot.stats['swaps']},dropped,"
+                f"{hot.stats['dropped']},steady_compiles,"
+                f"{hot.stats['steady_compiles']},"
+                f"hotswap_{'WINS' if ok else 'LOSES'}")
+    # every request served on both pumps, hot-swap stamped the versions
+    assert len(f_res) == len(h_res) == n_requests
+    assert {r.version_end for r in f_res} == {0}
+    assert max(r.version_end for r in h_res) == swaps[-1][0]
+    rows.append(f"serve_versions,frozen,0,hotswap_max,"
+                f"{max(r.version_end for r in h_res)},programs,"
+                f"{hot.n_programs}/{hot.max_programs}")
+    return rows

@@ -1,77 +1,92 @@
-"""Batched serving demo: prefill a batch of prompts, then decode greedily.
+"""Continuous-batching serving demo: mixed-length request stream with a
+live weight hot-swap mid-flight (DESIGN.md §10).
 
-    PYTHONPATH=src python examples/serve_batch.py [--arch gemma3-27b]
-        [--batch 4] [--prompt-len 32] [--new-tokens 16]
+    PYTHONPATH=src python examples/serve_batch.py [--arch tinyllama-1.1b]
+        [--requests 10] [--new-tokens 8] [--swap]
 
-Exercises the production serving path (prefill -> KV caches incl. ring
-caches for sliding-window layers -> decode steps) on a reduced config.
+Drives ``repro.serve.ServeEngine``: prompts are packed into padded
+prompt/batch buckets (one compiled program per bucket — the demo prints
+the program registry to show steady state never recompiles), decode runs
+over donated slot-stacked KV caches with in-jit greedy sampling (zero
+host syncs per token), and ``--swap`` publishes perturbed weights
+through a ``WeightsChannel`` (the same atomic checkpoint machinery the
+trainer's publish hook uses) while requests are in flight — the report
+shows which weight version each request started and finished on.
+
+Needs only the pyproject pythonpath (``PYTHONPATH=src`` or an editable
+install) — no sys.path hacks.
 """
 import argparse
-import sys
+import tempfile
 import time
-
-sys.path.insert(0, "src")
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, reduced
-from repro.models.transformer import LanguageModel
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-27b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    help="any dense/moe KV-cache arch (ring-cache and SSM "
+                         "families are not servable by the engine yet)")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--swap", action="store_true",
+                    help="hot-swap perturbed weights mid-stream via a "
+                         "WeightsChannel publish")
     args = ap.parse_args()
 
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models.transformer import LanguageModel
+    from repro.serve import ServeConfig, ServeEngine, WeightsChannel
+
     acfg = get_config(args.arch)
-    mc = reduced(acfg.model)
-    model = LanguageModel(mc, head_tp=False, chunk_k=64)
+    mc = reduced(acfg.model, n_layers=2, d_model=64, d_ff=128,
+                 vocab_size=256, n_heads=2, n_kv_heads=2, head_dim=32)
+    # scan_layers=False is the serving build (launch/serve.py): unrolled
+    # layers keep the donated slot-stacked cache update fully in place.
+    model = LanguageModel(mc, head_tp=False, chunk_k=16, scan_layers=False)
     params = model.init(jax.random.PRNGKey(0))
-    B, P, N = args.batch, args.prompt_len, args.new_tokens
 
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
-                                 mc.vocab_size)
-    batch = {"tokens": prompts}
-    if mc.mrope_sections:
-        batch["positions"] = jnp.broadcast_to(
-            jnp.arange(P)[None, None, :], (B, 3, P))
-    if mc.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2), (B, mc.encoder_seq_len, mc.d_model))
+    cfg = ServeConfig(n_slots=4, prompt_buckets=(8, 16), batch_buckets=(1, 2),
+                      max_new_tokens=args.new_tokens)
+    engine = ServeEngine(model, params, cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        n = int(rng.integers(2, cfg.prompt_buckets[-1] + 1))
+        engine.submit(rng.integers(1, mc.vocab_size, size=(n,)).tolist())
 
-    caches = model.init_cache(B, P + N)
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
-
+    done = []
     t0 = time.time()
-    logits, caches = prefill(params, batch, caches)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+    if args.swap:
+        with tempfile.TemporaryDirectory() as root:
+            channel = WeightsChannel(root)
+            bumped = jax.tree_util.tree_map(lambda l: l * 1.001, params)
+            swapped = False
+            while engine.queue_len or engine.active_slots:
+                done.extend(engine.step())
+                if not swapped and engine.stats["completed"] >= 2:
+                    # trainer side: publish; server side: poll + swap
+                    channel.publish(bumped, version=100)
+                    channel.poll(engine, params)
+                    swapped = True
+    else:
+        done = engine.run_until_drained()
+    engine.sync()
+    wall = time.time() - t0
 
-    generated = [next_tok]
-    t0 = time.time()
-    for i in range(N - 1):
-        dbatch = {"tokens": next_tok}
-        if mc.mrope_sections:
-            dbatch["positions"] = jnp.full((B, 3, 1), P + i, jnp.int32)
-        logits, caches = decode(params, dbatch, caches)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-        generated.append(next_tok)
-    jax.block_until_ready(generated[-1])
-    t_decode = time.time() - t0
-
-    tokens = jnp.concatenate(generated, axis=1)
-    print(f"arch={args.arch} (reduced) B={B}")
-    print(f"prefill {P} tokens: {t_prefill*1e3:.0f} ms "
-          f"(incl. compile)")
-    print(f"decode {N-1} steps: {t_decode*1e3:.0f} ms "
-          f"-> {(N-1)*B/max(t_decode,1e-9):.0f} tok/s (batch)")
-    print("generated ids[0]:", tokens[0].tolist())
+    s = engine.stats
+    print(f"arch={args.arch} (reduced) slots={cfg.n_slots}")
+    print(f"{len(done)} requests, {s['tokens_emitted']} tokens in "
+          f"{wall*1e3:.0f} ms -> "
+          f"{s['tokens_emitted']/max(wall,1e-9):.0f} tok/s "
+          f"(incl. {s['compiles']} compiles)")
+    print(f"programs={engine.n_programs}/{engine.max_programs} "
+          f"steady_compiles={s['steady_compiles']} swaps={s['swaps']} "
+          f"dropped={s['dropped']}")
+    for r in sorted(done, key=lambda r: r.uid)[:4]:
+        print(f"  req{r.uid} prompt={r.prompt_len} "
+              f"v{r.version_start}->v{r.version_end}: {r.tokens}")
 
 
 if __name__ == "__main__":

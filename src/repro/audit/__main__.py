@@ -43,6 +43,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mutate", default=None,
                     help="seed a named violation (see repro.audit."
                          "mutations; CI mutation check)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also build + exercise the serving engine and "
+                         "run the serve-compile pass over it")
     ap.add_argument("--passes", default=None,
                     help="comma-separated subset of passes to run")
     ap.add_argument("--out", default=".",
@@ -66,7 +69,8 @@ def main(argv=None) -> int:
 
     only = args.passes.split(",") if args.passes else None
     ctx = build_context(args.arch, reduced=args.reduced,
-                        mesh_shape=args.mesh, mutate=args.mutate)
+                        mesh_shape=args.mesh, mutate=args.mutate,
+                        serve=args.serve)
     report = run_passes(ctx, only=only)
 
     print(report.render())

@@ -21,11 +21,17 @@ exits nonzero while the clean build stays green:
   overlap-groups   add two match-everything group rules with distinct
                    phases -> schedule-conflict fails (overlap; and if the
                    residues still collide, the stagger check too)
+  force-recompile  degrade the serve engine's prompt buckets to exact
+                   lengths (every novel length compiles a fresh prefill)
+                   -> serve-compile fails (steady-state compiles > 0 and
+                   registry above the bucket ceiling)
 
-Mutations compose with ``build_context`` at three seams: ``config``
+Mutations compose with ``build_context`` at four seams: ``config``
 rewrites the ArchConfig before anything is built, ``donate`` feeds
-``audit_step_fns``, ``wrap_fns`` replaces jitted entry points, and
-``post`` edits the static tables after the build (for table-only passes).
+``audit_step_fns``, ``wrap_fns`` replaces jitted entry points, ``post``
+edits the static tables after the build (for table-only passes), and
+``serve``/``serve_cfg`` attach + rewrite the serving-engine build
+(repro.serve.audit.attach_serve).
 """
 from __future__ import annotations
 
@@ -44,6 +50,8 @@ class Mutation:
     config: Optional[Callable] = None    # acfg -> acfg
     wrap_fns: Optional[Callable] = None  # (acc, fns, mesh) -> fns
     post: Optional[Callable] = None      # ctx -> None
+    serve: bool = False                  # attach the serving-engine build
+    serve_cfg: Optional[Callable] = None  # ServeConfig -> ServeConfig
 
 
 _REGISTRY: Dict[str, Mutation] = {}
@@ -228,3 +236,19 @@ _register(Mutation(
     doc="two match-everything group rules with distinct phases",
     expect_fail="schedule-conflict",
     config=_overlap_groups))
+
+
+def _force_recompile_serve_cfg(scfg):
+    # Exact-length prompt "buckets": each novel steady-state length
+    # compiles a fresh prefill program, so steady_compiles > 0 and the
+    # registry outgrows the analytic bucket ceiling.
+    return dataclasses.replace(scfg, force_recompile=True)
+
+
+_register(Mutation(
+    name="force-recompile",
+    doc="serve engine with exact-length prompt buckets (fresh prefill "
+        "compile per novel steady-state length)",
+    expect_fail="serve-compile",
+    serve=True,
+    serve_cfg=_force_recompile_serve_cfg))

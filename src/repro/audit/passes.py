@@ -15,6 +15,9 @@ a stable name. The registry order below is the report order:
   arena-residency           resident params: no bucket-sized pack gathers in
                             the hot data passes (record is a pointer bump)
   schedule-conflict         overlapping rules, phase-residue collisions, clamps
+  serve-compile             serve engine: program count <= bucket ceiling,
+                            zero steady-state recompiles, donated copy-free
+                            decode over the slot-stacked caches
 
 These are the SAME invariant checks the tier-1 audits assert
 (tests/test_donation.py, tests/test_trace_size.py route through them) —
@@ -740,4 +743,80 @@ def schedule_conflict(ctx):
                 f"jump residues collide (r={ra} mod {a.cycle} meets "
                 f"r={rb} mod {b.cycle}, gcd={math.gcd(a.cycle, b.cycle)})"
                 " — the stagger never takes effect"))
+    return vs, info
+
+
+# ---------------------------------------------------------------------------
+# serve-compile
+# ---------------------------------------------------------------------------
+
+@register_pass(
+    "serve-compile",
+    "serve engine compiles <= bucket ceiling, zero steady recompiles, "
+    "donated copy-free decode")
+def serve_compile(ctx):
+    """The serving engine's compile + donation contract (DESIGN.md §10).
+
+    Over ``ctx.serve`` (attached by repro.serve.audit.attach_serve):
+
+      * the AOT program registry never exceeds the analytic bucket
+        ceiling (1 decode + prefill per prompt x batch bucket + insert
+        per batch bucket + the ParamStore landing copy);
+      * ZERO compiles after ``mark_steady()`` — steady state serves from
+        the warm registry, a recompile means a shape leaked past the
+        bucket policy (the ``force-recompile`` mutation's exact-length
+        "buckets" are the seeded violation);
+      * the engine dropped no requests while doing it.
+
+    Over the ``serve_decode`` target (the compiled decode program): every
+    slot-stacked cache leaf aliases input->output (donated decode state)
+    and no cache-shaped copy survives compilation — same invariant the
+    donation-alias pass pins for serve_fns, here for the slot table.
+    """
+    vs: List[Violation] = []
+    info: Dict[str, object] = {}
+    s = getattr(ctx, "serve", None)
+    if not s:
+        info["note"] = ("no serving build attached — run the CLI with "
+                        "--serve")
+        return vs, info
+    info.update(s)
+    if s.get("skipped"):
+        return vs, info
+
+    if int(s["n_programs"]) > int(s["max_programs"]):
+        vs.append(Violation(
+            "serve-compile", "registry",
+            f"{s['n_programs']} compiled programs exceed the bucket "
+            f"ceiling {s['max_programs']} ({s['n_prompt_buckets']} prompt "
+            f"x {s['n_batch_buckets']} batch buckets): some shape is not "
+            "bucketed"))
+    if int(s["steady_compiles"]) > 0:
+        vs.append(Violation(
+            "serve-compile", "registry",
+            f"{s['steady_compiles']} compiles AFTER warmup: steady state "
+            "must serve entirely from the warm program registry"))
+    if int(s.get("dropped", 0)) > 0:
+        vs.append(Violation(
+            "serve-compile", "engine",
+            f"{s['dropped']} requests dropped during the audit workload"))
+
+    t = ctx.targets.get("serve_decode")
+    if t is not None:
+        copies = H.copy_ops(t.hlo, t.buffer_shapes)
+        info["decode_cache_copies"] = len(copies)
+        if copies:
+            vs.append(Violation(
+                "serve-compile", "serve_decode",
+                f"{len(copies)} cache-shaped copies in the compiled "
+                f"decode (e.g. {copies[0]}): the slot-stacked KV update "
+                "is not in-place"))
+        ac = H.alias_count(t.hlo)
+        info["decode_alias_count"] = ac
+        if ac < t.n_dmd_leaves:
+            vs.append(Violation(
+                "serve-compile", "serve_decode",
+                f"only {ac} input->output aliases for {t.n_dmd_leaves} "
+                "slot-stacked cache leaves: decode state donation "
+                "dropped"))
     return vs, info

@@ -68,6 +68,10 @@ class AuditContext:
     groups: Tuple[Any, ...]         # resolved GroupSchedule table
     state: Any                      # TrainState (shape source of truth)
     targets: Dict[str, AuditTarget] = field(default_factory=dict)
+    # serve-engine build info (repro.serve.audit.attach_serve): program
+    # registry counts for the serve-compile pass, or None when no serving
+    # build was attached (--serve).
+    serve: Optional[Dict[str, Any]] = None
 
     @property
     def cfg(self):
@@ -277,12 +281,19 @@ def adhoc_context(arch: str, acfg, targets: Dict[str, AuditTarget], *,
 
 def build_context(arch: str, *, reduced: bool = False,
                   mesh_shape: Optional[Tuple[int, ...]] = None,
-                  mutate: Optional[str] = None) -> AuditContext:
+                  mutate: Optional[str] = None,
+                  serve: bool = False) -> AuditContext:
     """Build every audit target + static table for one config.
 
     ``mesh_shape`` (e.g. ``(2, 4)``) traces under a real mesh — the
     process must already expose enough devices (the CLI sets
-    ``--xla_force_host_platform_device_count`` before importing jax)."""
+    ``--xla_force_host_platform_device_count`` before importing jax).
+
+    ``serve=True`` (CLI ``--serve``) additionally builds a reduced
+    serving engine over the same model family, drives a warmup + steady
+    workload through it, and attaches its program-registry counts
+    (``ctx.serve``) and compiled decode program (``serve_decode`` target)
+    for the serve-compile pass."""
     import contextlib
 
     import jax
@@ -352,6 +363,15 @@ def build_context(arch: str, *, reduced: bool = False,
         ctx.targets["dmd_step_gated"] = trace_target(
             "dmd_step_gated", gfns["dmd_step"], (gstate, grelax, batch),
             {"groups": None}, gstate, donate)
+
+    # Serving build OUTSIDE the mesh context: the engine's vmapped decode
+    # is a single-host program (its constrain() calls are identity with no
+    # active mesh) — mesh serving placement is launch/inputs.py's
+    # serve_state_specs, exercised by its own tests.
+    if serve or (mutation is not None and mutation.serve):
+        from repro.serve.audit import attach_serve
+        attach_serve(ctx, mutate=(mutation.serve_cfg
+                                  if mutation is not None else None))
 
     if mutation is not None and mutation.post is not None:
         mutation.post(ctx)

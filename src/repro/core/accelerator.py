@@ -597,6 +597,16 @@ class DMDAccelerator:
         return new_bufs, new_grams
 
     # ---- checkpoint format (leaf-wise arena views) ------------------------
+    def params_leafwise(self, params):
+        """Param pytree with arena-resident leaves expanded back to
+        per-leaf arrays — identity for non-resident params. This is the
+        serving/publish template layout: the trainer's publish hook
+        (train/loop.py ``on_publish``) exports through here so a serving
+        ParamStore / WeightsChannel never sees the packed flat buckets."""
+        if arena_mod.is_arena_state(params):
+            return arena_mod.tree_leafwise(self.arena_for(params), params)
+        return params
+
     def state_leafwise(self, state):
         """TrainState -> the same state with arenas unpacked into the
         per-leaf buffer/Gram pytrees (the ``dmd.arena=False`` layout) AND
@@ -616,7 +626,7 @@ class DMDAccelerator:
                         if arena_mod.is_arena_state(x) else x)
 
             state = state._replace(
-                params=arena_mod.tree_leafwise(table, state.params),
+                params=self.params_leafwise(state.params),
                 opt_state=jax.tree_util.tree_map(
                     unwrap, state.opt_state,
                     is_leaf=arena_mod.is_arena_state))

@@ -266,3 +266,58 @@ def shardings_of(tree_specs: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree_specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving engine (repro.serve)
+# ---------------------------------------------------------------------------
+
+def param_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    """Per-leaf PartitionSpecs for a bare (leaf-wise) param pytree — the
+    serving/publish template placement. Same path rules the training
+    state uses (state_specs' ``/params`` branch), without the TrainState
+    wrapper: this is what a ParamStore's ``shardings=`` wants after the
+    trainer's ``acc.params_leafwise`` export."""
+    def one(path, leaf):
+        p = normalize_path(jax.tree_util.keystr(path))
+        if len(getattr(leaf, "shape", ())) == 0:
+            return P()
+        return _param_spec_of(p, leaf, mesh)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def serve_state_specs(dstate: PyTree, mesh: Mesh) -> PyTree:
+    """Specs for the serve engine's slot-stacked decode state
+    (repro.serve.engine.ServeEngine._dstate).
+
+    The leading ``(n_slots,)`` axis IS the serving data parallelism —
+    continuous batching shards the slot table over the batch axes when
+    divisible. Cache k/v leaves ``(n_slots, count, 1, s_max, K, hd)``
+    additionally keep the kv-head tensor parallelism of
+    ``cache_partition_specs`` (the "model" axis on K when divisible);
+    the token cursors, output rows, counters, and the PRNG key are tiny
+    and follow the slot axis or stay replicated."""
+    sizes = _mesh_sizes(mesh)
+    tp = sizes.get("model", 1)
+    nb = _nbatch(mesh)
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        p = normalize_path(jax.tree_util.keystr(path))
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0 or p.endswith("/key"):
+            return P()
+        slot = ba if shape[0] % nb == 0 else None
+        if p.endswith("/k") or p.endswith("/v"):
+            K = shape[-2]
+            k_tp = "model" if (K % tp == 0 and K >= tp) else None
+            return P(slot, *((None,) * (nd - 3)), k_tp, None)
+        return P(*((slot,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, dstate)
+
+
+def serve_state_shardings(dstate: PyTree, mesh: Mesh) -> PyTree:
+    """NamedShardings for the slot-stacked decode state."""
+    return shardings_of(serve_state_specs(dstate, mesh), mesh)

@@ -1,18 +1,30 @@
-"""Batched serving launcher: prefill a batch of prompts, decode N tokens.
+"""Serving launcher: a thin CLI over the continuous-batching engine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b --reduced \
-        [--batch 4] [--prompt-len 32] [--new-tokens 16] [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced [--requests 12] [--new-tokens 16] [--sampling topk] \
+        [--swap-every 8]
 
-On TPU slices this serves the full config on the production mesh (KV caches
-sharded per launch/inputs.py rules: kv-head TP when divisible, sequence-
-sharded flash-decoding otherwise).
+Submits a mixed-length synthetic request stream to ``repro.serve``'s
+``ServeEngine`` (DESIGN.md §10): padded prompt/batch buckets — one
+compiled program per bucket, zero steady-state recompiles — slot-based
+decode over donated KV/decode state with in-jit sampling (no host sync
+per token), and optional live weight hot-swaps mid-stream
+(``--swap-every``) to demo the version-stamped double-buffered publish
+path. On TPU slices the full config runs on the production mesh with the
+slot table sharded per ``launch/inputs.serve_state_specs``.
+
+The per-token decode loop of the seed-era launcher (an
+``argmax(logits[:, -1])`` host round-trip between every pair of
+dispatches) lives on only inside the engine's jitted decode program;
+``serve_fns`` below stays as the audited two-program serving contract
+the engine's decode donation mirrors (tests/test_serve_audit.py).
 """
 import argparse
 import time
 
 
 def serve_fns(model, donate=True):
-    """The serving programs, jitted the way ``main`` runs them: the KV
+    """The serving programs, jitted the way the engine runs them: the KV
     caches (positional arg 2 of both prefill and decode_step) are donated
     so the per-token cache update is in-place — a decode step that COPIES
     its caches doubles the serving HBM footprint and shows up in the
@@ -30,17 +42,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--sampling", choices=("greedy", "topk"),
+                    default="greedy")
+    ap.add_argument("--swap-every", type=int, default=0,
+                    help="hot-swap perturbed weights every N engine steps "
+                         "(0 = frozen server)")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config, reduced
     from repro.distributed.sharding import mesh_context
     from repro.models.transformer import LanguageModel
+    from repro.serve import ServeConfig, ServeEngine
 
     acfg = get_config(args.arch)
     mc = reduced(acfg.model) if args.reduced else acfg.model
@@ -59,37 +77,35 @@ def main():
         model = LanguageModel(mc, head_tp=not args.reduced, chunk_k=64,
                               scan_layers=False)
         params = model.init(jax.random.PRNGKey(0))
-        B, P, N = args.batch, args.prompt_len, args.new_tokens
-        batch = {"tokens": jax.random.randint(
-            jax.random.PRNGKey(1), (B, P), 0, mc.vocab_size)}
-        if mc.mrope_sections:
-            batch["positions"] = jnp.broadcast_to(
-                jnp.arange(P)[None, None, :], (B, 3, P))
-        if mc.family == "encdec":
-            batch["frames"] = jax.random.normal(
-                jax.random.PRNGKey(2), (B, mc.encoder_seq_len, mc.d_model))
-        caches = model.init_cache(B, P + N)
-        fns = serve_fns(model)
-        prefill, decode = fns["prefill"], fns["decode_step"]
+        cfg = ServeConfig(n_slots=args.slots, prompt_buckets=(16, 64),
+                          batch_buckets=(1, 4), sampling=args.sampling,
+                          max_new_tokens=args.new_tokens,
+                          adopt="step")
+        engine = ServeEngine(model, params, cfg)
+        rng = np.random.default_rng(0)
+        for _ in range(args.requests):
+            n = int(rng.integers(4, cfg.prompt_buckets[-1] + 1))
+            engine.submit(rng.integers(
+                1, mc.vocab_size, size=(n,)).tolist())
+
+        swap_src = jax.tree_util.tree_map(lambda l: l * 1.001, params)
+        done, steps = [], 0
         t0 = time.time()
-        logits, caches = prefill(params, batch, caches)
-        jax.block_until_ready(logits)
-        t_pre = time.time() - t0
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        t0 = time.time()
-        out = [tok]
-        for i in range(N - 1):
-            d = {"tokens": tok}
-            if mc.mrope_sections:
-                d["positions"] = jnp.full((B, 3, 1), P + i, jnp.int32)
-            logits, caches = decode(params, d, caches)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            out.append(tok)
-        jax.block_until_ready(out[-1])
-        t_dec = time.time() - t0
-        print(f"prefill({P})={t_pre*1e3:.0f}ms decode({N-1})="
-              f"{t_dec*1e3:.0f}ms -> {(N-1)*B/max(t_dec,1e-9):.0f} tok/s")
-        print("ids[0]:", jnp.concatenate(out, 1)[0].tolist())
+        while engine.queue_len or engine.active_slots:
+            done.extend(engine.step())
+            steps += 1
+            if args.swap_every and steps % args.swap_every == 0:
+                engine.swap_weights(swap_src)
+        engine.sync()
+        wall = time.time() - t0
+        s = engine.stats
+        print(f"{len(done)} requests, {s['tokens_emitted']} tokens in "
+              f"{wall*1e3:.0f}ms -> {s['tokens_emitted']/max(wall,1e-9):.0f}"
+              f" tok/s | swaps={s['swaps']} dropped={s['dropped']} "
+              f"programs={engine.n_programs}/{engine.max_programs}")
+        first = min(done, key=lambda r: r.uid)
+        print(f"ids[{first.uid}] v{first.version_start}->"
+              f"{first.version_end}: {first.tokens}")
 
     if mesh_cm is not None:
         with mesh_cm:

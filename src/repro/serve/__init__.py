@@ -1,0 +1,11 @@
+"""Continuous-batching serving engine with live DMD weight hot-swap
+(DESIGN.md §10): padded shape buckets (one compiled program per bucket,
+zero steady-state recompiles), slot-based decode over donated KV/decode
+state, in-jit sampling (zero host syncs per token), and version-stamped
+double-buffered weight publishes off the trainer's accepted gated jumps.
+"""
+from repro.serve.engine import Request, Result, ServeConfig, ServeEngine
+from repro.serve.store import ParamStore, WeightsChannel
+
+__all__ = ["Request", "Result", "ServeConfig", "ServeEngine",
+           "ParamStore", "WeightsChannel"]

@@ -1,0 +1,68 @@
+"""Serve-engine audit build: drive a reduced engine through a warmup +
+steady workload and attach its program-registry counts to an
+AuditContext for the ``serve-compile`` pass.
+
+The workload is chosen so warmup touches EVERY program the bucket policy
+allows (each prompt bucket at each batch bucket, both inserts, the
+decode) and the steady wave re-hits every bucket with DIFFERENT
+in-bucket prompt lengths — so under correct bucketing nothing recompiles
+(``steady_compiles == 0``, ``n_programs <= max_programs``), while the
+``force-recompile`` mutation (exact-length "buckets") compiles fresh
+prefill programs per novel steady-state length and the pass bites.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+# (prompt lengths, singleton) warmup/steady waves over the audit engine's
+# bucket policy below: pairs exercise batch bucket 2, singles bucket 1.
+_WARMUP_WAVES = ([3, 3], [7, 7], [2], [5])
+_STEADY_WAVES = ([4, 4], [8, 8], [1], [6])
+
+
+def _serve_config(mutate: Optional[Callable]):
+    from repro.serve.engine import ServeConfig
+    cfg = ServeConfig(n_slots=4, prompt_buckets=(4, 8), batch_buckets=(1, 2),
+                      max_new_tokens=4)
+    return mutate(cfg) if mutate is not None else cfg
+
+
+def attach_serve(ctx, mutate: Optional[Callable] = None) -> None:
+    """Build + exercise a serving engine for ``ctx``'s model config and
+    attach ``ctx.serve`` (registry counts) and the compiled decode
+    program as the ``serve_decode`` target. ``mutate`` is the
+    ``Mutation.serve_cfg`` seam (ServeConfig -> ServeConfig)."""
+    if ctx.acfg.model.family == "mlp":
+        # no autoregressive decode path to serve; the pass reports a note.
+        ctx.serve = {"skipped": f"family {ctx.acfg.model.family!r} has no "
+                                "serving path"}
+        return
+
+    import jax
+
+    from repro.models.transformer import LanguageModel
+    from repro.serve.engine import ServeEngine
+
+    cfg = _serve_config(mutate)
+    # The serving build of the SAME (possibly reduced) model the rest of
+    # the audit traced: scan_layers=False per launch/serve.py — a layer
+    # scan double-buffers the stacked caches and would trip the copy ban.
+    model = LanguageModel(ctx.acfg.model, head_tp=False,
+                          chunk_k=min(16, cfg.prompt_buckets[-1]),
+                          scan_layers=False)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, cfg)
+
+    for wave in _WARMUP_WAVES:
+        for n in wave:
+            engine.submit(list(range(1, n + 1)))
+        engine.run_until_drained()
+    engine.mark_steady()
+    for wave in _STEADY_WAVES:
+        for n in wave:
+            engine.submit(list(range(1, n + 1)))
+        engine.run_until_drained()
+
+    ctx.serve = engine.audit_info()
+    ctx.serve["dropped"] = engine.stats["dropped"]
+    ctx.targets.update(engine.audit_targets())

@@ -1,0 +1,534 @@
+"""Continuous-batching serving engine with live weight hot-swap.
+
+The engine (DESIGN.md §10) turns the seed-era one-shot serving scripts
+into a steady-state request loop built from a FIXED set of compiled
+programs:
+
+  * ``decode`` — ONE program over the whole slot table: the per-request
+    KV caches are stacked on a leading ``(n_slots,)`` axis and the model's
+    ``decode_step`` is vmapped over it (inner batch of 1, per-slot scalar
+    cache lengths — zero model changes). Sampling (greedy argmax or
+    top-k/categorical with a threaded PRNG key) and the per-slot
+    active-mask bookkeeping all run IN-JIT, so a decoded token costs
+    exactly one program dispatch and zero device->host syncs. The whole
+    decode state is donated; the params are NOT (see hot-swap below).
+  * ``prefill_b{B}_p{P}`` — one program per (batch-bucket, prompt-bucket)
+    pair: prompts are padded to the bucket shape, the program builds its
+    own zeroed caches in-trace and returns them filled.
+  * ``insert_b{B}`` — one program per batch bucket: scatters the
+    prefilled per-request cache rows into free slots (sentinel indices
+    are dropped), seeds the decode cursor, and resets the output row.
+    The decode state is donated (in-place scatter); the prefill caches
+    are not — their rows land transposed, so no aliasing is possible.
+
+Every program is compiled ahead-of-time (``jit.trace().lower().compile()``)
+and dispatched through the compiled executable, so a shape drift raises
+instead of silently recompiling; ``mark_steady()`` starts the
+steady-state compile counter the serve-compile audit pass pins at zero.
+
+Padded prompts stay BIT-EXACT: the insert program sets the slot's cache
+length to ``true_len - 1`` and the cursor to the prompt's last token, so
+the first decode step recomputes the final prompt position's KV and
+logits at the right offset, and the blockwise-attention chunk grid is
+absolute — padded key positions contribute exact no-ops to the online
+softmax and everything past the cache length is masked.
+
+Hot-swap: ``swap_weights`` lands new params in the double-buffered
+``ParamStore`` (device-to-device copy into fresh buffers, version
+bumped atomically on the host). The decode program never donates its
+params input, so the swap invalidates nothing in flight; host dispatch
+is synchronous, so the flip always lands BETWEEN decode steps. With
+``adopt="step"`` in-flight sequences pick the new version up at the
+next step; with ``adopt="drain"`` the staged version waits (admissions
+held) until every active slot finishes, then commits.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.store import ParamStore
+
+PyTree = Any
+
+# Segment kinds the slot-stacked cache layout supports: plain KVCache
+# leaves of shape (count, B, s_max, K, hd) with a (count,) length vector.
+SERVABLE_KINDS = ("dense", "moe", "moe_pair")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Engine shape policy + sampling + swap-adoption knobs.
+
+    ``force_recompile`` is the audit mutation seam (repro.audit.mutations
+    ``force-recompile``): prompt "buckets" degrade to exact lengths, so
+    every novel prompt length compiles a fresh prefill program and the
+    serve-compile pass's steady-state-compile pin trips.
+    """
+    n_slots: int = 8
+    prompt_buckets: Tuple[int, ...] = (16, 64)
+    batch_buckets: Tuple[int, ...] = (1, 4)
+    max_new_tokens: int = 32
+    s_max: int = 0                  # 0 -> max(prompt_buckets) + max_new
+    sampling: str = "greedy"        # "greedy" | "topk"
+    top_k: int = 8
+    temperature: float = 1.0
+    seed: int = 0
+    adopt: str = "step"             # "step" | "drain"
+    force_recompile: bool = False
+
+
+@dataclass
+class Request:
+    uid: int
+    tokens: List[int]
+    max_new_tokens: int
+
+
+@dataclass
+class Result:
+    uid: int
+    prompt_len: int
+    tokens: List[int]
+    last_logits: np.ndarray         # (padded_vocab,) fp32, final step
+    version_start: int              # weights version at insert
+    version_end: int                # weights version at completion
+
+
+@dataclass
+class _Slot:
+    uid: int
+    prompt_len: int
+    target: int
+    emitted: int
+    version_start: int
+
+
+@dataclass
+class _Program:
+    name: str
+    jaxpr: Any
+    hlo: str
+    compiled: Any
+
+
+class ServeEngine:
+    """Slot-based continuous batching over one model + one ParamStore."""
+
+    def __init__(self, model, params, cfg: Optional[ServeConfig] = None,
+                 *, shardings=None):
+        cfg = cfg if cfg is not None else ServeConfig()
+        kinds = {seg.kind for seg in model.plan}
+        bad = sorted(kinds - set(SERVABLE_KINDS))
+        if bad:
+            raise NotImplementedError(
+                f"serve engine supports KV-cache segment kinds "
+                f"{SERVABLE_KINDS}; config has {bad} (ring-cache, SSM and "
+                "enc-dec families need per-kind insert programs)")
+        if model.scan_layers:
+            raise ValueError(
+                "serve engine needs a scan_layers=False model: a layer "
+                "scan double-buffers the stacked caches by construction "
+                "(cache-shaped copy per token — launch/serve.py)")
+        if getattr(model.cfg, "mrope_sections", None):
+            raise NotImplementedError(
+                "mrope position batches are not wired into the slot table")
+        if tuple(cfg.prompt_buckets) != tuple(sorted(set(
+                cfg.prompt_buckets))) or not cfg.prompt_buckets:
+            raise ValueError("prompt_buckets must be ascending and unique")
+        if tuple(cfg.batch_buckets) != tuple(sorted(set(
+                cfg.batch_buckets))) or not cfg.batch_buckets:
+            raise ValueError("batch_buckets must be ascending and unique")
+        if cfg.batch_buckets[-1] > cfg.n_slots:
+            raise ValueError("largest batch bucket exceeds n_slots")
+        if cfg.sampling not in ("greedy", "topk"):
+            raise ValueError(f"unknown sampling {cfg.sampling!r}")
+        if cfg.adopt not in ("step", "drain"):
+            raise ValueError(f"unknown adopt policy {cfg.adopt!r}")
+        s_need = max(cfg.prompt_buckets) + cfg.max_new_tokens
+        if cfg.s_max and cfg.s_max < s_need:
+            raise ValueError(f"s_max={cfg.s_max} < longest prompt bucket + "
+                             f"max_new_tokens = {s_need}")
+
+        self.model = model
+        self.cfg = cfg
+        self._s_max = cfg.s_max or s_need
+        self._store = ParamStore(params, shardings=shardings)
+        self._programs: Dict[str, _Program] = {}
+        self._steady = False
+        self._queue: deque = deque()
+        self._slots: List[Optional[_Slot]] = [None] * cfg.n_slots
+        self._pending = False           # drain-adopt: staged, not committed
+        self._uid = 0
+        self.stats = {"submitted": 0, "completed": 0, "dropped": 0,
+                      "swaps": 0, "compiles": 0, "steady_compiles": 0,
+                      "decode_dispatches": 0, "prefill_dispatches": 0,
+                      "tokens_emitted": 0}
+        self._dstate = self._init_dstate()
+
+    # -- device state -------------------------------------------------------
+    def _init_dstate(self) -> Dict[str, Any]:
+        import jax
+        import jax.numpy as jnp
+        cfg = self.cfg
+        proto = self.model.init_cache(1, self._s_max, abstract=True)
+        caches = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((cfg.n_slots,) + tuple(l.shape), l.dtype),
+            proto)
+        V = self.model.cfg.padded_vocab
+        return {
+            "caches": caches,
+            "cur_tok": jnp.zeros((cfg.n_slots, 1, 1), jnp.int32),
+            "out_buf": jnp.zeros((cfg.n_slots, cfg.max_new_tokens),
+                                 jnp.int32),
+            "out_pos": jnp.zeros((cfg.n_slots,), jnp.int32),
+            "target": jnp.zeros((cfg.n_slots,), jnp.int32),
+            "last_logits": jnp.zeros((cfg.n_slots, V), jnp.float32),
+            "key": jax.random.PRNGKey(cfg.seed),
+        }
+
+    # -- AOT program registry -----------------------------------------------
+    def _program(self, name: str, build, args) -> _Program:
+        prog = self._programs.get(name)
+        if prog is None:
+            jitted = build()
+            traced = jitted.trace(*args)
+            compiled = traced.lower().compile()
+            prog = _Program(name, traced.jaxpr, compiled.as_text(), compiled)
+            self._programs[name] = prog
+            self.stats["compiles"] += 1
+            if self._steady:
+                self.stats["steady_compiles"] += 1
+        return prog
+
+    def mark_steady(self) -> None:
+        """Warmup is over: any compile after this is a steady-state
+        recompile — the defect the serve-compile audit pass pins at 0."""
+        self._steady = True
+
+    @property
+    def n_programs(self) -> int:
+        return len(self._programs) + self._store.n_programs
+
+    @property
+    def max_programs(self) -> int:
+        """Analytic program ceiling: 1 decode + one prefill per
+        (batch-bucket x prompt-bucket) + one insert per batch bucket +
+        the ParamStore's landing copy."""
+        npb = len(self.cfg.prompt_buckets)
+        nbb = len(self.cfg.batch_buckets)
+        return 1 + npb * nbb + nbb + self._store.n_programs
+
+    @property
+    def version(self) -> int:
+        return self._store.version
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active_slots(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    # -- program builders ---------------------------------------------------
+    def _build_decode(self):
+        import jax
+        import jax.numpy as jnp
+        model, cfg = self.model, self.cfg
+
+        def decode(params, dstate):
+            logits, caches = jax.vmap(
+                lambda tok, c: model.decode_step(params, {"tokens": tok}, c),
+                in_axes=(0, 0))(dstate["cur_tok"], dstate["caches"])
+            logits = logits[:, 0, 0, :]              # (n_slots, V) fp32
+            key = dstate["key"]
+            if cfg.sampling == "greedy":
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                vals, idx = jax.lax.top_k(
+                    logits / jnp.float32(cfg.temperature), cfg.top_k)
+                pick = jax.random.categorical(sub, vals, axis=-1)
+                tok = jnp.take_along_axis(
+                    idx, pick[:, None], axis=-1)[:, 0].astype(jnp.int32)
+            # Device-resident completion mask: no per-step host transfer.
+            active = dstate["out_pos"] < dstate["target"]
+            rows = jnp.arange(cfg.n_slots)
+            pos = jnp.clip(dstate["out_pos"], 0, cfg.max_new_tokens - 1)
+            out_buf = dstate["out_buf"].at[rows, pos].set(
+                jnp.where(active, tok, dstate["out_buf"][rows, pos]))
+            return {
+                # Inactive slots decode garbage harmlessly: their cache
+                # writes clamp at s_max and insert overwrites wholesale.
+                "caches": caches,
+                "cur_tok": jnp.where(active[:, None, None],
+                                     tok[:, None, None], dstate["cur_tok"]),
+                "out_buf": out_buf,
+                "out_pos": dstate["out_pos"] + active.astype(jnp.int32),
+                "target": dstate["target"],
+                "last_logits": jnp.where(active[:, None], logits,
+                                         dstate["last_logits"]),
+                "key": key,
+            }
+
+        # Decode state donated; params deliberately NOT — a hot-swap must
+        # never invalidate the buffers an in-flight dispatch reads.
+        return jax.jit(decode, donate_argnums=(1,))
+
+    def _build_prefill(self, Bb: int):
+        import jax
+        model, s_max = self.model, self._s_max
+
+        def prefill(params, toks):              # toks (Bb, Pb) i32
+            caches = model.init_cache(toks.shape[0], s_max)
+            _, filled = model.prefill(params, {"tokens": toks}, caches)
+            return filled
+
+        return jax.jit(prefill)
+
+    def _build_insert(self, Bb: int):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.attention import KVCache
+        cfg = self.cfg
+
+        def insert(dstate, pre_caches, slots, true_lens, first_toks,
+                   targets):
+            # slots (Bb,) i32; filler rows carry the out-of-range sentinel
+            # n_slots and are DROPPED by the scatters (mode="drop").
+            def upd(slot_kv, pre_kv):
+                k = jnp.moveaxis(pre_kv.k, 1, 0)[:, :, None]
+                v = jnp.moveaxis(pre_kv.v, 1, 0)[:, :, None]
+                # length = true_len - 1: the first decode step recomputes
+                # the last prompt token's KV/logits at the right position
+                # (padded-prompt bit-exactness, module docstring).
+                lens = jnp.broadcast_to(
+                    (true_lens - 1)[:, None],
+                    (Bb, slot_kv.length.shape[1])).astype(jnp.int32)
+                return KVCache(
+                    slot_kv.k.at[slots].set(k.astype(slot_kv.k.dtype),
+                                            mode="drop"),
+                    slot_kv.v.at[slots].set(v.astype(slot_kv.v.dtype),
+                                            mode="drop"),
+                    slot_kv.length.at[slots].set(lens, mode="drop"))
+
+            caches = jax.tree_util.tree_map(
+                upd, dstate["caches"], pre_caches,
+                is_leaf=lambda x: isinstance(x, KVCache))
+            return {
+                "caches": caches,
+                "cur_tok": dstate["cur_tok"].at[slots].set(
+                    first_toks[:, None, None].astype(jnp.int32),
+                    mode="drop"),
+                "out_buf": dstate["out_buf"].at[slots].set(
+                    jnp.zeros((Bb, cfg.max_new_tokens), jnp.int32),
+                    mode="drop"),
+                "out_pos": dstate["out_pos"].at[slots].set(
+                    jnp.zeros((Bb,), jnp.int32), mode="drop"),
+                "target": dstate["target"].at[slots].set(
+                    targets.astype(jnp.int32), mode="drop"),
+                "last_logits": dstate["last_logits"],
+                "key": dstate["key"],
+            }
+
+        return jax.jit(insert, donate_argnums=(0,))
+
+    # -- bucketing ----------------------------------------------------------
+    def _prompt_bucket(self, n: int) -> int:
+        if n > self.cfg.prompt_buckets[-1]:
+            raise ValueError(
+                f"prompt length {n} exceeds the largest prompt bucket "
+                f"{self.cfg.prompt_buckets[-1]}")
+        if self.cfg.force_recompile:
+            return n        # audit seam: exact lengths, fresh compiles
+        for b in self.cfg.prompt_buckets:
+            if n <= b:
+                return b
+        raise AssertionError
+
+    def _batch_bucket(self, n: int) -> int:
+        for b in self.cfg.batch_buckets:
+            if n <= b:
+                return b
+        raise AssertionError
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(self, tokens: Sequence[int],
+               max_new_tokens: Optional[int] = None) -> int:
+        toks = [int(t) for t in tokens]
+        if not toks:
+            raise ValueError("empty prompt")
+        self._prompt_bucket(len(toks))          # raises for oversize
+        mn = int(max_new_tokens if max_new_tokens is not None
+                 else self.cfg.max_new_tokens)
+        if not 1 <= mn <= self.cfg.max_new_tokens:
+            raise ValueError(
+                f"max_new_tokens={mn} outside [1, {self.cfg.max_new_tokens}]")
+        uid = self._uid
+        self._uid += 1
+        self._queue.append(Request(uid, toks, mn))
+        self.stats["submitted"] += 1
+        return uid
+
+    def _admit(self) -> None:
+        import jax.numpy as jnp
+        if self._pending:                       # drain-adopt holds admission
+            return
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        while free and self._queue:
+            pb = self._prompt_bucket(len(self._queue[0].tokens))
+            take = min(len(free), self.cfg.batch_buckets[-1])
+            reqs: List[Request] = []
+            while (self._queue and len(reqs) < take and self._prompt_bucket(
+                    len(self._queue[0].tokens)) == pb):
+                reqs.append(self._queue.popleft())
+            Bb = self._batch_bucket(len(reqs))
+
+            toks = np.zeros((Bb, pb), np.int32)
+            slots = np.full((Bb,), self.cfg.n_slots, np.int32)  # sentinel
+            true_lens = np.ones((Bb,), np.int32)
+            first_toks = np.zeros((Bb,), np.int32)
+            targets = np.ones((Bb,), np.int32)
+            for r, req in enumerate(reqs):
+                n = len(req.tokens)
+                toks[r, :n] = req.tokens
+                slots[r] = free.pop(0)
+                true_lens[r] = n
+                first_toks[r] = req.tokens[n - 1]
+                targets[r] = req.max_new_tokens
+            if len(reqs) < Bb:                  # filler rows: repeat row 0
+                toks[len(reqs):] = toks[0]
+                true_lens[len(reqs):] = true_lens[0]
+                first_toks[len(reqs):] = first_toks[0]
+
+            params = self._store.params
+            prefill = self._program(f"prefill_b{Bb}_p{pb}",
+                                    lambda: self._build_prefill(Bb),
+                                    (params, jnp.asarray(toks)))
+            pre_caches = prefill.compiled(params, jnp.asarray(toks))
+            self.stats["prefill_dispatches"] += 1
+            ins_args = (self._dstate, pre_caches, jnp.asarray(slots),
+                        jnp.asarray(true_lens), jnp.asarray(first_toks),
+                        jnp.asarray(targets))
+            insert = self._program(f"insert_b{Bb}",
+                                   lambda: self._build_insert(Bb), ins_args)
+            self._dstate = insert.compiled(*ins_args)
+            for r, req in enumerate(reqs):
+                self._slots[int(slots[r])] = _Slot(
+                    uid=req.uid, prompt_len=len(req.tokens),
+                    target=req.max_new_tokens, emitted=0,
+                    version_start=self.version)
+
+    def step(self) -> List[Result]:
+        """One engine tick: commit a pending drain-swap if the table is
+        empty, admit queued requests into free slots, dispatch ONE decode
+        step, and harvest completions. Returns finished Results."""
+        self._maybe_commit_pending()
+        self._admit()
+        if all(s is None for s in self._slots):
+            return []
+        n_active = self.active_slots
+        prog = self._program("decode", self._build_decode,
+                             (self._store.params, self._dstate))
+        self._dstate = prog.compiled(self._store.params, self._dstate)
+        self.stats["decode_dispatches"] += 1
+        self.stats["tokens_emitted"] += n_active
+        finished: List[Result] = []
+        for i, info in enumerate(self._slots):
+            if info is None:
+                continue
+            # Host mirror of the in-jit active mask: one emitted token per
+            # dispatch until the target — no device readback to find out.
+            info.emitted += 1
+            if info.emitted >= info.target:
+                finished.append(self._finish(i))
+        return finished
+
+    def _finish(self, slot: int) -> Result:
+        info = self._slots[slot]
+        toks = np.asarray(self._dstate["out_buf"][slot, :info.target])
+        logits = np.asarray(self._dstate["last_logits"][slot])
+        self._slots[slot] = None
+        self.stats["completed"] += 1
+        return Result(uid=info.uid, prompt_len=info.prompt_len,
+                      tokens=[int(t) for t in toks], last_logits=logits,
+                      version_start=info.version_start,
+                      version_end=self.version)
+
+    def run_until_drained(self, max_steps: int = 100_000) -> List[Result]:
+        out: List[Result] = []
+        steps = 0
+        while (self._queue or any(s is not None for s in self._slots)
+               or self._pending):
+            out.extend(self.step())
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"drain stalled after {max_steps} steps "
+                                   f"({self.queue_len} queued, "
+                                   f"{self.active_slots} active)")
+        return out
+
+    def sync(self) -> None:
+        """Block until the decode state is materialized (bench timing)."""
+        import jax
+        jax.block_until_ready(self._dstate)
+
+    # -- hot-swap -----------------------------------------------------------
+    def swap_weights(self, params, version: Optional[int] = None) -> int:
+        """Stage new weights (device-to-device copy into the standby
+        buffer) and adopt them per ``cfg.adopt``. Host dispatch is
+        synchronous, so the version flip always lands between decode
+        steps; the decode program's params are undonated, so nothing in
+        flight is invalidated either way. Returns the staged version."""
+        self._store.stage(params, version)
+        staged = self._store.staged_version
+        if self.cfg.adopt == "drain":
+            self._pending = True
+            self._maybe_commit_pending()
+        else:
+            self._store.commit()
+            self.stats["swaps"] += 1
+        return staged
+
+    def _maybe_commit_pending(self) -> None:
+        if self._pending and all(s is None for s in self._slots):
+            self._store.commit()
+            self._pending = False
+            self.stats["swaps"] += 1
+
+    # -- audit hooks --------------------------------------------------------
+    def audit_info(self) -> Dict[str, Any]:
+        return {"n_programs": self.n_programs,
+                "max_programs": self.max_programs,
+                "compiles": self.stats["compiles"],
+                "steady_compiles": self.stats["steady_compiles"],
+                "n_prompt_buckets": len(self.cfg.prompt_buckets),
+                "n_batch_buckets": len(self.cfg.batch_buckets),
+                "programs": sorted(self._programs)}
+
+    def audit_targets(self) -> Dict[str, Any]:
+        """The decode program as an AuditTarget (compiled HLO + jaxpr from
+        the AOT registry — no re-trace): the slot-stacked caches are the
+        donated hot state, same contract as serve_fns' donation audit."""
+        import jax
+        import jax.numpy as jnp
+        from repro.audit import hlo as hlo_mod
+        from repro.audit.targets import AuditTarget
+        out: Dict[str, Any] = {}
+        prog = self._programs.get("decode")
+        if prog is None:
+            return out
+        leaves = jax.tree_util.tree_leaves(self._dstate["caches"])
+        shapes = frozenset(hlo_mod.shape_str(l) for l in leaves
+                           if jnp.issubdtype(l.dtype, jnp.floating))
+        out["serve_decode"] = AuditTarget(
+            name="serve_decode", jaxpr=prog.jaxpr, hlo=prog.hlo,
+            donated=True,
+            n_state_leaves=len(jax.tree_util.tree_leaves(self._dstate)),
+            n_dmd_leaves=len(leaves), buffer_shapes=shapes,
+            gram_shapes=frozenset())
+        return out

@@ -1,0 +1,133 @@
+"""Version-stamped double-buffered parameter store + trainer->server bus.
+
+``ParamStore`` owns the serving weights. A publish is two host-cheap
+phases:
+
+  * ``stage(params, version)`` — land the incoming pytree in FRESH device
+    buffers (one jitted ``tree_map(jnp.copy)`` program; undonated, so XLA
+    must materialize new outputs — the trainer keeps mutating its own
+    donated buffers without aliasing the server's), then block until the
+    copy is done. The staged tree is the standby buffer.
+  * ``commit()`` — atomically flip active/standby on the host and bump
+    the version stamp. Nothing touches the old active buffers, so any
+    in-flight dispatch that read them completes untouched; the old tree
+    is simply dropped and freed by the runtime.
+
+Memory accounting: steady state holds exactly ONE param copy; between
+``stage`` and ``commit`` there are exactly TWO (active + standby). There
+is never a third, and never a torn half-version — readers only ever see
+``.params`` flip pointer-atomically.
+
+``WeightsChannel`` is the cross-process bus: the trainer publishes
+leaf-wise params through the checkpoint machinery (atomic tmp-dir +
+``os.rename``, so a SIGTERM mid-publish leaves the previous version
+intact) and a server polls ``latest_version()`` and swaps when it grows.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+PyTree = Any
+
+
+class ParamStore:
+    """Double-buffered, version-stamped device residence for weights."""
+
+    #: compiled-program budget this store contributes to the engine's
+    #: registry accounting: the single landing-copy program.
+    n_programs = 1
+
+    def __init__(self, params: PyTree, *, shardings: Optional[PyTree] = None):
+        import jax
+        import jax.numpy as jnp
+        self._shardings = shardings
+        self._copy = jax.jit(
+            lambda t: jax.tree_util.tree_map(jnp.copy, t))
+        self._version = 0
+        self._staged: Optional[PyTree] = None
+        self._staged_version: Optional[int] = None
+        self._active = self._land(params)
+
+    def _land(self, params: PyTree) -> PyTree:
+        import jax
+        if self._shardings is not None:
+            params = jax.device_put(params, self._shardings)
+        out = self._copy(params)
+        jax.block_until_ready(out)
+        return out
+
+    @property
+    def params(self) -> PyTree:
+        return self._active
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def staged_version(self) -> Optional[int]:
+        return self._staged_version
+
+    def stage(self, params: PyTree, version: Optional[int] = None) -> int:
+        """Land ``params`` in the standby buffer; does NOT serve them yet."""
+        v = self._version + 1 if version is None else int(version)
+        if v <= self._version:
+            raise ValueError(
+                f"stale publish: version {v} <= active {self._version}")
+        staged = self._land(params)     # blocks: standby fully materialized
+        self._staged = staged
+        self._staged_version = v
+        return v
+
+    def commit(self) -> int:
+        """Atomic flip: standby becomes active, version bumps."""
+        if self._staged is None:
+            raise RuntimeError("commit() with no staged weights")
+        self._active = self._staged
+        self._version = self._staged_version
+        self._staged = None
+        self._staged_version = None
+        return self._version
+
+    def publish(self, params: PyTree, version: Optional[int] = None) -> int:
+        """stage + commit in one call."""
+        self.stage(params, version)
+        return self.commit()
+
+
+class WeightsChannel:
+    """File-based trainer->server weights bus over the checkpoint layer.
+
+    Publishes are torn-write-safe for free: ``save_checkpoint`` writes to
+    a tmp dir and ``os.rename``s it into place, so a publisher killed
+    mid-write (SIGTERM fault-injection tests) never exposes a partial
+    version — ``latest_version()`` keeps returning the previous one.
+    """
+
+    def __init__(self, root):
+        self.root = str(root)
+
+    def publish(self, params: PyTree, version: int) -> str:
+        from repro.checkpoint import save_checkpoint
+        return save_checkpoint(self.root, {"params": params}, int(version),
+                               keep=2)
+
+    def latest_version(self) -> Optional[int]:
+        from repro.checkpoint import latest_step
+        return latest_step(self.root)
+
+    def load(self, template: PyTree,
+             version: Optional[int] = None) -> Optional[PyTree]:
+        from repro.checkpoint import restore_checkpoint
+        out = restore_checkpoint(self.root, {"params": template},
+                                 step=version)
+        return None if out is None else out["params"]
+
+    def poll(self, engine, template: PyTree) -> Optional[int]:
+        """Swap ``engine`` onto the newest published version, if newer."""
+        v = self.latest_version()
+        if v is None or v <= engine.version:
+            return None
+        params = self.load(template, v)
+        engine.swap_weights(params, version=v)
+        return v

@@ -41,10 +41,18 @@ class Trainer:
     def __init__(self, model, acfg, *, mesh=None, loss_fn=None,
                  checkpoint_dir: Optional[str] = None,
                  fail_at_step: Optional[int] = None,
-                 val_batch: Optional[PyTree] = None):
+                 val_batch: Optional[PyTree] = None,
+                 on_publish: Optional[Callable] = None):
         self.model = model
         self.acfg = acfg
         self.mesh = mesh
+        # Serving publish hook (DESIGN.md §10): called as
+        # ``on_publish(params_leafwise, version)`` after every jump the
+        # controller did NOT reject (every jump when the controller is
+        # off) — the trainer side of the live weight hot-swap. The params
+        # are exported leaf-wise (acc.params_leafwise), so the hook can
+        # feed a ParamStore / WeightsChannel directly.
+        self.on_publish = on_publish
         # One accelerator — hence ONE LeafPlan dispatch table — shared by the
         # schedule, the fused train step and the jump (DESIGN.md §3).
         self.acc = DMDAccelerator(
@@ -80,6 +88,19 @@ class Trainer:
         if self.controller_on:
             self.val_batch = (val_batch if val_batch is not None
                               else self._carve_val_batch())
+
+    def _publish(self, state, dmd_info, version: int) -> None:
+        """Fire the serving publish hook for a non-rejected jump. The
+        controller's REJECT branch restored the pre-jump state bit-exactly
+        (publishing it would be a no-op swap); ACCEPT and SCALED both
+        changed the weights being served, so both publish. With the
+        controller off every jump publishes."""
+        if self.controller_on:
+            from repro.core import controller as ctrl_mod
+            outcome = dmd_info.get("ctrl_outcome")
+            if outcome is not None and int(outcome) == ctrl_mod.REJECT:
+                return
+        self.on_publish(self.acc.params_leafwise(state.params), version)
 
     def _carve_val_batch(self) -> Optional[PyTree]:
         """Default validation split for vocab models (the synthetic LM
@@ -252,6 +273,8 @@ class Trainer:
                     state, dmd_info = self.dmd_step(state, relax,
                                                     groups=apply_groups)
                 metrics.update(dmd_info)
+                if self.on_publish is not None:
+                    self._publish(state, dmd_info, step + 1)
             if log_every and step % log_every == 0:
                 loss = float(metrics["loss"])
                 print(f"step {step}: loss={loss:.6f}")

@@ -27,7 +27,8 @@ def test_clean_reduced_mlp_audit_is_green():
     assert {r.name for r in report.results} == {
         "donation-alias", "collective-budget", "trace-budget",
         "solve-budget", "dtype-flow", "host-callback-in-hot-loop",
-        "arena-layout", "arena-residency", "schedule-conflict"}
+        "arena-layout", "arena-residency", "schedule-conflict",
+        "serve-compile"}
 
 
 def test_drop_donation_bites():
@@ -85,12 +86,14 @@ def test_force_leaf_solves_bites():
 def test_mutation_registry_is_complete():
     assert list_mutations() == ["drop-donation", "force-allgather",
                                 "force-leaf-solves", "force-pack",
-                                "misalign-arena", "overlap-groups"]
+                                "force-recompile", "misalign-arena",
+                                "overlap-groups"]
     for name in list_mutations():
         m = get_mutation(name)
         assert m.expect_fail in ("donation-alias", "collective-budget",
                                  "solve-budget", "arena-layout",
-                                 "arena-residency", "schedule-conflict")
+                                 "arena-residency", "schedule-conflict",
+                                 "serve-compile")
 
 
 @pytest.mark.slow

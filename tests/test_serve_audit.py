@@ -80,3 +80,57 @@ def test_undonated_serve_build_is_caught():
     violations, _ = donation_alias(ctx)
     errors = [v for v in violations if v.severity == "error"]
     assert errors, "donation pass failed to flag undonated serving jits"
+
+
+# ---------------------------------------------------------------------------
+# serve-compile (ISSUE 10): the engine's program registry stays within the
+# analytic bucket ceiling with zero steady-state recompiles, and its decode
+# keeps the slot-stacked caches donated copy-free.
+# ---------------------------------------------------------------------------
+
+def _engine_ctx(mutate=None):
+    import dataclasses
+
+    from repro.audit.passes import serve_compile
+    from repro.serve.audit import attach_serve
+
+    acfg = get_config("tinyllama-1.1b")
+    mc = reduced(acfg.model, n_layers=2, d_model=32, d_ff=64, vocab_size=128,
+                 n_heads=2, n_kv_heads=1, head_dim=16)
+    ctx = adhoc_context("tinyllama-1.1b-reduced",
+                        dataclasses.replace(acfg, model=mc), {})
+    attach_serve(ctx, mutate=mutate)
+    return serve_compile(ctx), ctx
+
+
+def test_serve_compile_pass_clean():
+    """Warmup covers every bucket; a steady wave with different in-bucket
+    lengths compiles NOTHING new, and the decode program keeps every
+    slot-stacked cache leaf aliased with zero cache-shaped copies."""
+    (violations, info), ctx = _engine_ctx()
+    errors = [v for v in violations if v.severity == "error"]
+    assert errors == [], errors
+    assert info["steady_compiles"] == 0
+    assert info["n_programs"] <= info["max_programs"]
+    assert info["decode_cache_copies"] == 0
+    assert info["dropped"] == 0
+    assert "serve_decode" in ctx.targets
+    # the engine decode honours the same donation contract serve_fns pins
+    violations, dinfo = donation_alias(ctx)
+    assert [v for v in violations if v.severity == "error"] == []
+    assert dinfo["serve_decode.dmd_copies"] == 0
+
+
+def test_force_recompile_mutation_bites():
+    """Exact-length prompt "buckets" (the force-recompile mutation seam)
+    must trip BOTH pins: compiles after warmup and a registry above the
+    analytic bucket ceiling."""
+    from repro.audit.mutations import get as get_mutation
+
+    m = get_mutation("force-recompile")
+    assert m.serve and m.expect_fail == "serve-compile"
+    (violations, info), _ = _engine_ctx(mutate=m.serve_cfg)
+    details = " ".join(v.detail for v in violations)
+    assert info["steady_compiles"] > 0
+    assert "AFTER warmup" in details
+    assert "bucket ceiling" in details
